@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: CSV output + claim assertions."""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+import time
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    path = out_path(name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def write_json(name: str, obj) -> str:
+    path = out_path(name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2)
+    return path
+
+
+class Bench:
+    """One paper-figure reproduction: runs, records, checks its claim."""
+
+    def __init__(self, name: str, paper_ref: str):
+        self.name = name
+        self.paper_ref = paper_ref
+        self.checks: list[tuple[str, bool]] = []
+        self._t0 = time.time()
+
+    def check(self, description: str, ok: bool) -> None:
+        self.checks.append((description, bool(ok)))
+
+    def finish(self) -> dict:
+        ok = all(c[1] for c in self.checks)
+        res = {
+            "bench": self.name,
+            "paper_ref": self.paper_ref,
+            "ok": ok,
+            "wall_s": round(time.time() - self._t0, 1),
+            "checks": [{"description": d, "ok": o} for d, o in self.checks],
+        }
+        status = "PASS" if ok else "FAIL"
+        print(f"[{status}] {self.name} ({self.paper_ref}) "
+              f"{res['wall_s']:.0f}s")
+        for d, o in self.checks:
+            print(f"    {'ok  ' if o else 'FAIL'} {d}")
+        return res

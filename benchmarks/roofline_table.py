@@ -1,0 +1,100 @@
+"""The roofline table (deliverable g): renders experiments/dryrun results
+into the EXPERIMENTS.md table and checks sweep completeness."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_NAMES, get_config, shapes_for
+from .common import Bench, out_path
+
+
+def _load_dir(d: str) -> dict:
+    """summary.json if present, else assemble from per-cell files."""
+    path = os.path.join(d, "summary.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    out = {}
+    if os.path.isdir(d):
+        for name in os.listdir(d):
+            if (name.endswith(".json") and ".real" not in name
+                    and ".stub" not in name):
+                with open(os.path.join(d, name)) as f:
+                    out[name[:-5]] = json.load(f)
+    return out
+
+
+def load_summary(dryrun_dir: str | None = None) -> dict:
+    """Optimized sweep overlaid on the baseline sweep, per cell."""
+    if dryrun_dir:
+        return _load_dir(dryrun_dir)
+    base = _load_dir("experiments/dryrun")
+    final = _load_dir("experiments/dryrun_final")
+    merged = dict(base)
+    for k, v in final.items():
+        if v.get("real", {}).get("status") == "ok":
+            merged[k] = v
+    return merged
+
+
+def render_table(summary: dict, mesh: str = "16x16",
+                 variant: str = "best") -> str:
+    """Markdown roofline table.  variant: real | flash | best."""
+    lines = [
+        "| arch | shape | c (ms) | m (ms) | coll (ms) | bound | "
+        "step (ms) | useful/bound | model/HLO flops |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for arch in ARCH_NAMES:
+        for shape in shapes_for(get_config(arch)):
+            cid = f"{arch}__{shape.name}__{mesh}"
+            entry = summary.get(cid)
+            if not entry:
+                continue
+            r = entry.get("flash") if variant in ("flash", "best") else None
+            r = r or entry.get("real", {})
+            if r.get("status") != "ok":
+                lines.append(f"| {arch} | {shape.name} | - | - | - | "
+                             f"ERROR | - | - | - |")
+                continue
+            lines.append(
+                f"| {arch} | {shape.name} "
+                f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+                f"| {r['collective_s']*1e3:.1f} | {r['bound']} "
+                f"| {r['step_s']*1e3:.1f} | {r['roofline_fraction']:.1%} "
+                f"| {r.get('flops_ratio', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def roofline() -> dict:
+    b = Bench("roofline_table", "deliverable (g)")
+    summary = load_summary()
+    expected = sum(len(shapes_for(get_config(a))) for a in ARCH_NAMES)
+    got_single = sum(1 for k in summary if k.endswith("__16x16"))
+    got_multi = sum(1 for k in summary if k.endswith("__2x16x16"))
+    ok_cells = sum(1 for v in summary.values()
+                   if v.get("real", {}).get("status") == "ok")
+
+    b.check(f"single-pod sweep complete ({got_single}/{expected})",
+            got_single == expected)
+    b.check(f"multi-pod sweep complete ({got_multi}/{expected})",
+            got_multi == expected)
+    b.check(f"all compiled cells ok ({ok_cells}/{len(summary)})",
+            ok_cells == len(summary) and len(summary) > 0)
+
+    if summary:
+        md = ["# Roofline table (single-pod 16x16, flash-adjusted)", "",
+              render_table(summary, "16x16", "best"), "",
+              "# Roofline table (single-pod 16x16, XLA-reference baseline)",
+              "", render_table(summary, "16x16", "real"), "",
+              "# Roofline table (multi-pod 2x16x16, flash-adjusted)", "",
+              render_table(summary, "2x16x16", "best")]
+        with open(out_path("roofline_tables.md"), "w") as f:
+            f.write("\n".join(md))
+    return b.finish()
+
+
+def run_all() -> list[dict]:
+    return [roofline()]

@@ -1,0 +1,55 @@
+"""Benchmark entry point: one reproduction per paper table/figure plus the
+roofline/kernel deliverables.
+
+  PYTHONPATH=src python -m benchmarks.run [--only paper_figures ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import blended_workloads, dnn_annealing, kernel_bench, \
+    paper_figures, roofline_table
+from .common import write_json
+
+SUITES = {
+    "paper_figures": paper_figures.run_all,
+    "blended_workloads": blended_workloads.run_all,
+    "dnn_annealing": dnn_annealing.run_all,
+    "roofline_table": roofline_table.run_all,
+    "kernel_bench": kernel_bench.run_all,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="suite names to run (default: all)")
+    args = ap.parse_args(argv)
+
+    results = []
+    for name, fn in SUITES.items():
+        if args.only and name not in args.only:
+            continue
+        print(f"=== {name} ===", flush=True)
+        try:
+            results.extend(fn())
+        except Exception as e:  # a crashed suite is a failed suite
+            import traceback
+            traceback.print_exc()
+            results.append({"bench": name, "ok": False,
+                            "error": repr(e), "checks": []})
+
+    write_json("results.json", results)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_checks = sum(len(r.get("checks", [])) for r in results)
+    n_checks_ok = sum(sum(1 for c in r.get("checks", []) if c["ok"])
+                      for r in results)
+    print(f"\n{n_ok}/{len(results)} benches passed "
+          f"({n_checks_ok}/{n_checks} claim checks)")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's method in 60 lines.
+
+Anneal an IaaS cluster configuration online over a stream of blended
+HiBench-like jobs (simulated execution-time models calibrated to the
+paper's Figs 6-11), then print the chosen configuration and the spend.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.costmodel import SimulatedEvaluator
+from repro.core.landscape import BLEND_BEFORE, blended_surface
+from repro.core.objective import Objective
+from repro.core.pricing import EC2_CATALOG_ADJUSTED
+from repro.core.procurement import ProcurementController, make_ec2_space
+
+
+def main() -> None:
+    cores = tuple(range(4, 132, 8))
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED, core_counts=cores)
+    print(f"configuration space: {space.size()} states "
+          f"({' x '.join(space.names)})")
+
+    controller = ProcurementController(
+        space=space,
+        catalog=EC2_CATALOG_ADJUSTED,
+        evaluator=SimulatedEvaluator(EC2_CATALOG_ADJUSTED, noise_std=0.02),
+        objective=Objective(lambda_cost=1.0),     # Y = t + 1.0 * c
+        blend=dict(BLEND_BEFORE),                 # wordcount/kmeans/pagerank
+        evaluate_blend=True,
+        schedule=1.0,                             # fixed tau (online mode)
+        seed=0,
+    )
+
+    for i in range(300):
+        d = controller.submit()
+        if i % 50 == 0:
+            print(f"job {d.n:4d}  Y={d.y:7.2f}  "
+                  f"config=({d.config.instance_type}, "
+                  f"{d.config.n_workers} cores)  "
+                  f"{'explored' if d.explored else ''}")
+
+    best_cfg, best_y = controller.best_config()
+    Y = blended_surface(EC2_CATALOG_ADJUSTED, BLEND_BEFORE, cores)
+    print(f"\nbest seen: ({best_cfg.instance_type}, "
+          f"{best_cfg.n_workers} cores) Y={best_y:.2f} "
+          f"(exhaustive optimum {Y.min():.2f})")
+    print(f"exploration rate: {controller.exploration_rate():.1%}")
+    print(f"total spend: ${controller.spend():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+# The paper's primary contribution: online cluster resource management by
+# simulated annealing.  See DESIGN.md sec. 1-2 for the mapping from the paper
+# to this package.
+from .annealing import (
+    Annealer,
+    Step,
+    acceptance_probability,
+    anneal_chain,
+    anneal_chain_dynamic,
+    first_hit_time,
+    jobs_to_min_vs_tau,
+)
+from .change_detect import PageHinkley, WindowedZScore
+from .costmodel import (
+    Evaluator,
+    MeasuredEvaluator,
+    RooflineEvaluator,
+    SimulatedEvaluator,
+    StepCosts,
+    objective_of,
+)
+from .landscape import (
+    BLEND_AFTER,
+    BLEND_BEFORE,
+    HIBENCH_JOBS,
+    JobModel,
+    bimodal_landscape,
+    blended_surface,
+    changed_landscape,
+    dnn_epoch_landscape,
+)
+from .neighborhood import (
+    BlockNeighborhood,
+    Neighborhood,
+    StepNeighborhood,
+    check_connected,
+)
+from .objective import BlendedObjective, Measurement, Objective, blend_from_weights
+from .pricing import (
+    EC2_CATALOG,
+    EC2_CATALOG_ADJUSTED,
+    TPU_CATALOG,
+    InstanceFamily,
+    ServiceCatalog,
+    interpolated_family,
+)
+from .procurement import (
+    Decision,
+    ProcurementController,
+    default_adaptive_schedule,
+    make_ec2_space,
+    make_tpu_space,
+)
+from .schedules import (
+    AdaptiveReheat,
+    FixedTemperature,
+    GeometricCooling,
+    LogCooling,
+    Schedule,
+)
+from .state import ClusterConfig, ConfigSpace, Dimension, cluster_config_from
+from .tabu import TabuMemory
+
+__all__ = [
+    "Annealer", "Step", "acceptance_probability", "anneal_chain",
+    "anneal_chain_dynamic", "first_hit_time", "jobs_to_min_vs_tau",
+    "PageHinkley", "WindowedZScore",
+    "Evaluator", "MeasuredEvaluator", "RooflineEvaluator",
+    "SimulatedEvaluator", "StepCosts", "objective_of",
+    "BLEND_AFTER", "BLEND_BEFORE", "HIBENCH_JOBS", "JobModel",
+    "bimodal_landscape", "blended_surface", "changed_landscape",
+    "dnn_epoch_landscape",
+    "BlockNeighborhood", "Neighborhood", "StepNeighborhood", "check_connected",
+    "BlendedObjective", "Measurement", "Objective", "blend_from_weights",
+    "EC2_CATALOG", "EC2_CATALOG_ADJUSTED", "TPU_CATALOG", "InstanceFamily",
+    "ServiceCatalog", "interpolated_family",
+    "Decision", "ProcurementController", "default_adaptive_schedule",
+    "make_ec2_space", "make_tpu_space",
+    "AdaptiveReheat", "FixedTemperature", "GeometricCooling", "LogCooling",
+    "Schedule",
+    "ClusterConfig", "ConfigSpace", "Dimension", "cluster_config_from",
+    "TabuMemory",
+]

@@ -1,0 +1,304 @@
+"""The annealing chain.
+
+Heat-bath acceptance (paper sec. 2.2/3):  a proposal ``z`` from ``nu(x)`` is
+accepted with probability
+
+    exp(-max{Y(z) - Y(x), 0} / tau)
+
+i.e. always accepted when the objective does not increase.  Two engines:
+
+* :class:`Annealer` — the *online* driver used by the procurement
+  controller: one proposal per arriving job, objective evaluated by running
+  (or simulating) the job under the proposed configuration.  This is the
+  paper's operating mode: evaluation *is* execution.
+
+* :func:`anneal_chain` — a pure-JAX (lax.scan / vmap-able) chain over a
+  precomputed objective table, used to reproduce the paper's illustrative
+  and temperature-sweep figures at scale (many seeds x temperatures in one
+  compiled call).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .neighborhood import Neighborhood
+from .schedules import FixedTemperature, Schedule
+from .state import ConfigSpace
+from .tabu import TabuMemory
+
+
+def acceptance_probability(dy: float, tau: float) -> float:
+    """Heat-bath rule: exp(-max(dy, 0)/tau)."""
+    if tau <= 0:
+        return 1.0 if dy <= 0 else 0.0
+    return math.exp(-max(dy, 0.0) / tau)
+
+
+@dataclasses.dataclass
+class Step:
+    """Record of one annealing transition (one job)."""
+
+    n: int
+    proposed: tuple[int, ...]
+    accepted: bool
+    explored: bool            # True if proposal increased Y but was accepted
+    y_proposed: float
+    y_current: float          # Y of the incumbent *after* the step
+    tau: float
+    state: tuple[int, ...]    # incumbent after the step
+
+
+class Annealer:
+    """Online simulated annealing over a ConfigSpace.
+
+    ``evaluate`` maps a *decoded* configuration (and the job index) to the
+    objective value Y_n — in production this runs the job.  Note the paper's
+    subtlety: Y_{n-1} was measured for the *previous* job; under workload
+    drift the incumbent's objective is stale, which is precisely what allows
+    the chain to adapt after a change (the next evaluation of the incumbent
+    refreshes it).  We follow the paper: compare Y_n(z_n) against the stored
+    Y of the incumbent, refreshing the incumbent's Y whenever the incumbent
+    is re-evaluated (rejected proposals do not refresh it).
+    """
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        neighborhood: Neighborhood,
+        evaluate: Callable[[dict[str, Any], int], float],
+        schedule: Schedule | float = 1.0,
+        seed: int | np.random.Generator = 0,
+        init: tuple[int, ...] | None = None,
+        tabu: TabuMemory | None = None,
+    ):
+        self.space = space
+        self.nbhd = neighborhood
+        self.evaluate = evaluate
+        self.schedule = (
+            FixedTemperature(schedule) if isinstance(schedule, (int, float))
+            else schedule
+        )
+        self.rng = (
+            seed if isinstance(seed, np.random.Generator)
+            else np.random.default_rng(seed)
+        )
+        self.tabu = tabu
+        if init is None:
+            init = self._random_valid_state()
+        if not space.contains(init):
+            raise ValueError(f"initial state {init} not in the valid region")
+        self.state: tuple[int, ...] = tuple(init)
+        self.y: float | None = None   # incumbent objective (lazily measured)
+        self.n = 0
+        self.history: list[Step] = []
+
+    # -- paper sec. 3: "Starting with a random configuration for x_0" --
+    def _random_valid_state(self, tries: int = 10_000) -> tuple[int, ...]:
+        for _ in range(tries):
+            idx = tuple(
+                int(self.rng.integers(n)) for n in self.space.shape
+            )
+            if self.space.contains(idx):
+                return idx
+        raise RuntimeError("could not sample a valid initial state")
+
+    def reheat(self) -> None:
+        """Signal a workload/offering change: raise the temperature AND
+        invalidate the incumbent's stored objective — it was measured on
+        the pre-change workload, and without a refresh a now-false low Y
+        can pin the chain to the stale optimum forever (the comparison
+        would reject every honestly-measured proposal)."""
+        self.schedule.reheat(self.n)
+        self.y = None
+
+    def step(self, job: int | None = None) -> Step:
+        """Process one arriving job: propose, evaluate, accept/reject."""
+        n = self.n if job is None else job
+        tau = self.schedule(n)
+
+        if self.y is None:  # first job, or incumbent invalidated (reheat):
+            # this job runs under the incumbent to refresh its objective
+            self.y = float(self.evaluate(self.space.decode(self.state), n))
+
+        proposal = self.nbhd.propose(self.state, self.rng)
+        if self.tabu is not None:
+            proposal = self.tabu.filter(
+                self.state, proposal,
+                lambda: self.nbhd.propose(self.state, self.rng),
+            )
+        y_new = float(self.evaluate(self.space.decode(proposal), n))
+
+        dy = y_new - self.y
+        p = acceptance_probability(dy, tau)
+        accepted = bool(self.rng.random() < p)
+        explored = accepted and dy > 0
+
+        if accepted:
+            self.state, self.y = proposal, y_new
+        if self.tabu is not None:
+            self.tabu.visit(proposal, y_new)
+
+        rec = Step(
+            n=n, proposed=proposal, accepted=accepted, explored=explored,
+            y_proposed=y_new, y_current=self.y, tau=tau, state=self.state,
+        )
+        self.history.append(rec)
+        self.n += 1
+        return rec
+
+    def run(self, n_jobs: int) -> list[Step]:
+        return [self.step() for _ in range(n_jobs)]
+
+    # -- diagnostics used by the paper's figures --
+    def best(self) -> tuple[tuple[int, ...], float]:
+        best = min(self.history, key=lambda s: s.y_proposed)
+        return best.proposed, best.y_proposed
+
+    def exploration_rate(self) -> float:
+        if not self.history:
+            return 0.0
+        return sum(s.explored for s in self.history) / len(self.history)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX chain over a tabulated objective (for the paper's figures).
+# ---------------------------------------------------------------------------
+
+
+def anneal_chain(
+    key: jax.Array,
+    y_table: jax.Array,       # (S,) objective per state (1-D landscape)
+    n_steps: int,
+    tau: jax.Array | float,   # scalar or (n_steps,) temperature(s)
+    init: jax.Array | int = 0,
+    noise_std: float = 0.0,   # measurement noise on Y (jobs are stochastic)
+):
+    """Run one annealing chain on a 1-D landscape with +-1 neighborhoods.
+
+    Returns (states, ys, accepts): arrays of shape (n_steps,).  jit- and
+    vmap-friendly: vmap over `key`/`tau`/`init` reproduces the paper's
+    multi-seed, multi-temperature experiments in a single compiled call.
+    Boundary states have a single neighbor; proposals out of range are
+    reflected, preserving connectivity.
+    """
+    S = y_table.shape[0]
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_steps,))
+
+    def measure(k, idx):
+        y = y_table[idx]
+        if noise_std > 0.0:
+            y = y + noise_std * jax.random.normal(k, ())
+        return y
+
+    def body(carry, inp):
+        key, x, y_x = carry
+        t, = inp
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        delta = jnp.where(jax.random.bernoulli(k1), 1, -1)
+        z = x + delta
+        z = jnp.clip(z, 0, S - 1)
+        z = jnp.where(z == x, x - delta, z)  # reflect at the boundary
+        y_z = measure(k2, z)
+        dy = y_z - y_x
+        p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
+        accept = jax.random.uniform(k3) < p
+        x_new = jnp.where(accept, z, x)
+        y_new = jnp.where(accept, y_z, y_x)
+        return (key, x_new, y_new), (x_new, y_z, accept)
+
+    init = jnp.asarray(init, jnp.int32)
+    key, k0 = jax.random.split(key)
+    y0 = measure(k0, init)
+    (_, _, _), (states, ys, accepts) = jax.lax.scan(
+        body, (key, init, y0), (taus,)
+    )
+    return states, ys, accepts
+
+
+def anneal_chain_dynamic(
+    key: jax.Array,
+    y_tables: jax.Array,      # (n_steps, S): landscape may change over time
+    n_steps: int,
+    tau: jax.Array | float,
+    init: jax.Array | int = 0,
+):
+    """Like anneal_chain but the landscape is time-indexed (paper Fig. 5).
+
+    The incumbent's stored objective goes stale after a change; it is only
+    refreshed when the incumbent is re-measured, exactly as in the online
+    algorithm (proposals are measured on the *current* landscape).
+    """
+    S = y_tables.shape[1]
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_steps,))
+
+    def body(carry, inp):
+        key, x, y_x = carry
+        t, y_now = inp
+        key, k1, k3 = jax.random.split(key, 3)
+        delta = jnp.where(jax.random.bernoulli(k1), 1, -1)
+        z = jnp.clip(x + delta, 0, S - 1)
+        z = jnp.where(z == x, x - delta, z)
+        y_z = y_now[z]
+        dy = y_z - y_x
+        p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
+        accept = jax.random.uniform(k3) < p
+        x_new = jnp.where(accept, z, x)
+        y_new = jnp.where(accept, y_z, y_x)
+        return (key, x_new, y_new), (x_new, y_z, accept)
+
+    init = jnp.asarray(init, jnp.int32)
+    (_, _, _), (states, ys, accepts) = jax.lax.scan(
+        body, (key, init, y_tables[0, init]), (taus, y_tables)
+    )
+    return states, ys, accepts
+
+
+def first_hit_time(states: jax.Array, target: jax.Array | int) -> jax.Array:
+    """Index of the first visit to `target` (n_steps if never reached)."""
+    hits = states == target
+    n = states.shape[0]
+    return jnp.where(hits.any(), jnp.argmax(hits), n)
+
+
+def jobs_to_min_vs_tau(
+    key: jax.Array,
+    y_table: np.ndarray | jax.Array,
+    taus: Sequence[float],
+    n_seeds: int = 64,
+    n_steps: int = 2000,
+    init: int | None = None,
+) -> dict[str, np.ndarray]:
+    """Paper Fig. 4 / Fig. 10: #jobs until the global minimum is selected,
+    vs temperature, with +-2 sample std bars over seeds."""
+    y_table = jnp.asarray(y_table, jnp.float32)
+    target = int(jnp.argmin(y_table))
+    if init is None:
+        init = 0
+
+    @jax.jit
+    def run(keys, tau):
+        def one(k):
+            states, _, _ = anneal_chain(k, y_table, n_steps, tau, init)
+            return first_hit_time(states, target)
+        return jax.vmap(one)(keys)
+
+    means, stds, raw = [], [], []
+    for i, tau in enumerate(taus):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_seeds)
+        hits = np.asarray(run(keys, float(tau)))
+        means.append(hits.mean())
+        stds.append(hits.std(ddof=1))
+        raw.append(hits)
+    return {
+        "taus": np.asarray(taus, np.float64),
+        "mean_jobs": np.asarray(means),
+        "std_jobs": np.asarray(stds),
+        "raw": np.stack(raw),
+    }

@@ -1,0 +1,91 @@
+"""Workload-change detection driving temperature re-heats.
+
+Paper sec. 1: "To respond to changes in availability of services and/or the
+existing workload, the temperature can be dynamically increased resulting in
+more exploration."  Sec. 4.3 demonstrates adaptation after an abrupt change
+in the blend.  The paper does not commit to a detector; we provide a
+*standardized* Page-Hinkley test (drift measured in running standard
+deviations, so thresholds are scale-free — objective values span orders of
+magnitude across configurations) plus a windowed z-score detector.  Either
+drives :class:`repro.core.schedules.AdaptiveReheat`; the controller also
+invalidates the annealer's stale incumbent objective on re-heat (see
+Annealer.reheat), which is what lets the chain move off an optimum whose
+measured value predates the change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class PageHinkley:
+    """Two-sided standardized Page-Hinkley drift test.
+
+    Tracks the stream's running mean/variance (Welford); accumulates the
+    standardized deviation minus a ``delta`` margin, separately for upward
+    and downward drifts; signals when either cumulative sum exceeds
+    ``threshold`` (in sigma units), then resets.
+    """
+
+    delta: float = 0.2          # insensitivity margin, in sigmas
+    threshold: float = 6.0      # cumulative sigma units to signal
+    min_obs: int = 25           # observations before testing (stable std)
+    z_clip: float = 6.0         # robustness: cap one observation's pull
+
+    def __post_init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self._n = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+        self._up = 0.0
+        self._down = 0.0
+
+    def update(self, y: float) -> bool:
+        """Feed one observation; True iff drift is signalled (then resets)."""
+        self._n += 1
+        d = y - self._mean
+        self._mean += d / self._n
+        self._m2 += d * (y - self._mean)
+        if self._n < self.min_obs:
+            return False
+        std = math.sqrt(self._m2 / (self._n - 1)) + 1e-12
+        z = max(-self.z_clip, min(self.z_clip, (y - self._mean) / std))
+        self._up = max(0.0, self._up + z - self.delta)
+        self._down = max(0.0, self._down - z - self.delta)
+        if self._up > self.threshold or self._down > self.threshold:
+            self.reset()
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class WindowedZScore:
+    """Signals when the recent-window mean departs from the long-run mean by
+    more than ``z`` long-run standard deviations."""
+
+    window: int = 16
+    z: float = 4.0
+    min_history: int = 32
+
+    def __post_init__(self) -> None:
+        self._values: list[float] = []
+
+    def update(self, y: float) -> bool:
+        self._values.append(float(y))
+        v = self._values
+        if len(v) < max(self.min_history, 2 * self.window):
+            return False
+        hist = v[: -self.window]
+        recent = v[-self.window :]
+        mu = sum(hist) / len(hist)
+        var = sum((x - mu) ** 2 for x in hist) / max(len(hist) - 1, 1)
+        sd = math.sqrt(var) + 1e-12
+        zscore = abs(sum(recent) / len(recent) - mu) / (sd / math.sqrt(self.window))
+        if zscore > self.z:
+            self._values = v[-self.window :]
+            return True
+        return False

@@ -1,0 +1,182 @@
+"""Synthetic workload characterizations (paper Figs. 2-11).
+
+The paper's illustrative example (Fig. 2) is a one-dimensional landscape:
+execution time versus the total number of cores, deliberately *bimodal* —
+a suboptimal local minimum at a small core count and a deeper global
+minimum at a larger one — to show annealing escaping the local minimum.
+Fig. 5 changes the landscape mid-stream.  Figs. 7-8 evaluate a *blended*
+HiBench workload (Wordcount, K-means, PageRank) across four EC2 instance
+families, where the storage-optimized family's pricing produces objective
+peaks.
+
+We reproduce these shapes with explicit parametric families so tests and
+benchmarks can assert the qualitative claims (bimodality, minima locations,
+post-change optimum shift).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from .pricing import ServiceCatalog
+
+
+def bimodal_landscape(
+    n_states: int = 48,
+    local_min: int = 10,
+    global_min: int = 34,
+    local_depth: float = 6.0,
+    global_depth: float = 8.0,
+    base: float = 20.0,
+    width: float = 6.0,
+) -> np.ndarray:
+    """Execution time vs total cores, bimodal (paper Fig. 2).
+
+    Returns t[x] for x = 0..n_states-1 ("total number of cores" minus one).
+    Constructed as a flat base minus two Gaussian wells; the deeper well is
+    the global minimum.
+    """
+    x = np.arange(n_states, dtype=np.float64)
+    t = (
+        base
+        - local_depth * np.exp(-0.5 * ((x - local_min) / width) ** 2)
+        - global_depth * np.exp(-0.5 * ((x - global_min) / width) ** 2)
+    )
+    assert int(np.argmin(t)) == global_min
+    return t
+
+
+def changed_landscape(n_states: int = 48) -> np.ndarray:
+    """Post-change workload of Fig. 5: the basins swap roles, so the global
+    minimum moves (annealing must re-find it through exploration)."""
+    return bimodal_landscape(
+        n_states=n_states, local_min=34, global_min=12,
+        local_depth=5.5, global_depth=8.5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# HiBench-like job execution-time models over (instance family, #cores).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JobModel:
+    """Amdahl-style execution time with family-dependent core speed and a
+    memory-pressure penalty.
+
+        t(family, cores) = serial
+                         + work / (cores * speed(family))
+                         + coord * cores^0.8            (coordination)
+                         + mem_penalty                  (if starved)
+
+    The coordination term creates an interior optimum in cores; the memory
+    term differentiates families (e.g. K-means/PageRank want memory).
+    """
+
+    name: str
+    serial_s: float            # non-parallelizable seconds
+    work: float                # parallelizable core-seconds (on 'general')
+    coord: float               # per-core coordination overhead seconds
+    mem_gb_per_core: float     # working set per core
+    io_bound: float = 0.0      # extra seconds removed by storage family
+
+    def exec_time(
+        self, family_name: str, cores: int, catalog: ServiceCatalog
+    ) -> float:
+        fam = catalog[family_name]
+        speed = {"general": 1.0, "compute": 1.35, "memory": 1.05,
+                 "storage": 0.95}.get(family_name, 1.0)
+        t = self.serial_s + self.work / (cores * speed) + self.coord * cores ** 0.8
+        # memory starvation: slowdown proportional to deficit (spill to disk)
+        deficit = max(0.0, self.mem_gb_per_core - fam.mem_per_core_gb)
+        t *= 1.0 + 0.35 * deficit
+        # storage-optimized instances absorb the I/O-bound component
+        if family_name == "storage":
+            t -= self.io_bound
+        return max(t, 1e-3)
+
+
+# Calibrated to give distinct per-family optima, mirroring HiBench behavior:
+# Wordcount ~ CPU bound, K-means ~ compute+memory, PageRank ~ memory bound.
+# io_bound = 0 everywhere: the paper notes (fn. 3) that local-storage
+# latency was NOT a significant performance factor in its experiments —
+# the Fig. 7 "peaks" of the storage family are purely its pricing.
+# Coordination constants calibrated for interior core-count optima in
+# the paper's 4..128-core range (benchmarks/blended_workloads.py).
+HIBENCH_JOBS: Mapping[str, JobModel] = {
+    "wordcount": JobModel("wordcount", serial_s=18.0, work=2400.0,
+                          coord=1.65, mem_gb_per_core=1.5, io_bound=0.0),
+    "kmeans": JobModel("kmeans", serial_s=30.0, work=4200.0, coord=2.4,
+                       mem_gb_per_core=4.5, io_bound=0.0),
+    "pagerank": JobModel("pagerank", serial_s=45.0, work=3600.0, coord=3.0,
+                         mem_gb_per_core=7.5, io_bound=0.0),
+}
+
+@dataclasses.dataclass(frozen=True)
+class UniformJobModel(JobModel):
+    """Family-agnostic execution time (paper sec. 4.1: every family is
+    emulated on the SAME CloudLab nodes — only the *billing* differs).
+    Under this model the objective differences across families are purely
+    price x time, so the priciest family is a pure ridge (Fig. 7 peaks)."""
+
+    def exec_time(self, family_name, cores, catalog):
+        t = (self.serial_s + self.work / cores
+             + self.coord * cores ** 0.8)
+        return max(t, 1e-3)
+
+
+def uniform_hw_jobs(jobs: Mapping[str, JobModel]) -> dict[str, JobModel]:
+    return {name: UniformJobModel(m.name, m.serial_s, m.work, m.coord,
+                                  m.mem_gb_per_core, m.io_bound)
+            for name, m in jobs.items()}
+
+
+# The post-change blend of sec. 4.3 (Fig. 11): the workload distribution
+# shifts from wordcount-heavy to pagerank-heavy.
+BLEND_BEFORE: Mapping[str, float] = {"wordcount": 0.6, "kmeans": 0.25, "pagerank": 0.15}
+BLEND_AFTER: Mapping[str, float] = {"wordcount": 0.15, "kmeans": 0.25, "pagerank": 0.6}
+
+
+def blended_surface(
+    catalog: ServiceCatalog,
+    blend: Mapping[str, float],
+    core_counts: tuple[int, ...],
+    lambda_cost: float = 1.0,
+    jobs: Mapping[str, JobModel] = HIBENCH_JOBS,
+) -> np.ndarray:
+    """Objective surface Y[family, cores] for a blended workload (Fig. 7/8).
+
+    Y = sum_i alpha_i (t_i + lambda * c_i) with c_i the dollar cost of
+    running job i on the configuration.
+    """
+    fams = catalog.ordered_by_price()
+    total = sum(blend.values())
+    Y = np.zeros((len(fams), len(core_counts)))
+    for fi, fam in enumerate(fams):
+        for ci, cores in enumerate(core_counts):
+            y = 0.0
+            for name, alpha in blend.items():
+                t = jobs[name].exec_time(fam, cores, catalog)
+                c = catalog.cost(fam, cores, t)
+                y += (alpha / total) * (t + lambda_cost * c)
+            Y[fi, ci] = y
+    return Y
+
+
+# ---------------------------------------------------------------------------
+# DNN-training landscape (paper sec. 4.4, Figs. 12-14): epoch time vs cores.
+# ---------------------------------------------------------------------------
+
+
+def dnn_epoch_landscape(
+    n_states: int = 40, work: float = 900.0, serial_s: float = 12.0,
+    comm: float = 0.9,
+) -> np.ndarray:
+    """Per-epoch training time vs #cores: near-linear scaling with a growing
+    synchronization (all-reduce) term -> interior minimum, as in Fig. 12."""
+    cores = np.arange(1, n_states + 1, dtype=np.float64)
+    return serial_s + work / cores + comm * np.log2(cores + 1) * np.sqrt(cores)

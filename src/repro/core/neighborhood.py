@@ -1,0 +1,141 @@
+"""Neighborhood functions for the annealing chain.
+
+Paper sec. 2.2: a local neighborhood function ``nu(x)`` with ``x not in
+nu(x)`` whose induced transition graph must be *connected* (the base chain
+irreducible) and, for the Gibbs stationary-distribution property at fixed
+temperature, the base chain should be time-reversible — satisfied by the
+symmetric +-1 coordinate moves used here (|nu(x)| varies at the boundary;
+the Metropolis correction for unequal neighborhood sizes is handled in
+:mod:`repro.core.annealing`).
+
+Moves are incremental: ``z = x +- e_v`` on a single dimension v (paper
+sec. 3), which keeps reconfiguration cheap — important when each transition
+re-provisions a live cluster.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Protocol, Sequence
+
+import numpy as np
+
+from .state import ConfigSpace
+
+
+class Neighborhood(Protocol):
+    def neighbors(self, idx: tuple[int, ...]) -> list[tuple[int, ...]]:
+        """All valid neighbors of idx (excluding idx)."""
+        ...
+
+    def propose(
+        self, idx: tuple[int, ...], rng: np.random.Generator
+    ) -> tuple[int, ...]:
+        """Sample one neighbor uniformly."""
+        ...
+
+
+class StepNeighborhood:
+    """+-1 moves on a single dimension, restricted to the valid region.
+
+    ``wrap_dims`` lists dimensions treated as cyclic (useful for categorical
+    axes where wrapping removes the boundary — at the cost of adjacency
+    between the extreme values, cf. the paper's ordering remark).
+    """
+
+    def __init__(self, space: ConfigSpace, wrap_dims: Sequence[str] = ()):
+        self.space = space
+        self._wrap = {space.names.index(n) for n in wrap_dims}
+
+    def _moves(self, idx: tuple[int, ...]) -> list[tuple[int, ...]]:
+        out = []
+        for d in range(len(idx)):
+            n = self.space.shape[d]
+            for delta in (-1, +1):
+                j = idx[d] + delta
+                if d in self._wrap:
+                    j %= n
+                if 0 <= j < n and j != idx[d]:
+                    cand = idx[:d] + (j,) + idx[d + 1 :]
+                    out.append(cand)
+        return out
+
+    def neighbors(self, idx: tuple[int, ...]) -> list[tuple[int, ...]]:
+        return [c for c in self._moves(idx) if self.space.contains(c)]
+
+    def propose(
+        self, idx: tuple[int, ...], rng: np.random.Generator
+    ) -> tuple[int, ...]:
+        nbrs = self.neighbors(idx)
+        if not nbrs:
+            raise RuntimeError(f"state {idx} has no valid neighbors")
+        return nbrs[rng.integers(len(nbrs))]
+
+
+class BlockNeighborhood(StepNeighborhood):
+    """Step moves plus occasional larger jumps on one dimension.
+
+    The paper notes incremental one-step changes are "typical but not a
+    requirement".  With probability ``p_jump`` the proposal moves up to
+    ``max_step`` on the chosen dimension — useful for very wide dimensions
+    (e.g. chip counts) while remaining symmetric (reversible).
+    """
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        p_jump: float = 0.1,
+        max_step: int = 4,
+        wrap_dims: Sequence[str] = (),
+    ):
+        super().__init__(space, wrap_dims)
+        self.p_jump = float(p_jump)
+        self.max_step = int(max_step)
+
+    def neighbors(self, idx: tuple[int, ...]) -> list[tuple[int, ...]]:
+        out = []
+        seen = set()
+        for d in range(len(idx)):
+            n = self.space.shape[d]
+            for step in range(1, self.max_step + 1):
+                for delta in (-step, +step):
+                    j = idx[d] + delta
+                    if d in self._wrap:
+                        j %= n
+                    if 0 <= j < n and j != idx[d]:
+                        cand = idx[:d] + (j,) + idx[d + 1 :]
+                        if cand not in seen and self.space.contains(cand):
+                            seen.add(cand)
+                            out.append(cand)
+        return out
+
+    def propose(
+        self, idx: tuple[int, ...], rng: np.random.Generator
+    ) -> tuple[int, ...]:
+        if rng.random() >= self.p_jump:
+            return StepNeighborhood.propose(self, idx, rng)
+        nbrs = self.neighbors(idx)
+        if not nbrs:
+            raise RuntimeError(f"state {idx} has no valid neighbors")
+        return nbrs[rng.integers(len(nbrs))]
+
+
+def check_connected(space: ConfigSpace, nbhd: Neighborhood) -> bool:
+    """BFS over the valid region; True iff the move graph is connected.
+
+    The paper calls this a *key requirement* of nu.  Intended for the small
+    spaces used in tests and the paper-reproduction benchmarks.
+    """
+    states = space.valid_states()
+    if not states:
+        return False
+    index = {s: i for i, s in enumerate(states)}
+    seen = {states[0]}
+    q = deque([states[0]])
+    while q:
+        s = q.popleft()
+        for t in nbhd.neighbors(s):
+            if t in index and t not in seen:
+                seen.add(t)
+                q.append(t)
+    return len(seen) == len(states)

@@ -1,0 +1,156 @@
+"""Service catalogs and pricing models.
+
+The paper (sec. 4.2) references AWS EC2 per-core on-demand pricing for four
+instance families (general purpose, compute optimized, storage optimized,
+memory optimized), each with a fixed memory-per-core ratio, and additionally
+considers *hypothetical instances "between" those offered by AWS with
+corresponding price adjustments* (sec. 4.2.1).  It also replaces the
+storage-optimized family's pricing with a hypothetical family for better
+comparison (Fig. 8).
+
+We reproduce that catalog, and add a TPU-slice catalog for the
+hardware-adapted procurement problem (v5e slices, on-demand and spot, with
+spin-up latency used by the migration-cost term of the objective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceFamily:
+    """A family of service offerings priced per core (or per chip)."""
+
+    name: str
+    price_per_core_hr: float     # $ / core-hour (or $ / chip-hour)
+    mem_per_core_gb: float       # GB per core (HBM per chip for TPU)
+    spin_up_s: float             # provisioning latency, seconds
+    revocable: bool = False      # spot-style: cheaper but can be revoked
+    revocation_rate_hr: float = 0.0   # expected revocations per hour
+    description: str = ""
+
+    def price_for(self, n_cores: int, seconds: float) -> float:
+        return self.price_per_core_hr * n_cores * (seconds / 3600.0)
+
+
+class ServiceCatalog:
+    """An ordered set of instance families.
+
+    Ordering matters: the paper observes (sec. 4.2.1) that a poor ordering of
+    the categorical instance-type axis can introduce artificial local minima.
+    The default ordering below sorts families by price per core, which makes
+    the price monotone along the categorical axis.
+    """
+
+    def __init__(self, families: Mapping[str, InstanceFamily]):
+        self._families = dict(families)
+
+    def __getitem__(self, name: str) -> InstanceFamily:
+        return self._families[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._families
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._families)
+
+    def ordered_by_price(self) -> tuple[str, ...]:
+        return tuple(
+            sorted(self._families, key=lambda n: self._families[n].price_per_core_hr)
+        )
+
+    def cost(self, instance_type: str, n_cores: int, seconds: float) -> float:
+        return self[instance_type].price_for(n_cores, seconds)
+
+    def with_family(self, fam: InstanceFamily) -> "ServiceCatalog":
+        out = dict(self._families)
+        out[fam.name] = fam
+        return ServiceCatalog(out)
+
+
+# ---------------------------------------------------------------------------
+# EC2-like catalog (paper sec. 4.2) — approximate 2022 us-east-1 on-demand.
+# ---------------------------------------------------------------------------
+
+EC2_CATALOG = ServiceCatalog(
+    {
+        # general purpose, ~4 GB/core (paper's example: m6g.medium, 4 GB/core)
+        "general": InstanceFamily(
+            "general", price_per_core_hr=0.048, mem_per_core_gb=4.0,
+            spin_up_s=90.0, description="m6-like general purpose"),
+        # compute optimized, ~2 GB/core
+        "compute": InstanceFamily(
+            "compute", price_per_core_hr=0.0425, mem_per_core_gb=2.0,
+            spin_up_s=90.0, description="c6-like compute optimized"),
+        # memory optimized, ~8 GB/core
+        "memory": InstanceFamily(
+            "memory", price_per_core_hr=0.063, mem_per_core_gb=8.0,
+            spin_up_s=90.0, description="r6-like memory optimized"),
+        # storage optimized, ~7.6 GB/core, NVMe — the paper notes its pricing
+        # produces objective "peaks" (Fig. 7) and substitutes a hypothetical
+        # family (Fig. 8); both variants are provided.
+        "storage": InstanceFamily(
+            "storage", price_per_core_hr=0.078, mem_per_core_gb=7.6,
+            spin_up_s=90.0, description="i3-like storage optimized"),
+    }
+)
+
+# The Fig. 8 adjustment: storage-optimized re-priced to a hypothetical family
+# comparable with the others (similar local-storage performance assumed).
+EC2_CATALOG_ADJUSTED = EC2_CATALOG.with_family(
+    InstanceFamily(
+        "storage", price_per_core_hr=0.055, mem_per_core_gb=7.6,
+        spin_up_s=90.0,
+        description="hypothetical storage family (paper Fig. 8 adjustment)")
+)
+
+
+def interpolated_family(
+    catalog: ServiceCatalog, a: str, b: str, t: float, name: str | None = None
+) -> InstanceFamily:
+    """A hypothetical instance family "between" two offered ones.
+
+    Paper sec. 4.2: "We also consider hypothetical instances 'between' those
+    offered by AWS with corresponding price adjustments."  Linear
+    interpolation of price and memory ratio.
+    """
+    if not 0.0 <= t <= 1.0:
+        raise ValueError(f"t must be in [0,1], got {t}")
+    fa, fb = catalog[a], catalog[b]
+    return InstanceFamily(
+        name=name or f"{a}-{b}-{t:.2f}",
+        price_per_core_hr=(1 - t) * fa.price_per_core_hr + t * fb.price_per_core_hr,
+        mem_per_core_gb=(1 - t) * fa.mem_per_core_gb + t * fb.mem_per_core_gb,
+        spin_up_s=max(fa.spin_up_s, fb.spin_up_s),
+        description=f"hypothetical interpolation {a}<->{b} at t={t:.2f}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU slice catalog (hardware adaptation).  v5e on-demand ~$1.20/chip-hr;
+# spot ~55% off with a revocation hazard.  Spin-up covers slice scheduling +
+# runtime restart + checkpoint restore overhead baseline.
+# ---------------------------------------------------------------------------
+
+TPU_CATALOG = ServiceCatalog(
+    {
+        "v5e": InstanceFamily(
+            "v5e", price_per_core_hr=1.20, mem_per_core_gb=16.0,
+            spin_up_s=300.0, description="TPU v5e on-demand, per chip"),
+        "v5e-spot": InstanceFamily(
+            "v5e-spot", price_per_core_hr=0.54, mem_per_core_gb=16.0,
+            spin_up_s=300.0, revocable=True, revocation_rate_hr=0.05,
+            description="TPU v5e spot, per chip"),
+        "v5p": InstanceFamily(
+            "v5p", price_per_core_hr=4.20, mem_per_core_gb=95.0,
+            spin_up_s=420.0, description="TPU v5p on-demand, per chip"),
+    }
+)
+
+# Hardware constants used by the roofline evaluator (TPU v5e).
+V5E_PEAK_FLOPS_BF16 = 197e12       # per chip
+V5E_HBM_BW = 819e9                 # bytes/s per chip
+V5E_ICI_BW = 50e9                  # bytes/s per link
+V5E_HBM_GB = 16.0

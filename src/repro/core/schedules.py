@@ -1,0 +1,92 @@
+"""Temperature schedules.
+
+The paper emphasizes (sec. 2.2, citing Hajek & Sasaki) that for finite
+horizons and time-varying workloads it is often better *not* to cool: run at
+a fixed positive temperature (Gibbs stationary distribution prop. to
+exp(-Y/tau)), and *raise* the temperature when the workload or the service
+offerings change (sec. 1, sec. 4.3).  All schedules expose
+
+    tau = schedule(n)          # temperature for job n
+    schedule.reheat(n)         # notify: change detected at job n
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+class Schedule:
+    def __call__(self, n: int) -> float:
+        raise NotImplementedError
+
+    def reheat(self, n: int) -> None:  # default: no-op
+        return None
+
+
+@dataclasses.dataclass
+class FixedTemperature(Schedule):
+    """The paper's primary online mode: constant tau > 0."""
+
+    tau: float
+
+    def __post_init__(self) -> None:
+        if self.tau <= 0:
+            raise ValueError("tau must be > 0")
+
+    def __call__(self, n: int) -> float:
+        return self.tau
+
+
+@dataclasses.dataclass
+class LogCooling(Schedule):
+    """Classical tau_n = c / log(n + n0): converges in probability to the
+    global minimum (Aarts & Korst), cited by the paper as 'not very useful
+    in practice' — provided for the offline mode and for comparison runs."""
+
+    c: float
+    n0: int = 2
+
+    def __call__(self, n: int) -> float:
+        return self.c / math.log(n + self.n0)
+
+
+@dataclasses.dataclass
+class GeometricCooling(Schedule):
+    """tau_n = tau0 * gamma^n, floored at tau_min."""
+
+    tau0: float
+    gamma: float = 0.995
+    tau_min: float = 1e-6
+
+    def __call__(self, n: int) -> float:
+        return max(self.tau0 * (self.gamma ** n), self.tau_min)
+
+
+@dataclasses.dataclass
+class AdaptiveReheat(Schedule):
+    """Fixed base temperature with exponentially-decaying reheats.
+
+    On a detected workload/offering change at job n0, temperature jumps to
+    ``tau_hot`` and relaxes geometrically back to ``tau_base`` — the paper's
+    'temperature can be dynamically increased resulting in more exploration'
+    made concrete.
+    """
+
+    tau_base: float
+    tau_hot: float
+    relax: float = 0.9      # per-job decay factor of the excess temperature
+
+    def __post_init__(self) -> None:
+        if self.tau_hot < self.tau_base:
+            raise ValueError("tau_hot must be >= tau_base")
+        self._reheat_at: int | None = None
+
+    def __call__(self, n: int) -> float:
+        if self._reheat_at is None or n < self._reheat_at:
+            return self.tau_base
+        k = n - self._reheat_at
+        return self.tau_base + (self.tau_hot - self.tau_base) * (self.relax ** k)
+
+    def reheat(self, n: int) -> None:
+        self._reheat_at = n

@@ -1,0 +1,99 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Grid (B, K, n_s): for each (batch, kv-head) the kernel streams the cache
+in (block_s, hd) tiles, holding the running max / normalizer / accumulator
+for the G grouped query heads in VMEM scratch.  This is the single-chip
+part of the distributed flash-decode: with the cache sequence dim sharded
+over "data" (long_500k), XLA combines the per-shard partial softmax stats
+the same way this kernel combines per-tile stats.
+
+The mask is a (B, S) bool tensor (ring-buffer validity from
+repro.models.decode) streamed in (1, block_s) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, n_s: int, scale: float,
+                   softcap: float):
+    isb = pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bs, hd)
+    valid = mask_ref[0]                           # (bs,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, :], s, NEG_INF)     # (G, bs)
+
+    m_prev = m_scr[:, 0:1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    any_valid = m_new > NEG_INF / 2
+    p = jnp.where(any_valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.where(any_valid, jnp.exp(m_prev - m_new), 1.0)
+    l_scr[:, 0:1] = alpha * l_scr[:, 0:1] + jnp.sum(p, 1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[:, 0:1] = m_new
+
+    @pl.when(isb == n_s - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, valid_mask, *, softcap: float = 0.0,
+                 block_s: int = 1024, interpret: bool | None = None):
+    """q (B, K, G, hd); k/v cache (B, K, S, hd); valid (B, S) bool.
+
+    Returns (B, K, G, hd) attention outputs (caller folds K*G back to H).
+    """
+    B, K, G, hd = q.shape
+    S = k_cache.shape[2]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_decode_kernel, n_s=n_s,
+                               scale=1.0 / math.sqrt(hd), softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, block_s), lambda b, h, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid_mask)

@@ -1,0 +1,153 @@
+"""Pallas TPU flash attention (forward): causal / window / chunk / bidir,
+GQA, optional logit softcap.
+
+Grid (B, H, n_q, n_k) — TPU executes the grid sequentially, so the running
+max / normalizer / accumulator live in VMEM scratch across the k-block
+axis (the innermost, fastest-moving dimension).  BlockSpecs stream
+(block_q, hd) query tiles and (block_k, hd) key/value tiles through VMEM;
+the (block_q, block_k) score tile never touches HBM — that is the whole
+point (the XLA reference path materializes S^2 fp32 scores; see the
+roofline analysis in EXPERIMENTS.md).
+
+GQA is handled in the index maps: kv tiles are fetched with head index
+h // group, so padded query-head groups share one kv stream.
+
+Block sizes default to (512, 512): fp32 score tile 512*512*4 = 1 MB, q/k/v
+tiles 512*hd*2 <= 256 KB at hd=128 — comfortably inside the ~16 MB VMEM
+with double buffering.  MXU dims (block, hd) are multiples of 128.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask_tile(kind: str, window: int, q0, k0, bq: int, bk: int, s_k: int):
+    """(bq, bk) bool mask for the tile at (q0, k0) absolute offsets."""
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kj < s_k
+    if kind == "bidir" or kind == "cross":
+        return valid
+    m = (kj <= qi) & valid
+    if kind == "window" and window > 0:
+        m &= kj > qi - window
+    elif kind == "chunk" and window > 0:
+        m &= (qi // window) == (kj // window)
+    return m
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  kind: str, window: int, softcap: float, block_q: int,
+                  block_k: int, n_k: int, s_k: int, scale: float):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = iq * block_q
+    k0 = ik * block_k
+    # tile relevance (static per kind, dynamic in block indices)
+    if kind in ("bidir", "cross"):
+        relevant = k0 < s_k
+    elif kind == "window" and window > 0:
+        relevant = (k0 <= q0 + block_q - 1) & (k0 + block_k > q0 - window)
+    elif kind == "chunk" and window > 0:
+        relevant = (k0 <= q0 + block_q - 1) & \
+            (k0 // window == (q0 + block_q - 1) // window) | \
+            (k0 // window == q0 // window)
+    else:  # causal
+        relevant = k0 <= q0 + block_q - 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _mask_tile(kind, window, q0, k0, block_q, block_k, s_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (exp(NEG_INF - NEG_INF) = 1 otherwise)
+        any_valid = m_new > NEG_INF / 2
+        p = jnp.where(any_valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.where(any_valid, jnp.exp(m_prev - m_new), 1.0)
+
+        l_scr[:, 0:1] = alpha * l_scr[:, 0:1] + jnp.sum(
+            p, axis=1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0:1] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        o = acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    """q (B, H, Sq, hd); k/v (B, K, Sk, hd) with H % K == 0 -> (B, H, Sq, hd).
+
+    Forward only (training wraps it in jax.custom_vjp with the reference
+    backward, or uses the reference path — see kernels/ops.py).
+    """
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _flash_kernel, kind=kind, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, n_k=n_k, s_k=Sk,
+        scale=1.0 / math.sqrt(hd))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # normalizer
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

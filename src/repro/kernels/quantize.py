@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: row-wise int8 quantization (gradient compression).
+
+Grid over (rows / block_rows); each tile computes the per-row absmax
+scale and the rounded int8 payload in one VMEM pass — the fp32 gradient
+is read exactly once, which matters because this runs on the full
+gradient right before the cross-pod reduction (optim/compression.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (block_rows, N)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_int8(x, *, block_rows: int = 256,
+                  interpret: bool | None = None):
+    """x (M, N) -> (q int8 (M, N), scale fp32 (M, 1))."""
+    M, N = x.shape
+    block_rows = min(block_rows, M)
+    assert M % block_rows == 0, (M, block_rows)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(M // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, N), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, N), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

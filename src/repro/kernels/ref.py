@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These share math with the model modules (repro.models.attention /
+rglru / rwkv6) — the kernels are drop-in replacements for exactly these
+functions on the TPU target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnSpec
+
+
+def flash_attention_ref(q, k, v, *, kind: str = "causal", window: int = 0,
+                        softcap: float = 0.0):
+    """q (B,H,S,hd), k/v (B,K,S,hd) -> (B,H,S,hd); full-score softmax."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    spec = AttnSpec(d_model=H * hd, n_heads=H, n_kv_heads=K, head_dim=hd,
+                    kind=kind, window=window, logit_softcap=softcap,
+                    use_rope=False, tp=1)
+    # model layout is (B, S, H, hd)
+    out = attn_mod._attend_dense(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), spec)
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_decode_ref(q, k_cache, v_cache, valid_mask, *,
+                     softcap: float = 0.0):
+    """q (B,K,G,hd); caches (B,K,S,hd); valid (B,S) -> (B,K,G,hd)."""
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid_mask[:, None, None, :], s, -2e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan (B, S, R)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential-exact RWKV6 recurrence.  r/k/v/logw (B,H,S,hd); u (H,hd).
+
+    Returns (B,H,S,hd) fp32.
+    """
+    B, H, S, hd = r.shape
+
+    def step(S_prev, inp):
+        rt, kt, vt, lwt = inp                       # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S_prev + u[None, :, :, None] * kv)
+        S_new = jnp.exp(lwt)[..., None] * S_prev + kv
+        return S_new, o
+
+    rs = r.astype(jnp.float32).transpose(2, 0, 1, 3)
+    ks = k.astype(jnp.float32).transpose(2, 0, 1, 3)
+    vs = v.astype(jnp.float32).transpose(2, 0, 1, 3)
+    lws = logw.astype(jnp.float32).transpose(2, 0, 1, 3)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, os = jax.lax.scan(step, S0, (rs, ks, vs, lws))
+    return os.transpose(1, 2, 0, 3)
+
+
+def quantize_int8_ref(x):
+    from repro.optim.compression import quantize_int8 as q
+    return q(x)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the RWKV-6 wkv recurrence (chunked form).
+
+Per (batch, head), with per-channel data-dependent decays w_t (given as
+log-decays) and bonus u:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+
+Grid (B, H, n_chunks); chunks run innermost so the (hd_k, hd_v) state
+matrix persists in VMEM scratch.  Within a chunk the quadratic part runs
+as dense (L, L) matmuls in log-decay space on the MXU (same math as
+models.rwkv6.wkv6_chunked — its docstring derives the decomposition); the
+inter-chunk part applies the carried state.  hd = 64: the state tile is
+16 KB fp32; chunk L = 64 keeps every matmul MXU-shaped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)     # (L, hd) log decays
+    u = u_ref[0].astype(jnp.float32)          # (1, hd) -> (hd,)
+
+    L = r.shape[0]
+    cum = jnp.cumsum(lw, axis=0)              # inclusive prefix log-decay
+    total = cum[-1:]                          # (1, hd)
+    a_prev = jnp.exp(cum - lw)                # A_{t-1}
+    k_scaled = k * jnp.exp(total - cum)       # A_L / A_t
+    k_rel = k * jnp.exp(jnp.minimum(-cum, 75.0))
+
+    q_dec = r * a_prev
+    att = jax.lax.dot_general(q_dec, k_rel, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (L,L)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.where(si < ti, att, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)   # (L, 1)
+
+    o_intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_intra = o_intra + diag * v
+
+    s_prev = s_scr[...]                       # (hd, hd)
+    o_inter = jax.lax.dot_general(q_dec, s_prev, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    s_new = jnp.exp(total)[0][:, None] * s_prev + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+    o_ref[0, 0] = (o_intra + o_inter).astype(o_ref.dtype)
+
+
+def wkv6(r, k, v, logw, u, *, chunk: int = 64,
+         interpret: bool | None = None):
+    """r/k/v (B, H, S, hd); logw (B, H, S, hd) fp32; u (H, hd).
+
+    Returns (B, H, S, hd).  S must be a multiple of ``chunk``.
+    """
+    B, H, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd),
+                               lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the multi-pod dry-run needs 512 placeholder host
+# devices to build the production mesh.  Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (no mismatched specs, no unsupported
+    collectives) — ``.lower().compile()`` fails otherwise;
+  * the memory footprint fits (``compiled.memory_analysis()``);
+  * and it yields the roofline terms (``cost_analysis`` + HLO collectives)
+    recorded in EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k [--multi-pod] [--out out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # full sweep, serial
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.runtime.serve import build_decode_step, build_prefill_step
+from repro.runtime.train import TrainStepOptions, build_train_step
+from repro.tools.roofline import roofline_from_compiled
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               options: TrainStepOptions | None = None,
+               stub_attention: bool = False):
+    """Returns (lowered, config, shape, mesh)."""
+    from repro.models import attention
+    attention.STUB_SCORES[0] = bool(stub_attention)
+    config = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape.kind == "train":
+        built = build_train_step(config, mesh, shape, options)
+        jitted = jax.jit(
+            built.step,
+            in_shardings=(built.state_shardings, built.batch_shardings),
+            out_shardings=(built.state_shardings, None),
+            donate_argnums=(0,))
+        lowered = jitted.lower(built.abstract_state, built.input_specs)
+    elif shape.kind == "prefill":
+        built = build_prefill_step(config, mesh, shape)
+        jitted = jax.jit(
+            built.step,
+            in_shardings=(built.param_shardings, built.input_shardings))
+        lowered = jitted.lower(built.abstract_params, built.input_specs)
+    else:  # decode
+        built = build_decode_step(config, mesh, shape)
+        jitted = jax.jit(
+            built.step,
+            in_shardings=(built.param_shardings, built.cache_shardings,
+                          built.input_shardings["tokens"],
+                          built.input_shardings["pos"]),
+            out_shardings=(None, built.cache_shardings),
+            donate_argnums=(1,))
+        lowered = jitted.lower(
+            built.abstract_params, built.abstract_cache,
+            built.input_specs["tokens"], built.input_specs["pos"])
+    return lowered, config, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             options: TrainStepOptions | None = None,
+             verbose: bool = True, stub_attention: bool = False) -> dict:
+    t0 = time.time()
+    lowered, config, shape, mesh = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, options=options,
+        stub_attention=stub_attention)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    report = roofline_from_compiled(
+        compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+        chips=mesh_chips(mesh), config=config)
+    out = report.to_json()
+    out.update(lower_s=t_lower, compile_s=t_compile, status="ok",
+               stub_attention=stub_attention)
+    try:
+        ma = compiled.memory_analysis()
+        out.update(temp_bytes=float(ma.temp_size_in_bytes),
+                   argument_bytes=float(ma.argument_size_in_bytes),
+                   output_bytes=float(ma.output_size_in_bytes),
+                   alias_bytes=float(ma.alias_size_in_bytes))
+    except Exception:
+        pass
+
+    if verbose:
+        try:
+            print(compiled.memory_analysis())
+        except Exception as e:            # backend-dependent
+            print(f"memory_analysis unavailable: {e}")
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print({k: cost[k] for k in ("flops", "bytes accessed")
+               if k in cost})
+        print(report.row())
+        print(f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return out
+
+
+def cells(archs=None, shapes=None, include_multi_pod=True):
+    """All assigned (arch x shape x mesh) combinations (skip rules apply)."""
+    for arch in (archs or ARCH_NAMES):
+        config = get_config(arch)
+        for shape in shapes_for(config):
+            if shapes and shape.name not in shapes:
+                continue
+            yield arch, shape.name, False
+            if include_multi_pod:
+                yield arch, shape.name, True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--compression", default=None)
+    ap.add_argument("--stub-attention", action="store_true")
+    ap.add_argument("--layout", default=None, choices=("megatron", "fsdp"))
+    ap.add_argument("--accum-dtype", default=None,
+                    choices=("float32", "bfloat16"))
+    args = ap.parse_args(argv)
+
+    options = None
+    if (args.microbatches or args.remat or args.compression or args.layout
+            or args.accum_dtype):
+        kw = {}
+        if args.microbatches:
+            kw["microbatches"] = args.microbatches
+        if args.remat:
+            kw["remat"] = args.remat
+        if args.compression:
+            kw["compression"] = args.compression
+        if args.layout:
+            kw["layout"] = args.layout
+        if args.accum_dtype:
+            kw["accum_dtype"] = args.accum_dtype
+        options = TrainStepOptions(**kw)
+
+    results = []
+    if args.all:
+        todo = list(cells())
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        todo = [(args.arch, args.shape, args.multi_pod)]
+
+    status = 0
+    for arch, shape_name, multi_pod in todo:
+        try:
+            res = run_cell(arch, shape_name, multi_pod=multi_pod,
+                           options=options,
+                           stub_attention=args.stub_attention)
+            results.append(res)
+        except Exception as e:
+            traceback.print_exc()
+            results.append({"arch": arch, "shape": shape_name,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "status": "error", "error": repr(e)})
+            status = 1
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results if args.all else results[0], f, indent=2)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests see 1 CPU device; only
+dryrun.py forces 512 host devices via XLA_FLAGS before any jax import.
+
+Topology (TPU v5e, DESIGN.md "Distribution design"):
+  single-pod: (16, 16)    -> ("data", "model")     256 chips
+  multi-pod:  (2, 16, 16) -> ("pod", "data", "model")  512 chips
+
+"model" is the innermost axis (contiguous chips -> fastest ICI ring for
+the per-layer TP collectives); "pod" extends data parallelism across the
+DCN boundary — exactly one gradient reduction crosses it per step.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Whatever this host offers (tests/examples): (n_dev/model, model)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return mesh.devices.size

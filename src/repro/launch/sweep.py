@@ -1,0 +1,142 @@
+"""Full dry-run sweep: every (arch x shape x mesh) cell as a subprocess.
+
+Each cell runs in its own process (fresh XLA, crash isolation, bounded
+RSS); train/prefill cells are lowered twice — real and ``--stub-attention``
+— and the flash-adjusted roofline (tools/roofline.py) is derived from the
+pair.  Results land one JSON per cell in --out plus summary.json.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'2x16x16' if multi_pod else '16x16'}"
+
+
+def run_dryrun(arch: str, shape: str, multi_pod: bool, out_path: str,
+               stub: bool = False, extra: list[str] | None = None,
+               timeout: int = 3600) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out_path]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if stub:
+        cmd.append("--stub-attention")
+    cmd += extra or []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env, cwd=os.getcwd())
+    if proc.returncode != 0 or not os.path.exists(out_path):
+        return {"status": "error", "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "stub_attention": stub,
+                "error": proc.stderr[-2000:], "wall_s": time.time() - t0}
+    with open(out_path) as f:
+        res = json.load(f)
+    res["wall_s"] = time.time() - t0
+    return res
+
+
+def flash_adjust(real: dict, stub: dict, arch: str, shape_name: str) -> dict:
+    from repro.configs import SHAPES, get_config
+    from repro.tools.roofline import HW, flash_io_bytes
+
+    config = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = real["chips"]
+    tp = 16
+    dp = chips // tp
+    hw = HW()
+    fio = flash_io_bytes(config, shape, dp, tp)
+    mem = stub["hbm_bytes"] + fio
+    out = dict(real)
+    out.update(
+        hbm_bytes=mem,
+        memory_s=mem / hw.hbm_bw,
+        note=(f"flash-adjusted: stub_hbm={stub['hbm_bytes']:.3e} "
+              f"flash_io={fio:.3e} "
+              f"score_traffic={max(real['hbm_bytes']-stub['hbm_bytes'],0):.3e}"))
+    terms = {"compute": out["compute_s"], "memory": out["memory_s"],
+             "collective": out["collective_s"]}
+    out["bound"] = max(terms, key=terms.get)
+    out["step_s"] = max(terms.values())
+    out["roofline_fraction"] = (out["useful_s"] / out["step_s"]
+                                if out["step_s"] else 0.0)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--no-stub", action="store_true",
+                    help="skip the flash-calibration second lowering")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have results")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCH_NAMES, get_config, shapes_for
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    for arch in (args.archs or ARCH_NAMES):
+        for shape in shapes_for(get_config(arch)):
+            if args.shapes and shape.name not in args.shapes:
+                continue
+            todo.append((arch, shape.name, False))
+            if not args.single_pod_only:
+                todo.append((arch, shape.name, True))
+
+    summary = {}
+    for i, (arch, shape, multi_pod) in enumerate(todo):
+        cid = cell_id(arch, shape, multi_pod)
+        final_path = os.path.join(args.out, cid + ".json")
+        if os.path.exists(final_path) and not args.force:
+            with open(final_path) as f:
+                summary[cid] = json.load(f)
+            print(f"[{i+1}/{len(todo)}] {cid}: cached", flush=True)
+            continue
+        t0 = time.time()
+        real = run_dryrun(arch, shape, multi_pod,
+                          os.path.join(args.out, cid + ".real.json"))
+        entry = {"real": real}
+        if real.get("status") == "ok" and not args.no_stub:
+            stub = run_dryrun(arch, shape, multi_pod,
+                              os.path.join(args.out, cid + ".stub.json"),
+                              stub=True)
+            entry["stub"] = stub
+            if stub.get("status") == "ok":
+                entry["flash"] = flash_adjust(real, stub, arch, shape)
+        with open(final_path, "w") as f:
+            json.dump(entry, f, indent=2)
+        summary[cid] = entry
+        status = real.get("status")
+        frac = (entry.get("flash") or real).get("roofline_fraction", 0)
+        bound = (entry.get("flash") or real).get("bound", "?")
+        print(f"[{i+1}/{len(todo)}] {cid}: {status} "
+              f"bound={bound} frac={frac:.1%} ({time.time()-t0:.0f}s)",
+              flush=True)
+
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    n_err = sum(1 for v in summary.values()
+                if v.get("real", {}).get("status") != "ok")
+    print(f"done: {len(summary)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

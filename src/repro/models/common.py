@@ -1,0 +1,216 @@
+"""Shared model building blocks and the parameter/spec convention.
+
+Parameters are plain pytrees of jax arrays.  Every init function returns a
+tree of :class:`Box` leaves carrying the array (or ShapeDtypeStruct under
+``jax.eval_shape``) together with its *logical axis names*; ``split_boxes``
+separates the value tree from the spec tree.  Logical names are mapped to
+mesh axes by :mod:`repro.runtime.partitioning`.
+
+Logical axes used across the zoo:
+  "vocab", "embed", "mlp", "heads", "kv_heads", "head_dim", "experts",
+  "layers" (scan-stack dim), "conv_k", "rnn", None (replicated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Box:
+    """A parameter leaf: value + logical axis names (one per dim).
+
+    Registered as a pytree node (axes are static aux data) so Box trees
+    pass through jit / eval_shape; tree ops that must treat Boxes as leaves
+    pass ``is_leaf=is_box``.
+    """
+
+    value: Any
+    axes: tuple[str | None, ...]
+
+    def __post_init__(self) -> None:
+        ndim = getattr(self.value, "ndim", None)
+        if ndim is not None and len(self.axes) != ndim:
+            raise ValueError(
+                f"axes {self.axes} do not match value ndim {ndim} "
+                f"(shape {getattr(self.value, 'shape', '?')})")
+
+
+def _box_flatten(b: Box):
+    return (b.value,), b.axes
+
+
+def _box_unflatten(axes, children):
+    out = object.__new__(Box)
+    out.value = children[0]
+    out.axes = axes
+    return out
+
+
+jax.tree_util.register_pytree_node(Box, _box_flatten, _box_unflatten)
+
+
+def is_box(x: Any) -> bool:
+    return isinstance(x, Box)
+
+
+def box_tree_map(f: Callable[[Box], Any], tree: Any) -> Any:
+    return jax.tree.map(f, tree, is_leaf=is_box)
+
+
+def split_boxes(tree: Any) -> tuple[Any, Any]:
+    """Box tree -> (value tree, logical-spec tree) with identical structure.
+
+    Logical specs are PartitionSpec objects carrying *logical* axis names
+    (pytree leaves, so the spec tree zips against the value tree); the
+    runtime translates them to physical mesh axes.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    values = box_tree_map(lambda b: b.value, tree)
+    specs = box_tree_map(lambda b: P(*b.axes), tree)
+    return values, specs
+
+
+def stack_boxes(trees: Sequence[Any]) -> Any:
+    """Stack per-layer Box trees along a new leading "layers" axis."""
+
+    def stack(*boxes: Box) -> Box:
+        vals = [b.value for b in boxes]
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            v = jax.ShapeDtypeStruct((len(vals),) + vals[0].shape, vals[0].dtype)
+        else:
+            v = jnp.stack(vals)
+        return Box(v, ("layers",) + boxes[0].axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=is_box)
+
+
+# ---------------------------------------------------------------------------
+# Initializers.  All take an explicit key and return Boxes.
+# ---------------------------------------------------------------------------
+
+
+def normal_init(
+    key: jax.Array, shape: Sequence[int], axes: Sequence[str | None],
+    stddev: float = 0.02, dtype: Any = jnp.bfloat16,
+) -> Box:
+    v = (stddev * jax.random.normal(key, tuple(shape), jnp.float32)).astype(dtype)
+    return Box(v, tuple(axes))
+
+
+def fanin_init(
+    key: jax.Array, shape: Sequence[int], axes: Sequence[str | None],
+    fan_in: int | None = None, dtype: Any = jnp.bfloat16,
+) -> Box:
+    fi = fan_in if fan_in is not None else int(np.prod(shape[:-1]))
+    return normal_init(key, shape, axes, stddev=1.0 / np.sqrt(max(fi, 1)),
+                       dtype=dtype)
+
+
+def ones_init(shape: Sequence[int], axes: Sequence[str | None],
+              dtype: Any = jnp.float32) -> Box:
+    return Box(jnp.ones(tuple(shape), dtype), tuple(axes))
+
+
+def zeros_init(shape: Sequence[int], axes: Sequence[str | None],
+               dtype: Any = jnp.float32) -> Box:
+    return Box(jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations.  Norm math in fp32, output cast to input dtype.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(
+    x: jax.Array,             # (..., S, H, head_dim)
+    positions: jax.Array,     # (..., S) int32
+    theta: float = 10000.0,
+) -> jax.Array:
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Utility: pad head counts up so they shard over the tensor axis.
+# ---------------------------------------------------------------------------
+
+
+def padded_heads(n_heads: int, multiple: int) -> int:
+    """Smallest multiple of `multiple` >= n_heads (TP divisibility).
+
+    The padding waste is tracked in the roofline MODEL_FLOPS/HLO ratio; see
+    DESIGN.md (sharding design) and the hillclimb log.
+    """
+    return ((n_heads + multiple - 1) // multiple) * multiple
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0) -> jax.Array:
+    """(s_q, s_k) boolean mask; True = attend.  q position i attends to
+    k positions <= i + q_offset."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def window_mask(s_q: int, s_k: int, window: int, q_offset: int = 0) -> jax.Array:
+    """Causal sliding-window: attend to the last `window` positions."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+def chunk_mask(s_q: int, s_k: int, chunk: int, q_offset: int = 0) -> jax.Array:
+    """Causal attention restricted to non-overlapping chunks (llama4-style
+    chunked local attention): attend only within the same chunk."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (qi // chunk == kj // chunk)

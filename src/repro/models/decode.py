@@ -1,0 +1,404 @@
+"""Serving traversals: prefill (prompt -> cache) and decode (one token).
+
+Cache layout mirrors the param stack ({"scan": tuple-of-stacked, "tail":
+[...]}, leading "layers" dim on scanned entries) so the decode step scans
+params and cache together.  Cache leaves carry logical axes via Box (same
+convention as params), so the runtime derives shardings for them:
+
+  k/v        (B, W, K, hd)   ("batch", "cache_seq", "kv_heads", "head_dim")
+  ck/cv      (B, Senc, K, hd)("batch", None, "kv_heads", "head_dim")
+  h          (B, R) fp32     ("batch", "rnn")            [rg-lru]
+  conv       (B, cw-1, R)    ("batch", None, "rnn")
+  S          (B, H, hd, hd)  ("batch", "heads", None, None)  [rwkv]
+  shift_t/_c (B, D)          ("batch", None)
+
+Ring-buffer semantics: position ``p`` writes slot ``p % W``; W = seq_len
+for causal layers, the window for local/chunked layers, so bounded-context
+layers hold O(window) state regardless of sequence length — this is what
+makes ``long_500k`` run on the hybrid/SSM/local-attn archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerKind, ModelConfig
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .common import Box, stack_boxes
+from .transformer import (
+    StackPlan,
+    _embed_tokens,
+    apply_norm,
+    attn_spec_for,
+    constrain,
+    encode,
+    moe_spec_for,
+    rglru_spec_for,
+    rwkv_spec_for,
+    stack_plan,
+)
+
+
+def cache_window(lk: LayerKind, max_len: int) -> int:
+    if lk.attn in ("window", "chunk") and lk.window > 0:
+        return min(lk.window, max_len)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# Per-block cache init (Box tree — value tree matches the traversals).
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(config: ModelConfig, lk: LayerKind, batch: int,
+                     max_len: int, tp: int) -> dict[str, Box]:
+    kind = lk.kind
+    if kind in ("dense", "moe", "enc", "encdec"):
+        spec = attn_spec_for(config, lk, tp)
+        W = cache_window(lk, max_len)
+        K, hd = spec.kv_pad, spec.head_dim
+        c = {
+            "k": Box(jnp.zeros((batch, W, K, hd), jnp.bfloat16),
+                     ("batch", "cache_seq", "kv_heads", "head_dim")),
+            "v": Box(jnp.zeros((batch, W, K, hd), jnp.bfloat16),
+                     ("batch", "cache_seq", "kv_heads", "head_dim")),
+        }
+        if kind == "encdec":
+            c["ck"] = Box(jnp.zeros((batch, config.enc_seq, K, hd),
+                                    jnp.bfloat16),
+                          ("batch", None, "kv_heads", "head_dim"))
+            c["cv"] = Box(jnp.zeros((batch, config.enc_seq, K, hd),
+                                    jnp.bfloat16),
+                          ("batch", None, "kv_heads", "head_dim"))
+        return c
+    if kind == "rglru":
+        spec = rglru_spec_for(config)
+        return {
+            "h": Box(jnp.zeros((batch, spec.d_rnn), jnp.float32),
+                     ("batch", "rnn")),
+            "conv": Box(jnp.zeros((batch, spec.conv_width - 1, spec.d_rnn),
+                                  jnp.bfloat16), ("batch", None, "rnn")),
+        }
+    if kind == "rwkv":
+        spec = rwkv_spec_for(config)
+        H, hd = spec.n_heads, spec.head_dim
+        return {
+            "S": Box(jnp.zeros((batch, H, hd, hd), jnp.float32),
+                     ("batch", "heads", None, None)),
+            "shift_t": Box(jnp.zeros((batch, config.d_model), jnp.bfloat16),
+                           ("batch", None)),
+            "shift_c": Box(jnp.zeros((batch, config.d_model), jnp.bfloat16),
+                           ("batch", None)),
+        }
+    raise ValueError(f"no cache for block kind {kind!r}")
+
+
+def init_cache(config: ModelConfig, batch: int, max_len: int,
+               tp: int = 1) -> dict:
+    """Whole-model cache as a Box tree (use jax.eval_shape for abstract).
+
+    Layout: one cache tree PER LAYER ("layers": scanned reps x pattern,
+    in layer order; "tail": remainder).  Decode unrolls the layer loop so
+    each layer's k/v buffer is written in place (a slab-sized
+    dynamic-update-slice) and read directly by its attention dot —
+    carrying caches through lax.scan costs a full cache copy per layer
+    per token (measured 263 GB/step on qwen3/decode_32k, sec. Perf).
+    """
+    plan = stack_plan(config)
+    out: dict[str, Any] = {"tail": [
+        init_block_cache(config, lk, batch, max_len, tp) for lk in plan.tail]}
+    if plan.reps:
+        out["layers"] = [
+            init_block_cache(config, lk, batch, max_len, tp)
+            for _ in range(plan.reps) for lk in plan.pattern]
+    return out
+
+
+def abstract_cache(config: ModelConfig, batch: int, max_len: int,
+                   tp: int = 1) -> dict:
+    return jax.eval_shape(lambda: init_cache(config, batch, max_len, tp))
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer helpers.
+# ---------------------------------------------------------------------------
+
+
+def _fill_ring(buf_shape, k_full: jax.Array, W: int) -> jax.Array:
+    """Place prompt k/v (B,S,K,hd) into a W-slot ring at slots p % W."""
+    B, S = k_full.shape[:2]
+    buf = jnp.zeros(buf_shape, jnp.bfloat16)
+    if S >= W:
+        kc = k_full[:, S - W:]
+        slots = np.arange(S - W, S) % W           # static permutation
+        return buf.at[:, slots].set(kc.astype(jnp.bfloat16))
+    return buf.at[:, :S].set(k_full.astype(jnp.bfloat16))
+
+
+def _ring_mask(pos: jax.Array, W: int, attn_kind: str) -> jax.Array:
+    """(W,) bool validity of ring slots after writing position ``pos``."""
+    s = jnp.arange(W)
+    if attn_kind == "chunk":
+        return s <= (pos % W)
+    return s <= pos           # causal (W = max_len) and window (wraps full)
+
+
+# ---------------------------------------------------------------------------
+# Block-level prefill / decode.
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(params, x, config: ModelConfig, lk: LayerKind, tp: int,
+                  positions, max_len: int, enc_out=None):
+    """One block forward that also fills its cache.
+
+    Returns (x, aux, cache) — cache value-tree matches init_block_cache.
+    """
+    kind = lk.kind
+    aux = jnp.zeros((), jnp.float32)
+    B = x.shape[0]
+    if kind in ("dense", "moe", "enc", "encdec"):
+        spec = attn_spec_for(config, lk, tp)
+        W = cache_window(lk, max_len)
+        K, hd = spec.kv_pad, spec.head_dim
+        h = apply_norm(params["ln1"], x, config)
+        out, (k, v) = attn_mod.attention_prefill(params["attn"], h, spec,
+                                                 positions)
+        x = x + out
+        x = constrain(x, "batch", "seq_act", "embed_act")
+        cache = {
+            "k": _fill_ring((B, W, K, hd), k, W),
+            "v": _fill_ring((B, W, K, hd), v, W),
+        }
+        if kind == "encdec":
+            hq = apply_norm(params["ln3"], x, config)
+            cspec = attn_spec_for(config, lk, tp, kind_override="cross")
+            out, (ck, cv) = attn_mod.attention_prefill(
+                params["cross"], hq, cspec, positions, kv_override=enc_out)
+            x = x + out
+            cache["ck"] = ck.astype(jnp.bfloat16)
+            cache["cv"] = cv.astype(jnp.bfloat16)
+        h = apply_norm(params["ln2"], x, config)
+        if kind == "moe":
+            y, aux = moe_mod.moe_fwd(params["ffn"], h, moe_spec_for(config),
+                                     constrain=constrain)
+        else:
+            y = mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+        x = x + y
+    elif kind == "rglru":
+        h = apply_norm(params["ln1"], x, config)
+        out, cache = rglru_mod.rglru_block_prefill(
+            params["rec"], h, rglru_spec_for(config))
+        x = x + out
+        h = apply_norm(params["ln2"], x, config)
+        x = x + mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+    elif kind == "rwkv":
+        h = apply_norm(params["ln1"], x, config)
+        out, tstate = rwkv_mod.rwkv_time_prefill(params["time"], h,
+                                                 rwkv_spec_for(config))
+        x = x + out
+        h = apply_norm(params["ln2"], x, config)
+        out, cstate = rwkv_mod.rwkv_channel_prefill(params["chan"], h)
+        x = x + out
+        cache = {"S": tstate["S"], "shift_t": tstate["shift"],
+                 "shift_c": cstate["shift"]}
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "batch", "seq_act", "embed_act")
+    return x, aux, cache
+
+
+def block_decode(params, x, config: ModelConfig, lk: LayerKind, tp: int,
+                 cache, pos):
+    """One block decode step.  x (B,1,D), pos () int32.
+
+    Returns (x, new_cache).
+    """
+    kind = lk.kind
+    B = x.shape[0]
+    if kind in ("dense", "moe", "enc", "encdec"):
+        spec = attn_spec_for(config, lk, tp)
+        W = cache["k"].shape[1]
+        h = apply_norm(params["ln1"], x, config)
+        q, k_new, v_new = attn_mod.decode_project(params["attn"], h, spec,
+                                                  pos)
+        slot = pos % W
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        # no sharding constraint here: the buffers' layout is pinned by the
+        # serve-step in/out shardings, and a constraint materializes a full
+        # cache copy per layer (sec. Perf iteration 2)
+        valid = jnp.broadcast_to(_ring_mask(pos, W, lk.attn)[None], (B, W))
+        out = attn_mod.decode_attend(q, k_cache, v_cache, valid, spec)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, params["attn"]["wo"])
+        new_cache = {"k": k_cache, "v": v_cache}
+        if kind == "encdec":
+            hq = apply_norm(params["ln3"], x, config)
+            cspec = attn_spec_for(config, lk, tp, kind_override="cross")
+            qc = jnp.einsum("bsd,dhk->bshk", hq, params["cross"]["wq"])
+            if cspec.qk_norm:
+                from .common import rms_norm
+                qc = rms_norm(qc, params["cross"]["q_norm"])
+            all_valid = jnp.ones((B, cache["ck"].shape[1]), bool)
+            outc = attn_mod.decode_attend(qc, cache["ck"], cache["cv"],
+                                          all_valid, cspec)
+            x = x + jnp.einsum("bshk,hkd->bsd", outc,
+                               params["cross"]["wo"])
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+        h = apply_norm(params["ln2"], x, config)
+        if kind == "moe":
+            y, _ = moe_mod.moe_fwd(params["ffn"], h, moe_spec_for(config),
+                                   constrain=constrain)
+        else:
+            y = mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+        x = x + y
+        return x, new_cache
+    if kind == "rglru":
+        h = apply_norm(params["ln1"], x, config)
+        out, state = rglru_mod.rglru_block_step(params["rec"], h[:, 0],
+                                                {"h": cache["h"],
+                                                 "conv": cache["conv"]})
+        x = x + out[:, None, :]
+        h = apply_norm(params["ln2"], x, config)
+        x = x + mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+        return x, {"h": state["h"], "conv": state["conv"]}
+    if kind == "rwkv":
+        spec = rwkv_spec_for(config)
+        h = apply_norm(params["ln1"], x, config)
+        out, tstate = rwkv_mod.rwkv_time_step(
+            params["time"], h[:, 0],
+            {"S": cache["S"], "shift": cache["shift_t"]}, spec)
+        x = x + out[:, None, :]
+        h = apply_norm(params["ln2"], x, config)
+        out, cstate = rwkv_mod.rwkv_channel_step(
+            params["chan"], h[:, 0], {"shift": cache["shift_c"]})
+        x = x + out[:, None, :]
+        return x, {"S": tstate["S"],
+                   "shift_t": tstate["shift"].astype(jnp.bfloat16),
+                   "shift_c": cstate["shift"].astype(jnp.bfloat16)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack-level traversals (scan over the repeating pattern + tail).
+# ---------------------------------------------------------------------------
+
+
+def stack_prefill(params, x, config: ModelConfig, plan: StackPlan, tp: int,
+                  positions, max_len: int, enc_out=None):
+    aux0 = jnp.zeros((), jnp.float32)
+    cache: dict[str, Any] = {}
+    if plan.reps:
+        def body(carry, ps):
+            x, aux = carry
+            caches = []
+            for lk, p in zip(plan.pattern, ps):
+                x, a, c = block_prefill(p, x, config, lk, tp, positions,
+                                        max_len, enc_out)
+                aux = aux + a
+                caches.append(c)
+            return (x, aux), tuple(caches)
+
+        (x, aux0), stacked = jax.lax.scan(
+            body, (x, aux0), params["scan"])
+        # unstack to the per-layer decode layout (one cache-sized copy,
+        # amortized into the prefill which writes the cache anyway)
+        cache["layers"] = [
+            jax.tree.map(lambda t: t[r], stacked[pi])
+            for r in range(plan.reps) for pi in range(len(plan.pattern))]
+    cache["tail"] = []
+    for lk, p in zip(plan.tail, params["tail"]):
+        x, a, c = block_prefill(p, x, config, lk, tp, positions, max_len,
+                                enc_out)
+        aux0 = aux0 + a
+        cache["tail"].append(c)
+    return x, aux0, cache
+
+
+def stack_decode(params, cache, x, config: ModelConfig, plan: StackPlan,
+                 tp: int, pos):
+    """Unrolled decode over the layer stack (see init_cache docstring)."""
+    new_cache: dict[str, Any] = {}
+    if plan.reps:
+        new_layers = []
+        li = 0
+        for r in range(plan.reps):
+            for pi, lk in enumerate(plan.pattern):
+                p_i = jax.tree.map(lambda t: t[r], params["scan"][pi])
+                x, c2 = block_decode(p_i, x, config, lk, tp,
+                                     cache["layers"][li], pos)
+                new_layers.append(c2)
+                li += 1
+        new_cache["layers"] = new_layers
+    new_cache["tail"] = []
+    for lk, p, c in zip(plan.tail, params["tail"], cache["tail"]):
+        x, c2 = block_decode(p, x, config, lk, tp, c, pos)
+        new_cache["tail"].append(c2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model prefill / decode.
+# ---------------------------------------------------------------------------
+
+
+def model_prefill(params, batch: dict, config: ModelConfig, max_len: int,
+                  tp: int = 1):
+    """Prompt (B,S) -> (last-token logits (B,V), cache, aux).
+
+    ``max_len`` sizes the causal-layer cache (the serving budget).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, config)
+    enc_out = None
+    if config.family == "vlm":
+        img = batch["patch_embed"].astype(x.dtype) @ params["img_adapter"]
+        n_img = img.shape[1]
+        x = jnp.concatenate([img, x[:, : S - n_img]], axis=1)
+    if config.family == "encdec":
+        enc_out = encode(params, batch["audio_embed"], config, tp)
+    if config.positional == "learned":
+        x = x + params["pos_embed"][None, : x.shape[1]].astype(x.dtype)
+
+    x = constrain(x, "batch", "seq_act", "embed_act")
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    plan = stack_plan(config)
+    # inference: no remat
+    cfg = dataclasses.replace(config, remat="none")
+    x, aux, cache = stack_prefill(params["stack"], x, cfg, plan, tp, pos,
+                                  max_len, enc_out)
+    x = apply_norm(params["final_norm"], x, config)
+    logits = x[:, -1] @ params["lm_head"]
+    logits = constrain(logits, "batch", "vocab_act")
+    return logits, cache, aux
+
+
+def model_decode(params, cache, tokens: jax.Array, pos: jax.Array,
+                 config: ModelConfig, tp: int = 1):
+    """One decode step.  tokens (B,1), pos () int32 (position being
+    written).  Returns (logits (B,V), new_cache)."""
+    x = _embed_tokens(params, tokens, config)
+    if config.positional == "learned":
+        pe = jnp.take(params["pos_embed"], pos, axis=0)      # (D,)
+        x = x + pe[None, None, :].astype(x.dtype)
+    x = constrain(x, "batch", "seq_act", "embed_act")
+    plan = stack_plan(config)
+    cfg = dataclasses.replace(config, remat="none")
+    x, new_cache = stack_decode(params["stack"], cache, x, cfg, plan, tp,
+                                pos)
+    x = apply_norm(params["final_norm"], x, config)
+    logits = x[:, -1] @ params["lm_head"]
+    logits = constrain(logits, "batch", "vocab_act")
+    return logits, new_cache

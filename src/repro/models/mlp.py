@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks: gated (SwiGLU/GeGLU) and plain."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, Box, fanin_init
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, gated: bool = True,
+             ) -> dict[str, Box]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": fanin_init(ks[0], (d_model, d_ff), ("embed", "mlp"),
+                           fan_in=d_model),
+        "w_out": fanin_init(ks[1], (d_ff, d_model), ("mlp", "embed"),
+                            fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = fanin_init(ks[2], (d_model, d_ff), ("embed", "mlp"),
+                                 fan_in=d_model)
+    return p
+
+
+def mlp_fwd(params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = ACTIVATIONS[activation]
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    return (h @ params["w_out"]).astype(x.dtype)

@@ -1,0 +1,168 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv1d + RG-LRU.
+
+RG-LRU recurrence (Griffin, arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))   in (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the sequence; decode is a one-step
+update.  The block wraps the LRU in the Griffin recurrent-block topology:
+  y = W_out( GeLU(W_gate x)  *  RG-LRU(conv1d(W_rec x)) ).
+
+The Pallas kernel in repro.kernels.rglru_scan implements the same scan with
+VMEM-resident state for the TPU target; this module is its jnp oracle user.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import Box, fanin_init, normal_init, zeros_init
+
+RG_LRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    d_rnn: int            # recurrent width (== d_model for RG-2B)
+    conv_width: int = 4
+
+
+def init_rglru(key: jax.Array, spec: RGLRUSpec) -> dict[str, Box]:
+    ks = jax.random.split(key, 8)
+    D, R, W = spec.d_model, spec.d_rnn, spec.conv_width
+    return {
+        "w_gate": fanin_init(ks[0], (D, R), ("embed", "rnn"), fan_in=D),
+        "w_rec": fanin_init(ks[1], (D, R), ("embed", "rnn"), fan_in=D),
+        "w_out": fanin_init(ks[2], (R, D), ("rnn", "embed"), fan_in=R),
+        "conv_w": normal_init(ks[3], (W, R), ("conv_k", "rnn"), stddev=0.1),
+        "conv_b": zeros_init((R,), ("rnn",)),
+        # gates operate on the recurrent stream
+        "wa": fanin_init(ks[4], (R, R), ("rnn", None), fan_in=R),
+        "ba": zeros_init((R,), (None,)),
+        "wx": fanin_init(ks[5], (R, R), ("rnn", None), fan_in=R),
+        "bx": zeros_init((R,), (None,)),
+        # Lambda init so a^c ~ uniform-ish in (0.9, 0.999) at r = 1
+        "lam": Box(jnp.linspace(2.0, 6.0, R, dtype=jnp.float32), ("rnn",)),
+    }
+
+
+def _gates(params, x):
+    """x (B,S,R) -> log_a (B,S,R) fp32, gated input (B,S,R)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32) + params["bx"])
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"]) * r   # <= 0
+    gated = i * xf
+    return log_a, gated
+
+
+def rg_lru_scan_with_state(params, x: jax.Array
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Associative scan over the sequence.  x (B,S,R) ->
+    ((B,S,R) outputs, (B,R) fp32 final state)."""
+    log_a, gated = _gates(params, x)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log1p(-exp(2 log a))
+    beta = jnp.exp(0.5 * jnp.log1p(-jnp.exp(2.0 * log_a) + 1e-12))
+    b = beta * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_scan(params, x: jax.Array) -> jax.Array:
+    """Associative scan over the sequence.  x (B,S,R) -> (B,S,R)."""
+    return rg_lru_scan_with_state(params, x)[0]
+
+
+def rg_lru_step(params, x_t: jax.Array, h_prev: jax.Array):
+    """One decode step.  x_t (B,R), h_prev (B,R) fp32 -> (out, h)."""
+    log_a, gated = _gates(params, x_t[:, None, :])
+    log_a, gated = log_a[:, 0], gated[:, 0]
+    a = jnp.exp(log_a)
+    # same stabilized formula as the scan path (bit-exact decode)
+    beta = jnp.exp(0.5 * jnp.log1p(-jnp.exp(2.0 * log_a) + 1e-12))
+    h = a * h_prev + beta * gated
+    return h.astype(x_t.dtype), h
+
+
+def _causal_conv(params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, width W.  x (B,S,R)."""
+    W = params["conv_w"].shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + x.shape[1], :] * params["conv_w"][i]
+        for i in range(W)
+    )
+    return (out + params["conv_b"]).astype(x.dtype)
+
+
+def _causal_conv_step(params, x_t: jax.Array, conv_state: jax.Array):
+    """x_t (B,R), conv_state (B,W-1,R) -> (out (B,R), new_state)."""
+    W = params["conv_w"].shape[0]
+    hist = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,R)
+    out = jnp.einsum("bwr,wr->br", hist, params["conv_w"]) + params["conv_b"]
+    return out.astype(x_t.dtype), hist[:, 1:, :]
+
+
+def rglru_block_fwd(params, x: jax.Array, spec: RGLRUSpec,
+                    scan_fn=rg_lru_scan) -> jax.Array:
+    """Full Griffin recurrent block.  x (B,S,D) -> (B,S,D).
+
+    ``scan_fn`` lets callers swap in the Pallas kernel implementation.
+    """
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    rec = x @ params["w_rec"]
+    rec = _causal_conv(params, rec)
+    rec = scan_fn(params, rec)
+    return ((gate * rec) @ params["w_out"]).astype(x.dtype)
+
+
+def rglru_block_prefill(params, x: jax.Array, spec: RGLRUSpec,
+                        scan_fn_ws=rg_lru_scan_with_state):
+    """Prefill: full-sequence forward that also returns the decode state.
+
+    x (B,S,D) -> ((B,S,D), {"h": (B,R) f32, "conv": (B,W-1,R)}).
+    """
+    W = spec.conv_width
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    rec_in = x @ params["w_rec"]
+    rec = _causal_conv(params, rec_in)
+    rec, h_final = scan_fn_ws(params, rec)
+    out = ((gate * rec) @ params["w_out"]).astype(x.dtype)
+    # conv state: last W-1 *pre-conv* inputs (pad if the prompt is shorter)
+    pre = rec_in.astype(jnp.bfloat16)
+    need = W - 1
+    if pre.shape[1] < need:
+        pre = jnp.pad(pre, ((0, 0), (need - pre.shape[1], 0), (0, 0)))
+    state = {"h": h_final, "conv": pre[:, -need:, :]}
+    return out, state
+
+
+def rglru_block_step(params, x_t: jax.Array, state: dict):
+    """Decode step.  x_t (B,D); state {"h": (B,R) f32, "conv": (B,W-1,R)}."""
+    gate = jax.nn.gelu(x_t @ params["w_gate"])
+    rec = x_t @ params["w_rec"]
+    rec, conv_state = _causal_conv_step(params, rec, state["conv"])
+    rec, h = rg_lru_step(params, rec, state["h"])
+    out = ((gate * rec) @ params["w_out"]).astype(x_t.dtype)
+    return out, {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(batch: int, spec: RGLRUSpec) -> dict:
+    return {
+        "h": jnp.zeros((batch, spec.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_rnn),
+                          jnp.bfloat16),
+    }

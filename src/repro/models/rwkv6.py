@@ -1,0 +1,295 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): data-dependent-decay linear attention.
+
+Time-mix recurrence per head (state S in R^{dk x dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+with per-channel decays w_t = exp(-exp(wlog_t)) data-dependent via a LoRA,
+bonus u, and receptance r.  Token-shift mixes x_t with x_{t-1} using
+data-dependent interpolation weights (simplified here to learned-static mu
+per stream, the "Eagle" form, to keep the dry-run HLO lean; the data-
+dependent LoRA for the *decay* — the Finch signature — is kept).
+
+Training uses a chunked (block-parallel) formulation: within a chunk the
+contribution is computed with dense matmuls in log-decay space; the state
+is carried between chunks by a scan.  This mirrors the Pallas kernel in
+repro.kernels.rwkv6_wkv.  Channel-mix is the standard RWKV squared-relu
+FFN with token shift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import Box, fanin_init, normal_init, ones_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Spec:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 14336
+    decay_lora: int = 64
+    chunk: int = 32
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv_time(key: jax.Array, spec: RWKV6Spec) -> dict[str, Box]:
+    ks = jax.random.split(key, 10)
+    D, H, hd = spec.d_model, spec.n_heads, spec.head_dim
+    L = spec.decay_lora
+    return {
+        "mu_r": ones_init((D,), ("embed",), jnp.bfloat16),
+        "mu_k": ones_init((D,), ("embed",), jnp.bfloat16),
+        "mu_v": ones_init((D,), ("embed",), jnp.bfloat16),
+        "mu_w": ones_init((D,), ("embed",), jnp.bfloat16),
+        "w_r": fanin_init(ks[0], (D, H, hd), ("embed", "heads", "head_dim"),
+                          fan_in=D),
+        "w_k": fanin_init(ks[1], (D, H, hd), ("embed", "heads", "head_dim"),
+                          fan_in=D),
+        "w_v": fanin_init(ks[2], (D, H, hd), ("embed", "heads", "head_dim"),
+                          fan_in=D),
+        "w_g": fanin_init(ks[3], (D, H, hd), ("embed", "heads", "head_dim"),
+                          fan_in=D),
+        "w_o": fanin_init(ks[4], (H, hd, D), ("heads", "head_dim", "embed"),
+                          fan_in=H * hd),
+        # data-dependent decay LoRA (the Finch signature)
+        "w_dec1": fanin_init(ks[5], (D, L), ("embed", None), fan_in=D),
+        "w_dec2": fanin_init(ks[6], (L, H, hd), (None, "heads", "head_dim"),
+                             fan_in=L),
+        "dec_bias": Box(jnp.full((H, hd), -4.0, jnp.float32),
+                        ("heads", "head_dim")),
+        "u": normal_init(ks[7], (H, hd), ("heads", "head_dim"), stddev=0.3,
+                         dtype=jnp.float32),
+        "ln_out": ones_init((H, hd), ("heads", "head_dim")),
+    }
+
+
+def init_rwkv_channel(key: jax.Array, spec: RWKV6Spec) -> dict[str, Box]:
+    ks = jax.random.split(key, 3)
+    D, F = spec.d_model, spec.d_ff
+    return {
+        "mu_k": ones_init((D,), ("embed",), jnp.bfloat16),
+        "mu_r": ones_init((D,), ("embed",), jnp.bfloat16),
+        "w_k": fanin_init(ks[0], (D, F), ("embed", "mlp"), fan_in=D),
+        "w_v": fanin_init(ks[1], (F, D), ("mlp", "embed"), fan_in=F),
+        "w_r": fanin_init(ks[2], (D, D), ("embed", None), fan_in=D),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    """x (B,S,D) -> previous token's features (zeros or x_prev at t=0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev is not None:
+        shifted = shifted.at[:, 0].set(x_prev)
+    return shifted
+
+
+def _mix(x, prev, mu):
+    return x * mu + prev * (1.0 - mu.astype(x.dtype))
+
+
+def _time_projections(params, x, prev):
+    """Shared by train/decode: returns r,k,v,g (B,S,H,hd) and logw fp32."""
+    r = jnp.einsum("bsd,dhk->bshk", _mix(x, prev, params["mu_r"]), params["w_r"])
+    k = jnp.einsum("bsd,dhk->bshk", _mix(x, prev, params["mu_k"]), params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", _mix(x, prev, params["mu_v"]), params["w_v"])
+    g = jnp.einsum("bsd,dhk->bshk", _mix(x, prev, params["mu_w"]), params["w_g"])
+    xw = _mix(x, prev, params["mu_w"]).astype(jnp.float32)
+    lora = jnp.tanh(xw @ params["w_dec1"].astype(jnp.float32))
+    wlog = jnp.einsum("bsl,lhk->bshk", lora,
+                      params["w_dec2"].astype(jnp.float32))
+    wlog = wlog + params["dec_bias"]
+    # per-step log decay: log w_t = -exp(wlog) in (-inf, 0)
+    logw = -jnp.exp(wlog)
+    return r, k, v, g, logw
+
+
+def wkv6_chunked(r, k, v, logw, u, chunk: int = 64,
+                 initial_state=None, return_state: bool = False):
+    """Chunked RWKV6 linear attention.
+
+    r,k,v (B,S,H,hd); logw (B,S,H,hd) fp32 (log of per-channel decay);
+    u (H,hd) bonus.  Returns (B,S,H,hd).
+
+    Within a chunk (length L), with cumulative decays A_t = exp(cum_{s<=t}
+    logw_s) applied to the key dimension:
+      o_t = (r_t * A_{t-1}) S_0
+          + sum_{s<t} [(r_t * A_{t-1}/A_s) . k_s] v_s
+          + [(r_t * u) . k_t] v_t
+      S_L = diag(A_L) S_0 + sum_s diag(A_L/A_s exp(-logw_s))' ...
+    computed with two dense matmuls per chunk plus a state carry.
+    """
+    B, S, H, hd = r.shape
+    L = chunk
+    assert S % L == 0, (S, L)
+    n = S // L
+    rf = r.astype(jnp.float32).reshape(B, n, L, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, n, L, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, n, L, H, hd)
+    lw = logw.reshape(B, n, L, H, hd)
+
+    cum = jnp.cumsum(lw, axis=2)                 # A_t = exp(cum_t), inclusive
+    total = cum[:, :, -1:]                       # (B,n,1,H,hd)
+    # decays relative to chunk start / end.  exp(-cum) can overflow for
+    # strongly-decaying channels; clip at e^75 — the matching q-side factor
+    # exp(cum_{t-1}) underflows to 0 there, so clipped pairs contribute 0,
+    # which is also the exact value of their fully-decayed contribution.
+    a_prev = jnp.exp(cum - lw)                   # A_{t-1} (exclusive), <= 1
+    k_scaled = kf * jnp.exp(total - cum)         # A_L / A_t applied, <= 1
+    k_rel = kf * jnp.exp(jnp.minimum(-cum, 75.0))  # k_t / A_t
+
+    # within-chunk quadratic part: P[t,s] = (r_t*A_{t-1}/A_s) . k_s, s < t
+    q_dec = rf * a_prev
+    att = jnp.einsum("bnthk,bnshk->bnhts", q_dec, k_rel)
+    ti = jnp.arange(L)[:, None]
+    si = jnp.arange(L)[None, :]
+    att = jnp.where((si < ti)[None, None, None], att, 0.0)
+    # bonus diagonal: (r_t * u) . k_t
+    diag = jnp.einsum("bnthk,hk,bnthk->bnth", rf, u, kf)
+    o_intra = jnp.einsum("bnhts,bnshk->bnthk", att, vf)
+    o_intra = o_intra + diag[..., None] * vf
+
+    # inter-chunk: carry state S (B,H,hd_k,hd_v) across chunks
+    def step(state, inp):
+        q_dec_c, k_scaled_c, v_c, tot_c = inp
+        # o_inter_t = (r_t A_{t-1}) S_prev
+        o_inter = jnp.einsum("bthk,bhkv->bthv", q_dec_c, state)
+        # S_new = diag(A_L) S_prev + sum_s (A_L/A_s k_s) v_s^T
+        decay = jnp.exp(tot_c)[:, 0]             # (B,H,hd)
+        s_new = decay[..., None] * state + jnp.einsum(
+            "bshk,bshv->bhkv", k_scaled_c, v_c)
+        return s_new, o_inter
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32)
+          if initial_state is None else initial_state)
+    inputs = (
+        q_dec.transpose(1, 0, 2, 3, 4),
+        k_scaled.transpose(1, 0, 2, 3, 4),
+        vf.transpose(1, 0, 2, 3, 4),
+        total.transpose(1, 0, 2, 3, 4),
+    )
+    s_final, o_inter = jax.lax.scan(step, s0, inputs)
+    o = o_intra + o_inter.transpose(1, 0, 2, 3, 4)
+    o = o.reshape(B, S, H, hd)
+    if return_state:
+        return o, s_final
+    return o
+
+
+def _group_norm_heads(x, scale):
+    """Per-head RMS-style normalization of the wkv output."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(ms + 1e-5) * scale
+
+
+def rwkv_time_fwd(params, x: jax.Array, spec: RWKV6Spec,
+                  wkv_fn=wkv6_chunked) -> jax.Array:
+    """Time-mix block.  x (B,S,D) -> (B,S,D).
+
+    Sequences are zero-padded up to a chunk multiple (causal: trailing
+    padding cannot affect earlier outputs).
+    """
+    S = x.shape[1]
+    pad = (-S) % spec.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    prev = _token_shift(x)
+    r, k, v, g, logw = _time_projections(params, x, prev)
+    o = wkv_fn(r, k, v, logw, params["u"], spec.chunk)
+    if pad:
+        o, g, x = o[:, :S], g[:, :S], x[:, :S]
+    o = _group_norm_heads(o, params["ln_out"])
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    o = o.astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+
+
+def rwkv_channel_fwd(params, x: jax.Array) -> jax.Array:
+    prev = _token_shift(x)
+    xk = _mix(x, prev, params["mu_k"])
+    xr = _mix(x, prev, params["mu_r"])
+    kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    rr = jax.nn.sigmoid(xr @ params["w_r"])
+    return (rr * (kk @ params["w_v"])).astype(x.dtype)
+
+
+def rwkv_time_prefill(params, x: jax.Array, spec: RWKV6Spec):
+    """Time-mix forward that also returns the decode state.
+
+    x (B,S,D) -> ((B,S,D), {"S": (B,H,hd,hd) f32, "shift": (B,D)}).
+    ``x`` here is the *normed* block input; its last token is the shift
+    state the decode step expects.  The prompt is zero-padded to a chunk
+    multiple; padded tokens have k=W_k@0...: they still write into the
+    state, so the state is taken from the *unpadded* formulation by
+    requiring chunk-aligned prompts here (callers pad prompts themselves
+    or use chunk-divisible prefill lengths — all assigned shapes are).
+    """
+    S = x.shape[1]
+    assert S % spec.chunk == 0, (S, spec.chunk)
+    prev = _token_shift(x)
+    r, k, v, g, logw = _time_projections(params, x, prev)
+    o, s_final = wkv6_chunked(r, k, v, logw, params["u"], spec.chunk,
+                              return_state=True)
+    o = _group_norm_heads(o, params["ln_out"])
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    o = o.astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+    return out, {"S": s_final, "shift": x[:, -1].astype(jnp.bfloat16)}
+
+
+def rwkv_channel_prefill(params, x: jax.Array):
+    """Channel-mix forward + decode state ({"shift": (B,D)})."""
+    out = rwkv_channel_fwd(params, x)
+    return out, {"shift": x[:, -1].astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# Decode steps (O(1) state per layer).
+# ---------------------------------------------------------------------------
+
+
+def rwkv_time_step(params, x_t: jax.Array, state: dict, spec: RWKV6Spec):
+    """x_t (B,D); state {"S": (B,H,hd,hd) f32, "shift": (B,D)}."""
+    x = x_t[:, None, :]
+    prev = state["shift"][:, None, :].astype(x.dtype)
+    r, k, v, g, logw = _time_projections(params, x, prev)
+    r, k, v = r[:, 0], k[:, 0], v[:, 0]
+    logw = logw[:, 0]
+    S = state["S"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   S + params["u"][..., None] * kv)
+    S = jnp.exp(logw)[..., None] * S + kv
+    o = _group_norm_heads(o[:, None], params["ln_out"])[:, 0]
+    o = (o * jax.nn.silu(g[:, 0].astype(jnp.float32))).astype(x_t.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, params["w_o"])
+    return out, {"S": S, "shift": x_t}
+
+
+def rwkv_channel_step(params, x_t: jax.Array, state: dict):
+    """state {"shift": (B,D)}."""
+    prev = state["shift"].astype(x_t.dtype)
+    xk = x_t * params["mu_k"] + prev * (1.0 - params["mu_k"].astype(x_t.dtype))
+    xr = x_t * params["mu_r"] + prev * (1.0 - params["mu_r"].astype(x_t.dtype))
+    kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    rr = jax.nn.sigmoid(xr @ params["w_r"])
+    return (rr * (kk @ params["w_v"])).astype(x_t.dtype), {"shift": x_t}
+
+
+def rwkv_init_state(batch: int, spec: RWKV6Spec) -> dict:
+    return {
+        "time": {
+            "S": jnp.zeros((batch, spec.n_heads, spec.head_dim,
+                            spec.head_dim), jnp.float32),
+            "shift": jnp.zeros((batch, spec.d_model), jnp.bfloat16),
+        },
+        "channel": {"shift": jnp.zeros((batch, spec.d_model), jnp.bfloat16)},
+    }

@@ -1,0 +1,429 @@
+"""Model assembler: builds every assigned architecture from its config.
+
+Layer stacks are compressed into *stages*: the repeating pattern (period p)
+becomes one ``lax.scan`` over ``n_layers // p`` stacked super-blocks, plus an
+unscanned remainder tail — HLO size and compile time are O(p), not O(L).
+
+Block kinds: dense (attn+mlp), moe (attn+moe), rglru (Griffin recurrent
+block + mlp), rwkv (time-mix + channel-mix), enc (bidirectional attn + mlp),
+encdec (self + cross + mlp).  All pre-norm residual.
+
+Three traversals share the block definitions:
+  * ``model_fwd``      — training/scoring forward -> final hidden states
+  * ``model_prefill``  — forward that also returns the decode cache
+  * ``model_decode``   — one-token step against the cache
+
+Embedding table is sharded on d_model ("embed_td" -> "model"); the lm_head
+is vocab-sharded.  Tied-embedding archs are built untied (two tables) for
+sharding reasons; accounting notes in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind, ModelConfig
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .common import (
+    Box,
+    fanin_init,
+    layer_norm,
+    normal_init,
+    ones_init,
+    rms_norm,
+    stack_boxes,
+    zeros_init,
+)
+
+# ---------------------------------------------------------------------------
+# Sharding-constraint hook (set by repro.runtime.partitioning when a mesh
+# is active; identity otherwise).
+# ---------------------------------------------------------------------------
+
+_CONSTRAIN: list[Callable[..., Any]] = [lambda x, *axes: x]
+
+
+def set_constrain_hook(fn: Callable[..., Any] | None) -> None:
+    _CONSTRAIN[0] = fn if fn is not None else (lambda x, *axes: x)
+
+
+def constrain(x, *axes):
+    return _CONSTRAIN[0](x, *axes)
+
+
+# Embedding-gather hook: the runtime swaps in a shard_map implementation
+# on real meshes (runtime.partitioning.make_embed_gather — GSPMD gather
+# workaround); default is a plain take.
+_EMBED: list[Callable[..., Any]] = [
+    lambda table, tokens: jnp.take(table, tokens, axis=0)]
+
+
+def set_embed_hook(fn: Callable[..., Any] | None) -> None:
+    _EMBED[0] = fn if fn is not None else (
+        lambda table, tokens: jnp.take(table, tokens, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer specs derived from the config.
+# ---------------------------------------------------------------------------
+
+
+def attn_spec_for(config: ModelConfig, lk: LayerKind, tp: int,
+                  kind_override: str | None = None) -> attn_mod.AttnSpec:
+    is_global = lk.attn == "causal"
+    theta = config.rope_theta_global if is_global else config.rope_theta
+    return attn_mod.AttnSpec(
+        d_model=config.d_model,
+        n_heads=config.n_heads,
+        n_kv_heads=config.n_kv_heads,
+        head_dim=config.head_dim,
+        kind=kind_override or lk.attn,
+        window=lk.window,
+        rope_theta=theta,
+        use_rope=(config.positional == "rope") and lk.use_rope,
+        qk_norm=config.qk_norm,
+        logit_softcap=config.logit_softcap,
+        tp=tp,
+    )
+
+
+def moe_spec_for(config: ModelConfig) -> moe_mod.MoESpec:
+    return moe_mod.MoESpec(
+        d_model=config.d_model, d_ff=config.d_ff,
+        n_experts=config.n_experts, top_k=config.top_k,
+        capacity_factor=config.capacity_factor,
+        group_size=config.moe_group_size,
+        activation=config.activation, gated=config.gated_mlp,
+    )
+
+
+def rglru_spec_for(config: ModelConfig) -> rglru_mod.RGLRUSpec:
+    return rglru_mod.RGLRUSpec(
+        d_model=config.d_model, d_rnn=config.rnn_width,
+        conv_width=config.conv_width)
+
+
+def rwkv_spec_for(config: ModelConfig) -> rwkv_mod.RWKV6Spec:
+    return rwkv_mod.RWKV6Spec(
+        d_model=config.d_model, head_dim=config.rwkv_head_dim,
+        d_ff=config.d_ff, chunk=config.rwkv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers (rms vs ln).
+# ---------------------------------------------------------------------------
+
+
+def init_norm(config: ModelConfig) -> dict[str, Box]:
+    if config.norm == "ln":
+        return {"scale": ones_init((config.d_model,), (None,)),
+                "bias": zeros_init((config.d_model,), (None,))}
+    return {"scale": ones_init((config.d_model,), (None,))}
+
+
+def apply_norm(p, x, config: ModelConfig):
+    if config.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# Block init / forward / decode, dispatched on LayerKind.kind.
+# ---------------------------------------------------------------------------
+
+
+def init_block(key: jax.Array, config: ModelConfig, lk: LayerKind,
+               tp: int) -> dict:
+    ks = jax.random.split(key, 4)
+    kind = lk.kind
+    p: dict[str, Any] = {"ln1": init_norm(config), "ln2": init_norm(config)}
+    if kind in ("dense", "moe", "enc", "encdec"):
+        p["attn"] = attn_mod.init_attention(ks[0], attn_spec_for(config, lk, tp))
+        if kind == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[1], moe_spec_for(config))
+        else:
+            p["ffn"] = mlp_mod.init_mlp(ks[1], config.d_model, config.d_ff,
+                                        gated=config.gated_mlp)
+        if kind == "encdec":
+            p["cross"] = attn_mod.init_attention(
+                ks[2], attn_spec_for(config, lk, tp, kind_override="cross"))
+            p["ln3"] = init_norm(config)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.init_rglru(ks[0], rglru_spec_for(config))
+        p["ffn"] = mlp_mod.init_mlp(ks[1], config.d_model, config.d_ff,
+                                    gated=config.gated_mlp)
+    elif kind == "rwkv":
+        p["time"] = rwkv_mod.init_rwkv_time(ks[0], rwkv_spec_for(config))
+        p["chan"] = rwkv_mod.init_rwkv_channel(ks[1], rwkv_spec_for(config))
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def block_fwd(params, x, config: ModelConfig, lk: LayerKind, tp: int,
+              positions, enc_out=None):
+    """One residual block.  Returns (x, aux_loss)."""
+    kind = lk.kind
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "enc", "encdec"):
+        spec = attn_spec_for(config, lk, tp,
+                             kind_override="bidir" if kind == "enc" else None)
+        h = apply_norm(params["ln1"], x, config)
+        x = x + attn_mod.attention_fwd(params["attn"], h, spec, positions)
+        x = constrain(x, "batch", "seq_act", "embed_act")
+        if kind == "encdec":
+            h = apply_norm(params["ln3"], x, config)
+            cspec = attn_spec_for(config, lk, tp, kind_override="cross")
+            x = x + attn_mod.attention_fwd(params["cross"], h, cspec,
+                                           positions, kv_override=enc_out)
+        h = apply_norm(params["ln2"], x, config)
+        if kind == "moe":
+            y, aux = moe_mod.moe_fwd(params["ffn"], h, moe_spec_for(config),
+                                     constrain=constrain)
+        else:
+            y = mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+        x = x + y
+    elif kind == "rglru":
+        h = apply_norm(params["ln1"], x, config)
+        x = x + rglru_mod.rglru_block_fwd(params["rec"], h,
+                                          rglru_spec_for(config))
+        h = apply_norm(params["ln2"], x, config)
+        x = x + mlp_mod.mlp_fwd(params["ffn"], h, config.activation)
+    elif kind == "rwkv":
+        h = apply_norm(params["ln1"], x, config)
+        x = x + rwkv_mod.rwkv_time_fwd(params["time"], h,
+                                       rwkv_spec_for(config))
+        h = apply_norm(params["ln2"], x, config)
+        x = x + rwkv_mod.rwkv_channel_fwd(params["chan"], h)
+    x = constrain(x, "batch", "seq_act", "embed_act")
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Stage compression: pattern -> (scan over stacked super-blocks, tail).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    pattern: tuple[LayerKind, ...]
+    reps: int                       # scanned repetitions of the pattern
+    tail: tuple[LayerKind, ...]     # unscanned remainder layers
+
+
+def stack_plan(config: ModelConfig, n_layers: int | None = None) -> StackPlan:
+    p = config.pattern
+    n = config.n_layers if n_layers is None else n_layers
+    reps, rem = divmod(n, len(p))
+    if reps == 0:
+        return StackPlan(pattern=(), reps=0, tail=p[:rem])
+    return StackPlan(pattern=p, reps=reps, tail=p[:rem])
+
+
+def init_stack(key: jax.Array, config: ModelConfig, plan: StackPlan,
+               tp: int) -> dict:
+    """{"scan": tuple-of-stacked-trees (leading dim reps), "tail": [trees]}"""
+    out: dict[str, Any] = {}
+    if plan.reps:
+        per_pos = []
+        for pos, lk in enumerate(plan.pattern):
+            keys = jax.random.split(jax.random.fold_in(key, pos), plan.reps)
+            per_pos.append(stack_boxes(
+                [init_block(k, config, lk, tp) for k in keys]))
+        out["scan"] = tuple(per_pos)
+    out["tail"] = [
+        init_block(jax.random.fold_in(key, 1000 + i), config, lk, tp)
+        for i, lk in enumerate(plan.tail)
+    ]
+    return out
+
+
+# Save only the named MoE dispatch/return buffers (the all-to-all results:
+# ~0.1 GB/layer — replaying them re-runs the collective); everything else
+# recomputes.  Dense graphs have no such names -> pure nothing_saveable.
+_REMAT_POLICY = jax.checkpoint_policies.save_only_these_names(
+    "moe_dispatch", "moe_return")
+
+
+def _remat_wrap(fn, config: ModelConfig):
+    """Per-superblock rematerialization.
+
+    "block"/"full": nothing saveable inside the block — the backward
+    recomputes the block from the scan carry (the inter-layer residual
+    stream), which is the only thing the scan saves.  Saving dot outputs
+    blows HBM at 4k x 256 global batch — measured 58 GB/device on qwen3
+    before this policy (EXPERIMENTS.md sec. Perf).
+    """
+    if config.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=_REMAT_POLICY)
+
+
+def _sqrt_groups(n: int) -> tuple[int, int]:
+    """Factor n = groups * per_group with groups ~ sqrt(n)."""
+    import math
+    g = max(1, int(math.isqrt(n)))
+    while n % g:
+        g -= 1
+    return g, n // g
+
+
+def stack_fwd(params, x, config: ModelConfig, plan: StackPlan, tp: int,
+              positions, enc_out=None):
+    """Apply the full stage stack.  Returns (x, aux).
+
+    remat="full" uses a two-level (sqrt-schedule) scan: the outer scan
+    saves only O(sqrt(reps)) group-boundary carries and the inner,
+    checkpointed scan recomputes within a group — peak saved activations
+    drop from reps*B*S*D to ~2*sqrt(reps)*B*S*D.
+    """
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if plan.reps:
+        def body(carry, xs):
+            x, aux = carry
+            for lk, p in zip(plan.pattern, xs):
+                x, a = block_fwd(p, x, config, lk, tp, positions, enc_out)
+                aux = aux + a
+            return (x, aux), None
+
+        groups, per_group = (
+            _sqrt_groups(plan.reps) if config.remat == "full" else
+            (plan.reps, 1))
+        if groups > 1 and per_group > 1:
+            inner = jax.checkpoint(body, policy=_REMAT_POLICY)
+
+            def group_body(carry, xs):
+                carry, _ = jax.lax.scan(inner, carry, xs)
+                return carry, None
+
+            group_body = jax.checkpoint(group_body, policy=_REMAT_POLICY)
+
+            def regroup(t):
+                return t.reshape((groups, per_group) + t.shape[1:])
+
+            grouped = jax.tree.map(regroup, params["scan"])
+            (x, aux0), _ = jax.lax.scan(group_body, (x, aux0), grouped)
+        else:
+            body = _remat_wrap(body, config)
+            (x, aux0), _ = jax.lax.scan(body, (x, aux0), params["scan"])
+
+    for lk, p in zip(plan.tail, params["tail"]):
+        x, a = block_fwd(p, x, config, lk, tp, positions, enc_out)
+        aux0 = aux0 + a
+    return x, aux0
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init.
+# ---------------------------------------------------------------------------
+
+
+def init_model(key: jax.Array, config: ModelConfig, tp: int = 1) -> dict:
+    """Returns a Box tree.  Use ``split_boxes`` for (params, logical specs);
+    wrap in ``jax.eval_shape`` for allocation-free abstract init."""
+    ks = jax.random.split(key, 8)
+    D, V = config.d_model, config.vocab
+    p: dict[str, Any] = {
+        "embed": normal_init(ks[0], (V, D), ("vocab_tbl", "embed_td")),
+        "lm_head": fanin_init(ks[1], (D, V), ("embed", "vocab"), fan_in=D),
+        "final_norm": init_norm(config),
+    }
+    if config.positional == "learned":
+        p["pos_embed"] = normal_init(
+            ks[2], (config.max_position, D), (None, "embed_td"), stddev=0.01)
+    if config.family == "vlm":
+        p["img_adapter"] = fanin_init(ks[3], (D, D), ("embed", None), fan_in=D)
+    plan = stack_plan(config)
+    p["stack"] = init_stack(ks[4], config, plan, tp)
+    if config.family == "encdec":
+        enc_plan = StackPlan((LayerKind("enc"),), config.n_enc_layers, ())
+        p["encoder"] = {
+            "stack": init_stack(ks[5], config, enc_plan, tp),
+            "final_norm": init_norm(config),
+        }
+        if config.positional == "learned":
+            p["enc_pos"] = normal_init(
+                ks[6], (config.enc_seq, D), (None, "embed_td"), stddev=0.01)
+    return p
+
+
+def abstract_model(config: ModelConfig, tp: int = 1):
+    """Box tree with ShapeDtypeStruct values — allocation-free (dry-run)."""
+    return jax.eval_shape(lambda: init_model(jax.random.key(0), config, tp))
+
+
+# ---------------------------------------------------------------------------
+# Forward traversals.
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens, config: ModelConfig):
+    x = _EMBED[0](params["embed"], tokens)
+    if config.scale_embed:
+        x = (x.astype(jnp.float32) * jnp.sqrt(float(config.d_model))
+             ).astype(x.dtype)
+    return x
+
+
+def encode(params, audio_embed, config: ModelConfig, tp: int = 1):
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, D)."""
+    x = audio_embed
+    if "enc_pos" in params:
+        x = x + params["enc_pos"][None, : x.shape[1]].astype(x.dtype)
+    plan = StackPlan((LayerKind("enc"),), config.n_enc_layers, ())
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    x, _ = stack_fwd(params["encoder"]["stack"], x, config, plan, tp, pos)
+    return apply_norm(params["encoder"]["final_norm"], x, config)
+
+
+def model_fwd(params, batch: dict, config: ModelConfig, tp: int = 1):
+    """Training/scoring forward.
+
+    batch: {"tokens": (B,S)} (+"audio_embed" for encdec, +"patch_embed" for
+    vlm).  Returns (hidden (B,S,D) post-final-norm, aux loss scalar).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, config)
+    enc_out = None
+
+    if config.family == "vlm":
+        img = batch["patch_embed"].astype(x.dtype) @ params["img_adapter"]
+        n_img = img.shape[1]
+        x = jnp.concatenate([img, x[:, : S - n_img]], axis=1)
+    if config.family == "encdec":
+        enc_out = encode(params, batch["audio_embed"], config, tp)
+    if config.positional == "learned":
+        x = x + params["pos_embed"][None, : x.shape[1]].astype(x.dtype)
+
+    x = constrain(x, "batch", "seq_act", "embed_act")
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    plan = stack_plan(config)
+    x, aux = stack_fwd(params["stack"], x, config, plan, tp, pos, enc_out)
+    x = apply_norm(params["final_norm"], x, config)
+    return x, aux
+
+
+def logits_fn(params, hidden):
+    """(B,S,D) -> (B,S,V) vocab-sharded logits.
+
+    The loss region has its own batch rule ("batch_loss"): under the fsdp
+    layout the block batch spans both mesh axes, but logits must keep
+    "model" free for the vocab shard — hidden is reshaped to data-only
+    batch here (one activation-sized all-gather, vs replicating the
+    (B, S, V) fp32 logits which costs 2.5 GB/device on qwen3)."""
+    hidden = constrain(hidden, "batch_loss", "seq_act", "embed_act")
+    return constrain(hidden @ params["lm_head"],
+                     "batch_loss", "seq_act", "vocab_act")

@@ -1,0 +1,19 @@
+from .optimizer import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from .compression import (
+    dequantize_int8,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "cosine_schedule", "global_norm",
+    "quantize_int8", "dequantize_int8",
+]

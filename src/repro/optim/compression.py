@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod all-reduce.
+
+int8 row-wise quantization with error feedback (1-bit-Adam-style residual
+carrying): the gradient is quantized *before* the data/pod all-reduce
+(4x fewer bytes on the wire — the pod axis crosses DCN, where bytes are the
+bottleneck), de-quantized after, and the quantization error is added back
+into the next step's gradient so the bias does not accumulate.
+
+The row-wise scale (max |g| per trailing-dim row) keeps the dynamic range
+loss bounded per row.  A Pallas TPU kernel (repro.kernels.quantize)
+implements the quantize hot loop; this module is its jnp reference user and
+the error-feedback plumbing.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (..., N) -> (q int8 (..., N), scale f32 (..., 1))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Any) -> tuple[Any, Any]:
+    """Quantize every leaf; returns (quantized tree of (q, scale), error)."""
+
+    def one(g):
+        q, s = quantize_int8(g)
+        err = g.astype(jnp.float32) - dequantize_int8(q, s)
+        return (q, s), err
+
+    flat, treedef = jax.tree.flatten(grads)
+    pairs = [one(g) for g in flat]
+    qtree = treedef.unflatten([p[0] for p in pairs])
+    etree = treedef.unflatten([p[1] for p in pairs])
+    return qtree, etree
+
+
+def apply_error_feedback(grads: Any, residual: Any | None) -> Any:
+    """g <- g + residual (from the previous step's quantization error)."""
+    if residual is None:
+        return grads
+    return jax.tree.map(
+        lambda g, r: (g.astype(jnp.float32) + r).astype(g.dtype),
+        grads, residual)
+
+
+def compressed_roundtrip(grads: Any, residual: Any | None = None
+                         ) -> tuple[Any, Any]:
+    """One error-feedback compression cycle: returns (decompressed grads,
+    new residual).  In the train step this brackets the data-axis psum —
+    the int8 tensor is what crosses the wire."""
+    fed = apply_error_feedback(grads, residual)
+    qtree, etree = compress_tree(fed)
+    deq = jax.tree.map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.dtype),
+        qtree, grads, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], jax.Array))
+    return deq, etree

@@ -1,0 +1,127 @@
+"""AdamW with configurable state dtype.
+
+Built on plain pytrees (no optax dependency).  Moments can be kept in
+bfloat16 (llama4-400B: fits the ZeRO shard in HBM — see its config) with
+stochastic-rounding-free simple casting: the fp32 math happens on the
+upcast values each step, which for Adam's EMA is accurate enough at the
+scales involved (the second moment dominates the error budget and is
+rescaled by eps anyway).
+
+All functions are shape-polymorphic over pytrees and jit-safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"      # "float32" | "bfloat16"
+    grad_clip: float = 1.0            # global-norm clip; 0 disables
+
+
+@dataclasses.dataclass
+class OptState:
+    """m/v moment trees + scalar step count (pytree)."""
+
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def _state_dtype(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> OptState:
+    dt = _state_dtype(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: Any, state: OptState, params: Any, cfg: AdamWConfig,
+    lr: jax.Array | float | None = None,
+) -> tuple[Any, OptState]:
+    """Returns (new_params, new_state).  Grads may be any float dtype."""
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** cf
+    bc2 = 1.0 - cfg.b2 ** cf
+    step_lr = cfg.lr if lr is None else lr
+    dt = _state_dtype(cfg)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+            delta = delta + cfg.weight_decay * pf
+        new_p = (pf - step_lr * delta).astype(p.dtype)
+        return new_p, mf.astype(dt), vf.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(m=new_m, v=new_v, count=count)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*base_lr."""
+
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = base_lr * (s + 1.0) / max(warmup, 1)   # step 0 trains too
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * base_lr + (1 - floor) * base_lr * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+# pytree registration for OptState
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.m, s.v, s.count), None),
+    lambda _, ch: OptState(m=ch[0], v=ch[1], count=ch[2]),
+)

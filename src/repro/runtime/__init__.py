@@ -1,0 +1,27 @@
+"""Distributed runtime: sharding rules, train/serve step builders, fault
+tolerance, elastic re-sharding and straggler mitigation.
+
+This is the substrate the annealing controller (repro.core) manages: every
+knob in the TPU procurement space (mesh factorization, microbatches, remat,
+compression) maps to an option of the step builders here.
+"""
+
+from .partitioning import (
+    ACT_RULES_DECODE,
+    ACT_RULES_LONG,
+    ACT_RULES_TRAIN,
+    PARAM_RULES,
+    logical_to_physical,
+    make_constrain,
+    param_shardings,
+    zero_spec,
+)
+from .train import TrainState, TrainStepOptions, build_train_step
+from .serve import build_decode_step, build_prefill_step
+
+__all__ = [
+    "ACT_RULES_DECODE", "ACT_RULES_LONG", "ACT_RULES_TRAIN", "PARAM_RULES",
+    "logical_to_physical", "make_constrain", "param_shardings", "zero_spec",
+    "TrainState", "TrainStepOptions", "build_train_step",
+    "build_decode_step", "build_prefill_step",
+]

@@ -1,0 +1,57 @@
+"""Sharded LM losses.
+
+Cross-entropy is computed against vocab-sharded logits: the logits tensor
+(B, S, V) is constrained to ("batch", None, "model"), and every reduction
+over V (max, logsumexp, label pick) is partitioned by XLA into a local
+reduction + a small all-reduce — the replicated (B, S, V) tensor is never
+materialized.  The label pick uses a one-hot contraction (partitions
+cleanly; gather over a sharded axis does not).
+
+z-loss (Chowdhery et al., PaLM) regularizes the softmax normalizer; MoE
+archs add the router load-balance auxiliary from the model forward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(
+    logits: jax.Array,        # (B, S, V) — vocab-sharded
+    labels: jax.Array,        # (B, S) int32
+    mask: jax.Array | None = None,   # (B, S) 0/1 valid-token mask
+    z_loss: float = 0.0,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Mean per-token negative log likelihood (+ optional z-loss)."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    sum_exp = jnp.sum(jnp.exp(shifted), axis=-1)
+    log_z = jnp.log(sum_exp) + m[..., 0]                 # (B, S)
+    one_hot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.sum(lf * one_hot, axis=-1)          # (B, S)
+    nll = log_z - label_logit
+
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {
+        "nll": loss,
+        "z": jnp.sum(jnp.square(log_z) * mask) / denom,
+    }
+    if z_loss > 0.0:
+        loss = loss + z_loss * metrics["z"]
+    return loss, metrics
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array,
+                   mask: jax.Array | None = None) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        return hit.mean()
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(hit * mask) / jnp.maximum(mask.sum(), 1.0)

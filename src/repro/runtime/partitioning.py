@@ -1,0 +1,318 @@
+"""Logical-axis -> physical-mesh-axis sharding rules.
+
+Model code annotates parameters (Box.axes) and activations (constrain(...)
+call sites) with *logical* names.  This module owns the translation to
+physical mesh axes for the production meshes of launch/mesh.py:
+
+  single-pod:  (16, 16)      axes ("data", "model")
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")
+
+Design (DESIGN.md "Distribution design"):
+* tensor parallel over "model": head/kv-head/mlp/vocab dims;
+* expert parallel over "data": the experts dim (pods replicate experts so
+  MoE all-to-alls stay on ICI, never DCN);
+* batch over ("pod", "data");
+* ZeRO-1: optimizer state (and the fp32 grad accumulator) additionally
+  sharded over "data" on the largest divisible unsharded dim
+  (:func:`zero_spec`); XLA then emits reduce-scatter for the grad and
+  all-gather for the updated params — the standard ZeRO schedule derived
+  purely from shardings;
+* long-context serving shards the KV-cache *sequence* dim over "data"
+  ("cache_seq"), turning decode attention into a distributed flash-decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import box_tree_map, is_box
+
+
+# ---------------------------------------------------------------------------
+# Rule tables: logical axis name -> physical mesh axis (or None).
+# "batch" is special-cased to absorb the "pod" axis when present.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: dict[str, str | None] = {
+    # tensor-parallel dims
+    "embed_td": "model",    # embedding table d_model dim
+    "vocab": "model",       # lm_head vocab dim
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "rnn": "model",
+    # expert-parallel dim
+    "experts": "data",
+    # embedding table: d_model over "model"; the lookup itself is a
+    # shard_map gather (make_embed_gather) because the GSPMD partitioner
+    # emits an invalid dynamic-slice when resharding a gather from a
+    # D-sharded table inside grad+scan at 16x16 (DESIGN.md "XLA
+    # workarounds"); vocab stays unsharded (ZeRO shards its opt state).
+    "vocab_tbl": None,
+    "embed": None,
+    "head_dim": None,
+    "conv_k": None,
+    "layers": None,
+}
+
+ACT_RULES_TRAIN: dict[str, str | None] = {
+    "batch": "data",        # expanded to ("pod","data") on multi-pod meshes
+    "batch_loss": "data",   # loss region (see transformer.logits_fn)
+    "seq_act": None,
+    "embed_act": None,
+    "vocab_act": "model",
+    "heads_act": "model",
+    "experts": "data",      # dispatched MoE buffer
+    "moe_groups": "data",   # token-group dim of the dispatch buffer
+    "cache_seq": None,
+}
+
+# FSDP layout (beyond-paper sec. Perf): batch shards over BOTH mesh axes
+# (1 row/device at global_batch 256 on the 16x16 pod); weights keep their
+# storage sharding and XLA all-gathers them per layer — per-layer weight
+# all-gathers (~0.4 GB) replace per-layer activation all-reduces (~1.6 GB
+# raw, 6x/layer with backward + remat replay).  Embedding and lm_head are
+# stored replicated (vocab reductions become local); ZeRO still shards
+# their optimizer state over "data".
+PARAM_RULES_FSDP: dict[str, Any] = {
+    **PARAM_RULES,
+    "embed_td": None,       # table replicated; ZeRO shards its opt state
+}
+
+ACT_RULES_TRAIN_FSDP: dict[str, Any] = {
+    **ACT_RULES_TRAIN,
+    "batch": ("data", "model"),
+    "batch_loss": "data",   # lm_head stays vocab-sharded over "model"
+}
+
+
+# decode_32k: batch 128 shards over data; cache lives with its batch shard.
+ACT_RULES_DECODE: dict[str, str | None] = {
+    **ACT_RULES_TRAIN,
+    "batch": "data",
+    "cache_seq": None,
+}
+
+# long_500k: batch == 1 -> sequence parallelism over "data" for the cache.
+ACT_RULES_LONG: dict[str, str | None] = {
+    **ACT_RULES_TRAIN,
+    "batch": None,
+    "cache_seq": "data",
+    "experts": None,        # B*S == 1 token: no expert dim worth sharding
+    "moe_groups": None,
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+def _expand(axis, mesh: Mesh, batch_like: bool) -> Any:
+    """Map one logical rule entry to mesh axes, folding "pod" into batch.
+
+    Rule values may be a single axis name or a tuple of axes (the fsdp
+    layout shards batch over ("data", "model"))."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        present = tuple(a for a in axis if a in mesh.shape)
+        if batch_like and "pod" in mesh.shape:
+            present = ("pod",) + present
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+    if axis not in mesh.shape:
+        return None
+    if batch_like and "pod" in mesh.shape:
+        return ("pod", axis)
+    return axis
+
+
+def logical_to_physical(
+    logical: Sequence[str | None],
+    rules: Mapping[str, str | None],
+    mesh: Mesh,
+) -> P:
+    """Translate a tuple of logical axis names to a PartitionSpec."""
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        if name not in rules:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        out.append(_expand(rules[name], mesh, batch_like=(name == "batch")))
+    return P(*out)
+
+
+def spec_shardable(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axis does not divide (tiny smoke
+    configs; padded archs never hit this on the production mesh)."""
+    fixed = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            fixed.append(None)
+            continue
+        group = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = math.prod(_mesh_axis_size(mesh, a) for a in group)
+        fixed.append(axes if dim % total == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(
+    boxes: Any, mesh: Mesh, rules: Mapping[str, str | None] = PARAM_RULES
+) -> Any:
+    """Box tree -> tree of NamedSharding (same structure as the value tree)."""
+
+    def one(b) -> NamedSharding:
+        spec = logical_to_physical(b.axes, rules, mesh)
+        spec = spec_shardable(b.value.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return box_tree_map(one, boxes)
+
+
+def param_specs(
+    boxes: Any, mesh: Mesh, rules: Mapping[str, str | None] = PARAM_RULES
+) -> Any:
+    def one(b) -> P:
+        spec = logical_to_physical(b.axes, rules, mesh)
+        return spec_shardable(b.value.shape, spec, mesh)
+
+    return box_tree_map(one, boxes)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: extend a param spec with "data" sharding for optimizer state.
+# ---------------------------------------------------------------------------
+
+
+def zero_spec(shape: Sequence[int], spec: P, mesh: Mesh,
+              axis: str = "data") -> P:
+    """Shard the largest unsharded, divisible dim over ``axis``.
+
+    Applied to optimizer-state (and grad-accumulator) shardings only; the
+    params themselves keep their TP layout so the forward pass never
+    all-gathers weights (ZeRO-1, not ZeRO-3).
+    """
+    if axis not in mesh.shape:
+        return spec
+    n = _mesh_axis_size(mesh, axis)
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    # already sharded over `axis` somewhere? then nothing to do
+    for e in entries:
+        group = (e,) if isinstance(e, str) else tuple(e or ())
+        if axis in group:
+            return P(*entries)
+    best, best_dim = -1, -1
+    for i, (d, e) in enumerate(zip(shape, entries)):
+        if e is None and d % n == 0 and d > best:
+            best, best_dim = d, i
+    if best_dim < 0:
+        return P(*entries)
+    entries[best_dim] = axis
+    return P(*entries)
+
+
+def zero_shardings(boxes: Any, mesh: Mesh,
+                   rules: Mapping[str, str | None] = PARAM_RULES) -> Any:
+    """NamedShardings for ZeRO-partitioned copies of the param tree."""
+
+    def one(b) -> NamedSharding:
+        spec = logical_to_physical(b.axes, rules, mesh)
+        spec = spec_shardable(b.value.shape, spec, mesh)
+        return NamedSharding(mesh, zero_spec(b.value.shape, spec, mesh))
+
+    return box_tree_map(one, boxes)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint hook (installed into repro.models.transformer).
+# ---------------------------------------------------------------------------
+
+
+def make_constrain(mesh: Mesh, rules: Mapping[str, str | None]):
+    """Returns constrain(x, *logical_names) for the model's hook.
+
+    Dims whose size the mesh axis does not divide fall back to replicated
+    (tiny smoke models on a big mesh lower correctly, just unsharded).
+    """
+
+    def constrain(x, *names):
+        if len(names) < x.ndim:
+            names = tuple(names) + (None,) * (x.ndim - len(names))
+        spec = logical_to_physical(names[: x.ndim], rules, mesh)
+        spec = spec_shardable(x.shape, spec, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# shard_map embedding gather (XLA workaround, see PARAM_RULES comment).
+# ---------------------------------------------------------------------------
+
+
+def make_embed_gather(mesh: Mesh, rules: Mapping[str, str | None]):
+    """Returns embed(table, tokens) for the transformer embed hook.
+
+    Table (V, D) arrives P(None, "model"); tokens (B, S) batch-sharded.
+    Each device gathers its D-slice locally — zero communication in the
+    forward; the backward is a local scatter-add (+ the data-axis grad
+    reduction that ZeRO performs anyway).  Falls back to plain take when
+    the shapes don't divide the mesh (tiny smoke configs).
+    """
+    import functools
+
+    import jax.numpy as jnp
+
+    model_ax = rules.get("embed_td")
+    batch_ax = _expand(rules.get("batch"), mesh, batch_like=True)
+    model_n = _mesh_axis_size(mesh, model_ax) if model_ax else 1
+    batch_group = ((batch_ax,) if isinstance(batch_ax, str)
+                   else tuple(batch_ax or ()))
+    batch_n = math.prod(_mesh_axis_size(mesh, a) for a in batch_group)
+
+    def embed(table, tokens):
+        if (model_n == 1 and batch_n == 1) or table.shape[1] % model_n \
+                or tokens.shape[0] % batch_n:
+            return jnp.take(table, tokens, axis=0)
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(None, model_ax if model_n > 1 else None),
+                      P(batch_ax, None)),
+            out_specs=P(batch_ax, None,
+                        model_ax if model_n > 1 else None))
+        def emb(tbl, toks):
+            return jnp.take(tbl, toks, axis=0)
+
+        return emb(table, tokens)
+
+    return embed
+
+
+# ---------------------------------------------------------------------------
+# Mesh-degree helpers used by step builders and the roofline tooling.
+# ---------------------------------------------------------------------------
+
+
+def mesh_degrees(mesh: Mesh) -> dict[str, int]:
+    d = dict(mesh.shape)
+    d.setdefault("pod", 1)
+    d.setdefault("data", 1)
+    d.setdefault("model", 1)
+    return d
+
+
+def data_parallel_degree(mesh: Mesh) -> int:
+    deg = mesh_degrees(mesh)
+    return deg["pod"] * deg["data"]
+
+
+def tensor_parallel_degree(mesh: Mesh) -> int:
+    return mesh_degrees(mesh)["model"]

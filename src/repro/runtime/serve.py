@@ -1,0 +1,166 @@
+"""Serve-step builders: prefill and decode cells for the dry-run + engine.
+
+``decode_32k`` shards the request batch over "data" and KV heads over
+"model"; ``long_500k`` (batch = 1) switches to sequence parallelism: the
+KV-cache sequence dim shards over "data" and XLA partitions the decode
+softmax into a distributed flash-decode (partial max/sum + cross-shard
+combine).  Rules in runtime/partitioning.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as decode_mod
+from repro.models import transformer
+from repro.models.common import split_boxes
+from .partitioning import (
+    ACT_RULES_DECODE,
+    ACT_RULES_LONG,
+    PARAM_RULES,
+    make_constrain,
+    make_embed_gather,
+    param_specs,
+    spec_shardable,
+    tensor_parallel_degree,
+)
+
+
+def serve_rules(shape: ShapeConfig) -> dict:
+    return ACT_RULES_LONG if shape.global_batch == 1 else ACT_RULES_DECODE
+
+
+@dataclasses.dataclass
+class BuiltServeStep:
+    step: Callable                       # decode or prefill fn
+    abstract_params: Any
+    param_shardings: Any
+    abstract_cache: Any | None
+    cache_shardings: Any | None
+    input_specs: dict[str, jax.ShapeDtypeStruct]
+    input_shardings: dict[str, NamedSharding]
+    config: ModelConfig
+    mesh: Mesh
+    kind: str                            # "decode" | "prefill"
+
+    def jit(self) -> Any:
+        if self.kind == "decode":
+            return jax.jit(
+                self.step,
+                in_shardings=(self.param_shardings, self.cache_shardings,
+                              self.input_shardings["tokens"],
+                              self.input_shardings["pos"]),
+                out_shardings=(None, self.cache_shardings),
+                donate_argnums=(1,),
+            )
+        return jax.jit(
+            self.step,
+            in_shardings=(self.param_shardings, self.input_shardings),
+            out_shardings=None,
+        )
+
+
+def _cache_shardings(config: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     tp: int):
+    rules = {**PARAM_RULES, **serve_rules(shape)}
+    boxes = decode_mod.abstract_cache(
+        config, shape.global_batch, shape.seq_len, tp)
+    avals, _ = split_boxes(boxes)
+    specs = param_specs(boxes, mesh, rules)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    return avals, shardings
+
+
+def build_decode_step(config: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      ) -> BuiltServeStep:
+    """One new token against a seq_len-deep cache (assignment semantics)."""
+    tp = tensor_parallel_degree(mesh)
+    rules = {**PARAM_RULES, **serve_rules(shape)}
+    constrain = make_constrain(mesh, rules)
+
+    boxes = transformer.abstract_model(config, tp)
+    params_avals, _ = split_boxes(boxes)
+    pspecs = param_specs(boxes, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    cache_avals, cache_sh = _cache_shardings(config, shape, mesh, tp)
+
+    B = shape.global_batch
+    bspec = spec_shardable((B, 1), P(rules["batch"], None), mesh)
+    input_specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    input_shardings = {
+        "tokens": NamedSharding(mesh, bspec),
+        "pos": NamedSharding(mesh, P()),
+    }
+
+    embed_gather = make_embed_gather(mesh, rules)
+
+    def serve_step(params, cache, tokens, pos):
+        transformer.set_constrain_hook(constrain)
+        transformer.set_embed_hook(embed_gather)
+        return decode_mod.model_decode(params, cache, tokens, pos, config,
+                                       tp)
+
+    return BuiltServeStep(
+        step=serve_step, abstract_params=params_avals,
+        param_shardings=param_sh, abstract_cache=cache_avals,
+        cache_shardings=cache_sh, input_specs=input_specs,
+        input_shardings=input_shardings, config=config, mesh=mesh,
+        kind="decode")
+
+
+def build_prefill_step(config: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                       ) -> BuiltServeStep:
+    """Full-prompt forward returning (last-token logits, cache)."""
+    tp = tensor_parallel_degree(mesh)
+    # prefill processes a full (B, S) batch: train-style activation rules
+    # except the cache leaves, which follow the serve layout.
+    rules = {**PARAM_RULES, **serve_rules(shape)}
+    if shape.global_batch > 1:
+        rules["batch"] = "data"
+    constrain = make_constrain(mesh, rules)
+
+    boxes = transformer.abstract_model(config, tp)
+    params_avals, _ = split_boxes(boxes)
+    pspecs = param_specs(boxes, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    cache_avals, cache_sh = _cache_shardings(config, shape, mesh, tp)
+
+    B, S = shape.global_batch, shape.seq_len
+    input_specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if config.family == "encdec":
+        input_specs["audio_embed"] = jax.ShapeDtypeStruct(
+            (B, config.enc_seq, config.d_model), jnp.bfloat16)
+    if config.family == "vlm":
+        input_specs["patch_embed"] = jax.ShapeDtypeStruct(
+            (B, config.n_img_tokens, config.d_model), jnp.bfloat16)
+    bspec = spec_shardable((B, S), P(rules["batch"], None), mesh)
+    input_shardings = {
+        k: NamedSharding(mesh, spec_shardable(
+            v.shape, P(*((rules["batch"],) + (None,) * (len(v.shape) - 1))),
+            mesh))
+        for k, v in input_specs.items()}
+
+    embed_gather = make_embed_gather(mesh, rules)
+
+    def prefill_step(params, batch):
+        transformer.set_constrain_hook(constrain)
+        transformer.set_embed_hook(embed_gather)
+        logits, cache, _ = decode_mod.model_prefill(params, batch, config,
+                                                    shape.seq_len, tp)
+        return logits, cache
+
+    return BuiltServeStep(
+        step=prefill_step, abstract_params=params_avals,
+        param_shardings=param_sh, abstract_cache=cache_avals,
+        cache_shardings=cache_sh, input_specs=input_specs,
+        input_shardings=input_shardings, config=config, mesh=mesh,
+        kind="prefill")

@@ -1,0 +1,84 @@
+"""Straggler detection and mitigation.
+
+Paper sec. 5 connects straggler diagnostics with the annealing loop:
+"simple rules of thumb to address stragglers ... could in turn operate in
+concert with simulated annealing, e.g., to 'force' a service-selection
+that likely has more available cores ... especially if such a
+configuration has not been tried in the recent past."
+
+Implemented here:
+  * ``StragglerDetector`` — robust online outlier detection over
+    per-worker step times (median + k*MAD over a sliding window);
+  * ``MitigationPolicy.suggest`` — the paper's rule made concrete: when a
+    persistent straggler is detected, force the annealer's next proposal
+    toward a larger/not-recently-tried configuration (via the Tabu
+    memory's least-recently-tried lookup) and trigger a re-heat; the
+    annealing process "continues to run after such a move".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    n_workers: int
+    window: int = 16
+    k_mad: float = 4.0
+    min_steps: int = 4
+
+    def __post_init__(self) -> None:
+        self._hist: list[deque] = [deque(maxlen=self.window)
+                                   for _ in range(self.n_workers)]
+        self._flags = np.zeros(self.n_workers, np.int32)
+
+    def observe(self, step_times: np.ndarray) -> np.ndarray:
+        """Per-step worker times (n_workers,) -> bool straggler mask."""
+        for i, t in enumerate(step_times):
+            self._hist[i].append(float(t))
+        med = np.median(step_times)
+        mad = np.median(np.abs(step_times - med)) + 1e-9
+        mask = step_times > med + self.k_mad * mad
+        self._flags = np.where(mask, self._flags + 1, 0)
+        return mask
+
+    def persistent(self, threshold: int = 3) -> np.ndarray:
+        """Workers flagged `threshold` consecutive steps."""
+        return self._flags >= threshold
+
+
+@dataclasses.dataclass
+class MitigationPolicy:
+    """Turns persistent stragglers into controller actions."""
+
+    detector: StragglerDetector
+    persist_threshold: int = 3
+
+    def suggest(self, controller) -> dict:
+        """Inspect the detector; possibly force a move on the controller.
+
+        controller: repro.core.procurement.ProcurementController (duck-
+        typed: force_reheat(), tabu, annealer).  Returns an action record.
+        """
+        bad = self.detector.persistent(self.persist_threshold)
+        if not bad.any():
+            return {"action": "none"}
+        # paper sec. 5: prefer a config with more headroom, not recently
+        # tried; re-heat so the chain keeps exploring afterwards
+        action = {"action": "reheat", "stragglers": bad.nonzero()[0].tolist()}
+        controller.force_reheat()
+        tabu = getattr(controller, "tabu", None)
+        annealer = getattr(controller, "annealer", None)
+        if tabu is not None and annealer is not None:
+            cands = annealer.nbhd.neighbors(annealer.state)
+            # bias toward *larger* clusters (more headroom) among the
+            # not-recently-tried neighbors, per the paper's rule
+            bigger = [c for c in cands if sum(c) > sum(annealer.state)]
+            pool = bigger or cands
+            if pool:
+                action["suggested_state"] = tabu.least_recently_tried(pool)
+        return action

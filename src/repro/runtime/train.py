@@ -1,0 +1,298 @@
+"""Train-step builder: model forward + sharded loss + ZeRO-1 AdamW.
+
+``build_train_step`` assembles the jit-able step for one (arch x shape x
+mesh) cell, with the annealable knobs (microbatches, remat, compression)
+taken from :class:`TrainStepOptions` — the procurement controller's TPU
+configuration space maps 1:1 onto these options.
+
+Schedule (all derived from shardings, no hand-written collectives):
+  1. microbatch scan: per-microbatch grads are accumulated in fp32 into a
+     ZeRO-sharded (data-axis-partitioned) accumulator — XLA emits a
+     reduce-scatter per microbatch, overlapping grad sync with the next
+     microbatch's compute (the classic overlap trick);
+  2. optional int8 error-feedback compression roundtrip (cross-pod DCN
+     traffic model — see optim/compression.py for deployment notes);
+  3. AdamW on the ZeRO shard; updated params are all-gathered back to
+     their TP layout by the out_sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.common import split_boxes
+from repro.optim.compression import apply_error_feedback, compress_tree, \
+    dequantize_int8
+from repro.optim.optimizer import AdamWConfig, OptState, adamw_init, \
+    adamw_update, cosine_schedule
+from .loss import softmax_xent
+from .partitioning import (
+    ACT_RULES_TRAIN,
+    ACT_RULES_TRAIN_FSDP,
+    PARAM_RULES,
+    PARAM_RULES_FSDP,
+    make_constrain,
+    make_embed_gather,
+    param_specs,
+    spec_shardable,
+    tensor_parallel_degree,
+    zero_spec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepOptions:
+    """The annealable knobs (mirrors core.state.ClusterConfig)."""
+
+    microbatches: int = 1
+    remat: str | None = None          # None -> config default
+    compression: str = "none"         # "none" | "int8"
+    layout: str | None = None         # None -> config.layout (sec. Perf)
+    accum_dtype: str | None = None    # None -> config.grad_accum_dtype
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    lr_warmup: int = 100
+    lr_total: int = 10_000
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    residual: Any     # error-feedback residual tree (or None)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.residual), None),
+    lambda _, ch: TrainState(params=ch[0], opt=ch[1], residual=ch[2]),
+)
+
+
+@dataclasses.dataclass
+class BuiltTrainStep:
+    """Everything the launcher / dry-run needs for one train cell."""
+
+    step: Callable[[TrainState, dict], tuple[TrainState, dict]]
+    init: Callable[[jax.Array], TrainState]          # key -> TrainState
+    abstract_state: TrainState                        # ShapeDtypeStructs
+    state_shardings: TrainState                       # NamedShardings
+    batch_shardings: dict[str, NamedSharding]
+    input_specs: dict[str, jax.ShapeDtypeStruct]
+    config: ModelConfig
+    mesh: Mesh
+
+    def jit(self) -> Any:
+        return jax.jit(
+            self.step,
+            in_shardings=(self.state_shardings, self.batch_shardings),
+            out_shardings=(self.state_shardings, None),
+            donate_argnums=(0,),
+        )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    present = tuple(a for a in batch_axes if a in mesh.shape)
+    return P(present if len(present) > 1 else present[0]) if present else P()
+
+
+def make_input_specs(config: ModelConfig, shape: ShapeConfig,
+                     ) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the training batch (dry-run safe)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if config.family == "encdec":
+        specs["audio_embed"] = jax.ShapeDtypeStruct(
+            (B, config.enc_seq, config.d_model), jnp.bfloat16)
+    if config.family == "vlm":
+        specs["patch_embed"] = jax.ShapeDtypeStruct(
+            (B, config.n_img_tokens, config.d_model), jnp.bfloat16)
+    return specs
+
+
+def synthesize_batch(key: jax.Array, specs: dict) -> dict:
+    """Concrete random batch matching input specs (smoke tests/examples)."""
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, 128, s.dtype)
+        else:
+            out[name] = 0.02 * jax.random.normal(k, s.shape, jnp.float32
+                                                 ).astype(s.dtype)
+    return out
+
+
+def build_train_step(
+    config: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    options: TrainStepOptions | None = None,
+) -> BuiltTrainStep:
+    if options is None:
+        options = TrainStepOptions(
+            microbatches=config.microbatches.get(shape.name, 1),
+            adamw=AdamWConfig(state_dtype=config.opt_state_dtype))
+    if options.remat is not None:
+        config = dataclasses.replace(config, remat=options.remat)
+    accum_name = options.accum_dtype or config.grad_accum_dtype
+    accum_dtype = (jnp.bfloat16 if accum_name == "bfloat16"
+                   else jnp.float32)
+    tp = tensor_parallel_degree(mesh)
+    layout = options.layout or config.layout
+    # fsdp shards batch over every mesh axis: fall back when rows don't
+    # divide (host meshes, reduced smoke configs)
+    n_dev = mesh.devices.size
+    if layout == "fsdp" and (shape.global_batch % (n_dev * max(
+            options.microbatches, 1)) and shape.global_batch % n_dev):
+        layout = "megatron"
+    prules = PARAM_RULES_FSDP if layout == "fsdp" else PARAM_RULES
+    arules = (ACT_RULES_TRAIN_FSDP if layout == "fsdp"
+              else ACT_RULES_TRAIN)
+    constrain = make_constrain(mesh, arules)
+    embed_gather = make_embed_gather(mesh, {**prules, **arules})
+    lr_fn = cosine_schedule(options.adamw.lr, options.lr_warmup,
+                            options.lr_total)
+
+    # ---- abstract params and shardings --------------------------------
+    boxes = transformer.abstract_model(config, tp)
+    params_avals, _ = split_boxes(boxes)
+    pspecs = param_specs(boxes, mesh, prules)         # P tree, value-shaped
+    zspecs = jax.tree.map(
+        lambda s, p: zero_spec(p.shape, s, mesh), pspecs, params_avals)
+
+    def shardings_of(specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    param_sh = shardings_of(pspecs)
+    zero_sh = shardings_of(zspecs)
+    repl = NamedSharding(mesh, P())
+
+    residual_avals = (
+        jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                     params_avals)
+        if options.compression == "int8" else None)
+    abstract_state = TrainState(
+        params=params_avals,
+        opt=OptState(
+            m=jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    p.shape,
+                    jnp.bfloat16 if options.adamw.state_dtype == "bfloat16"
+                    else jnp.float32),
+                params_avals),
+            v=jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    p.shape,
+                    jnp.bfloat16 if options.adamw.state_dtype == "bfloat16"
+                    else jnp.float32),
+                params_avals),
+            count=jax.ShapeDtypeStruct((), jnp.int32)),
+        residual=residual_avals,
+    )
+    state_shardings = TrainState(
+        params=param_sh,
+        opt=OptState(m=zero_sh, v=zero_sh, count=repl),
+        residual=(zero_sh if options.compression == "int8" else None),
+    )
+
+    from .partitioning import logical_to_physical
+    bphys = logical_to_physical(("batch",), arules, mesh)
+    input_specs = make_input_specs(config, shape)
+    batch_shardings = {
+        k: NamedSharding(mesh, spec_shardable(
+            v.shape, P(*(tuple(bphys) + (None,) * (len(v.shape) - 1))),
+            mesh))
+        for k, v in input_specs.items()
+    }
+
+    # ---- loss over one microbatch --------------------------------------
+    def loss_fn(params, mb):
+        transformer.set_constrain_hook(constrain)
+        transformer.set_embed_hook(embed_gather)
+        hidden, aux = transformer.model_fwd(params, mb, config, tp)
+        logits = transformer.logits_fn(params, hidden)
+        loss, metrics = softmax_xent(logits, mb["labels"],
+                                     z_loss=max(config.z_loss, 1e-4))
+        return loss + aux, {**metrics, "aux": aux}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_zero(grads):
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, spec_shardable(g.shape, s, mesh))),
+            grads, zspecs)
+
+    # ---- the step -------------------------------------------------------
+    def train_step(state: TrainState, batch: dict):
+        transformer.set_constrain_hook(constrain)
+        k = options.microbatches
+        if k <= 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = constrain_zero(
+                jax.tree.map(lambda g: g.astype(accum_dtype), grads))
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % k == 0, (B, k)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, B // k) + x.shape[1:]), batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            acc0 = constrain_zero(acc0)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: (a.astype(jnp.float32)
+                                   + gi.astype(jnp.float32) / k
+                                   ).astype(accum_dtype), acc, g)
+                return constrain_zero(acc), (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, acc0, mbs)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        residual = state.residual
+        if options.compression == "int8":
+            fed = apply_error_feedback(grads, residual)
+            qtree, residual = compress_tree(fed)
+            grads = jax.tree.map(
+                lambda qs, g: dequantize_int8(qs[0], qs[1], jnp.float32),
+                qtree, grads,
+                is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+            residual = constrain_zero(residual)
+
+        lr = lr_fn(state.opt.count)
+        new_params, new_opt = adamw_update(
+            grads, state.opt, state.params, options.adamw, lr=lr)
+        metrics = {**metrics, "loss": loss, "lr": lr,
+                   "step": new_opt.count.astype(jnp.float32)}
+        return TrainState(new_params, new_opt, residual), metrics
+
+    # ---- concrete init (smoke tests / examples) -------------------------
+    def init(key: jax.Array) -> TrainState:
+        transformer.set_constrain_hook(lambda x, *a: x)
+        transformer.set_embed_hook(None)
+        boxes_c = transformer.init_model(key, config, tp)
+        params, _ = split_boxes(boxes_c)
+        res = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if options.compression == "int8" else None)
+        return TrainState(params, adamw_init(params, options.adamw), res)
+
+    return BuiltTrainStep(
+        step=train_step, init=init,
+        abstract_state=abstract_state, state_shardings=state_shardings,
+        batch_shardings=batch_shardings, input_specs=input_specs,
+        config=config, mesh=mesh,
+    )

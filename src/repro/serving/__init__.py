@@ -1,0 +1,3 @@
+from .engine import Request, RequestResult, ServeEngine
+
+__all__ = ["Request", "RequestResult", "ServeEngine"]

@@ -1,0 +1,7 @@
+"""Analysis tooling: HLO collective parsing and the three-term roofline."""
+
+from .hlo import CollectiveStats, collect_collectives
+from .roofline import HW, RooflineReport, roofline_from_compiled
+
+__all__ = ["CollectiveStats", "collect_collectives", "HW",
+           "RooflineReport", "roofline_from_compiled"]

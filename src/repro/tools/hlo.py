@@ -1,0 +1,478 @@
+"""HLO cost analysis: flops / HBM bytes / collective traffic with loop
+trip-count accounting.
+
+``compiled.cost_analysis()`` counts while-loop bodies at most once, which
+makes it useless for scan-over-layers programs (the entire model lives in
+a while body).  This module parses the post-partitioning optimized HLO
+(``compiled.as_text()``) into computations + a call graph and aggregates:
+
+  * flops       — 2 * |out| * |contracting| per dot, traversing fusion
+                  bodies, times the product of enclosing while trip counts
+                  (`known_trip_count` backend config);
+  * hbm bytes   — for every materializing op (anything except plumbing:
+                  parameter/constant/tuple/gte/bitcast) at computation
+                  top level: result bytes + operand bytes.  Fusion bodies
+                  are *not* traversed for bytes — a fusion reads its
+                  operands and writes its result once, that is the point
+                  of fusion;
+  * collectives — per-kind tensor bytes and ring-adjusted wire bytes
+                  (all-reduce 2(n-1)/n, gather/all-to-all (n-1)/n,
+                  reduce-scatter (n-1) x out, permute 1), same trip-count
+                  multipliers.
+
+All quantities are per-device (the partitioned module is the per-device
+program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_PLUMBING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+    "custom-call",  # CPU oneDNN markers etc.; real compute shows as dot
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_type(tstr: str) -> list[tuple[str, tuple[int, ...]]]:
+    """'(f32[2,3], bf16[4])' or 'f32[2,3]' -> [(dtype, dims), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(tstr):
+        dt, dims = m.groups()
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(tstr: str) -> int:
+    total = 0
+    for dt, shape in _parse_type(tstr):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: tuple[str, ...]
+    attrs: str                     # everything after the operand list
+    is_root: bool = False
+    raw_operands: str = ""         # unparsed operand text (parameter index)
+
+
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)"
+    r"\((.*?)\)(.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(|\.)")
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op] = dataclasses.field(default_factory=list)
+    is_fusion: bool = False
+
+    def symbol_table(self) -> dict[str, str]:
+        return {op.name: op.result_type for op in self.ops}
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    current: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        stripped = line.strip()
+        # computation header: "%name (args) -> type {" possibly "ENTRY ..."
+        if stripped.endswith("{") and "->" in stripped and "(" in stripped:
+            m = _COMP_HEADER_RE.match(stripped.lstrip("%"))
+            name = stripped.split("(")[0].replace("ENTRY", "").strip()
+            name = name.lstrip("%").strip()
+            current = Computation(
+                name=name, is_fusion="fused" in name or "computation" in name)
+            comps[name] = current
+            if stripped.startswith("ENTRY"):
+                entry = name
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        root, name, rtype, kind, operand_str, attrs = m.groups()
+        operands = tuple(_OPERAND_RE.findall(operand_str))
+        current.ops.append(Op(name, kind, rtype, operands, attrs,
+                              is_root=bool(root), raw_operands=operand_str))
+    # fusion detection refinement: a computation is "fusion-internal" iff it
+    # is referenced by a fusion op's calls=
+    fusion_called: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                mm = _CALL_ATTR_RE.search(op.attrs)
+                if mm:
+                    fusion_called.add(mm.group(1))
+    for name, comp in comps.items():
+        comp.is_fusion = name in fusion_called
+    return comps, entry
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out = _parse_type(op.result_type)
+    if not out:
+        return 0.0
+    n_out = 1
+    for d in out[0][1]:
+        n_out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * n_out  # dot with no contraction info
+    lhs_t = symbols.get(op.operands[0])
+    if lhs_t is None:
+        return 2.0 * n_out
+    lhs = _parse_type(lhs_t)
+    if not lhs:
+        return 2.0 * n_out
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs[0][1]):
+            k *= lhs[0][1][idx]
+    return 2.0 * n_out * k
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    # rare in this codebase; approximate as 2 * |out| * |kernel|/out_ch
+    out = _parse_type(op.result_type)
+    rhs_t = symbols.get(op.operands[1]) if len(op.operands) > 1 else None
+    if not out or rhs_t is None:
+        return 0.0
+    n_out = 1
+    for d in out[0][1]:
+        n_out *= d
+    k = 1
+    for d in _parse_type(rhs_t)[0][1]:
+        k *= d
+    och = out[0][1][-1] if out[0][1] else 1
+    return 2.0 * n_out * k / max(och, 1)
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_BRACKET_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_wire_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_wire_bytes.items():
+            self.coll_wire_bytes[k] += v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.coll_wire_bytes.values()))
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "counts": {k: float(v) for k, v in self.coll_counts.items()},
+            "bytes": {k: float(v) for k, v in self.coll_bytes.items()},
+            "wire_bytes": {k: float(v)
+                           for k, v in self.coll_wire_bytes.items()},
+            "total_bytes": self.total_coll_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+_SLICE_KINDS = {"dynamic-slice", "gather", "slice"}
+_PASSTHRU_KINDS = {"bitcast", "get-tuple-element", "reshape", "copy",
+                   "transpose", "convert"}
+
+
+def _fusion_effective_bytes(comp: Computation, call_op: Op,
+                            caller_symbols: dict[str, str]) -> float:
+    """HBM bytes of one fusion execution: effective reads + writes.
+
+    A fusion parameter consumed only through (chains of) slice ops is read
+    at the slice size, not the full buffer size (scan-over-layers reads a
+    (1, ...) slab of the (L, ...) stacked params per iteration).  A root
+    dynamic-update-slice writes only the update region (in-place scan
+    output append).
+    """
+    symbols = comp.symbol_table()
+    consumers: dict[str, list[Op]] = {}
+    for o in comp.ops:
+        for x in o.operands:
+            consumers.setdefault(x, []).append(o)
+
+    def effective_read(name: str, full: float, depth: int = 0) -> float:
+        cons = consumers.get(name, [])
+        if not cons or depth > 4:
+            return full
+        total = 0.0
+        for c in cons:
+            if c.kind in _SLICE_KINDS:
+                total += _bytes_of(c.result_type)
+            elif c.kind == "dynamic-update-slice" and c.operands and \
+                    c.operands[0] == name:
+                total += 0.0   # in-place slab write: buffer is not read
+            elif c.kind in _PASSTHRU_KINDS:
+                total += effective_read(c.name, full, depth + 1)
+            else:
+                return full
+        return min(full, total)
+
+    reads = 0.0
+    for o in comp.ops:
+        if o.kind != "parameter":
+            continue
+        try:
+            idx = int(o.raw_operands.strip())
+        except ValueError:
+            idx = -1
+        full = None
+        if 0 <= idx < len(call_op.operands):
+            t = caller_symbols.get(call_op.operands[idx])
+            if t is not None:
+                full = _bytes_of(t)
+        if full is None:
+            full = _bytes_of(o.result_type)
+        reads += effective_read(o.name, float(full))
+
+    def write_bytes(op: Op) -> float:
+        if op.kind == "dynamic-update-slice" and len(op.operands) > 1:
+            upd = symbols.get(op.operands[1])
+            if upd is not None:
+                return float(_bytes_of(upd))
+        if op.kind == "tuple":
+            return sum(write_bytes_by_name(x) for x in op.operands)
+        return float(_bytes_of(op.result_type))
+
+    def write_bytes_by_name(name: str) -> float:
+        for o in comp.ops:
+            if o.name == name:
+                return write_bytes(o)
+        return 0.0
+
+    root = next((o for o in comp.ops if o.is_root), None)
+    writes = write_bytes(root) if root is not None else float(
+        _bytes_of(call_op.result_type))
+    return reads + writes
+
+
+def _collective_kind(kind: str) -> str | None:
+    base = kind
+    for suffix in ("-start", "-done"):
+        if base.endswith(suffix):
+            base = base[: -len(suffix)]
+    return base if base in COLLECTIVE_KINDS else None
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: dict[str, HloCost] = {}
+
+    def cost(self, comp_name: str | None = None) -> HloCost:
+        name = comp_name or self.entry
+        if name is None or name not in self.comps:
+            return HloCost()
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = HloCost()   # cycle guard
+        comp = self.comps[name]
+        symbols = comp.symbol_table()
+        total = HloCost()
+        for op in comp.ops:
+            # ---- own compute ----
+            if op.kind == "dot":
+                total.flops += _dot_flops(op, symbols)
+            elif op.kind == "convolution":
+                total.flops += _conv_flops(op, symbols)
+            # ---- own bytes (materializing ops at top level only) ----
+            if (op.kind == "fusion" and not comp.is_fusion):
+                mm = _CALL_ATTR_RE.search(op.attrs)
+                child = self.comps.get(mm.group(1)) if mm else None
+                if child is not None:
+                    total.hbm_bytes += _fusion_effective_bytes(
+                        child, op, symbols)
+                else:
+                    total.hbm_bytes += _bytes_of(op.result_type)
+            elif (op.kind not in _PLUMBING and not comp.is_fusion
+                    and not op.kind.endswith("-done")
+                    and op.kind not in ("while", "conditional", "call")):
+                if op.kind in ("dynamic-slice", "gather"):
+                    # reads only the sliced/gathered rows, writes them
+                    b = 2 * _bytes_of(op.result_type)
+                elif op.kind in ("dynamic-update-slice", "scatter"):
+                    # in-place: reads + writes only the update region
+                    upd = (symbols.get(op.operands[1])
+                           if len(op.operands) > 1 else None)
+                    b = 2 * (_bytes_of(upd) if upd else
+                             _bytes_of(op.result_type))
+                elif op.kind == "broadcast":
+                    b = _bytes_of(op.result_type)
+                else:
+                    b = _bytes_of(op.result_type)
+                    for o in op.operands:
+                        t = symbols.get(o)
+                        if t is not None:
+                            b += _bytes_of(t)
+                total.hbm_bytes += b
+            # ---- collectives ----
+            ckind = _collective_kind(op.kind)
+            if ckind is not None and not op.kind.endswith("-done"):
+                rb = _bytes_of(op.result_type)
+                n = _group_size(op.attrs)
+                total.coll_counts[ckind] += 1
+                total.coll_bytes[ckind] += rb
+                total.coll_wire_bytes[ckind] += (
+                    rb * _WIRE_FACTOR[ckind](max(n, 2)))
+            # ---- called computations ----
+            if op.kind == "while":
+                trips = 1
+                mt = _TRIP_RE.search(op.attrs)
+                if mt:
+                    trips = int(mt.group(1))
+                for key in ("body", "condition"):
+                    mm = re.search(rf"{key}=%?([\w\.\-]+)", op.attrs)
+                    if mm:
+                        total.add(self.cost(mm.group(1)),
+                                  trips if key == "body" else trips + 1)
+            elif op.kind == "fusion":
+                mm = _CALL_ATTR_RE.search(op.attrs)
+                if mm:
+                    child = self.cost(mm.group(1))
+                    # flops + collectives from inside; bytes counted at
+                    # the call site above
+                    partial = HloCost(flops=child.flops,
+                                      coll_counts=child.coll_counts,
+                                      coll_bytes=child.coll_bytes,
+                                      coll_wire_bytes=child.coll_wire_bytes)
+                    total.add(partial)
+            elif op.kind in ("call", "conditional", "async-start",
+                             "custom-call", "reduce", "sort", "map",
+                             "reduce-window", "scatter", "select-and-scatter",
+                             "all-reduce", "reduce-scatter"):
+                if op.kind == "conditional":
+                    mb = _BRANCH_RE.search(op.attrs)
+                    if mb:
+                        branches = _OPERAND_RE.findall(mb.group(1))
+                        if branches:
+                            # worst case: the most expensive branch
+                            costs = [self.cost(b) for b in branches]
+                            total.add(max(costs, key=lambda c: c.flops))
+                else:
+                    mm = _CALL_ATTR_RE.search(op.attrs)
+                    if mm and mm.group(1) in self.comps:
+                        # to_apply reducers are scalar computations: cheap,
+                        # but call/async bodies matter
+                        if op.kind in ("call", "async-start"):
+                            total.add(self.cost(mm.group(1)))
+        self._memo[name] = total
+        return total
+
+
+def analyze_hlo(text: str) -> HloCost:
+    return HloAnalyzer(text).cost()
+
+
+# Back-compat shim for the earlier API --------------------------------------
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict
+    bytes_by_kind: dict
+    wire_bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes_by_kind.values()))
+
+    def summary(self) -> dict:
+        return {
+            "counts": dict(self.ops),
+            "bytes": dict(self.bytes_by_kind),
+            "wire_bytes": dict(self.wire_bytes_by_kind),
+            "total_bytes": self.total_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def collect_collectives(hlo_text: str) -> CollectiveStats:
+    cost = analyze_hlo(hlo_text)
+    return CollectiveStats(
+        ops=dict(cost.coll_counts),
+        bytes_by_kind=dict(cost.coll_bytes),
+        wire_bytes_by_kind=dict(cost.coll_wire_bytes),
+    )

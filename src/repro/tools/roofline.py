@@ -1,0 +1,228 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_flops_per_device / peak_flops
+    memory     = HLO_bytes_per_device / hbm_bw
+    collective = wire_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` on the SPMD-partitioned executable reports
+per-device flops / bytes accessed; collective wire bytes come from
+tools/hlo.py over ``compiled.as_text()``.  The bound is the max term; the
+reported roofline fraction is useful_model_time / bound where
+useful_model_time = MODEL_FLOPS_per_device / peak (MODEL_FLOPS = 6 N D,
+or 6 N_active D for MoE; decode: 2 N_active per token).  Conventions and
+the validation spike are in DESIGN.md sec. 6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from .hlo import CollectiveStats, collect_collectives
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (assignment-specified)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    link_bw: float = 50e9             # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float                 # raw collective tensor bytes
+    coll_wire_bytes: float            # ring-adjusted wire bytes
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # usefulness
+    model_flops_global: float
+    model_flops_per_device: float
+    useful_s: float
+    # memory footprint
+    bytes_per_device: float | None = None
+    collectives: dict | None = None
+    note: str = ""
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        return self.useful_s / self.step_s if self.step_s > 0 else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-device): remat/padding/dispatch waste."""
+        return (self.model_flops_per_device / self.flops
+                if self.flops > 0 else 0.0)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(bound=self.bound, step_s=self.step_s,
+                 roofline_fraction=self.roofline_fraction,
+                 flops_ratio=self.flops_ratio)
+        return d
+
+    def row(self) -> str:
+        return (f"{self.arch:26s} {self.shape:12s} {self.mesh:10s} "
+                f"c={self.compute_s*1e3:9.3f}ms m={self.memory_s*1e3:9.3f}ms "
+                f"coll={self.collective_s*1e3:9.3f}ms bound={self.bound:10s} "
+                f"useful/bound={self.roofline_fraction:6.1%} "
+                f"model/hlo_flops={self.flops_ratio:5.2f}")
+
+
+def model_flops(config, shape) -> float:
+    """MODEL_FLOPS for the cell: 6 N D (train), 2 N D (prefill),
+    2 N B per decoded token (decode) — N = active params."""
+    n_active = config.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch      # decode: one token
+
+
+def roofline_from_compiled(
+    compiled: Any, *, arch: str, shape: Any, mesh_name: str, chips: int,
+    config: Any = None, hw: HW = HW(), hlo_text: str | None = None,
+) -> RooflineReport:
+    from .hlo import analyze_hlo
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze_hlo(text)            # trip-count-aware per-device cost
+    flops = hc.flops
+    hbm = hc.hbm_bytes
+    coll = CollectiveStats(ops=dict(hc.coll_counts),
+                           bytes_by_kind=dict(hc.coll_bytes),
+                           wire_bytes_by_kind=dict(hc.coll_wire_bytes))
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                    ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+
+    mf = model_flops(config, shape) if config is not None else 0.0
+    mf_dev = mf / chips
+    return RooflineReport(
+        arch=arch, shape=getattr(shape, "name", str(shape)), mesh=mesh_name,
+        chips=chips,
+        flops=flops, hbm_bytes=hbm,
+        coll_bytes=coll.total_bytes, coll_wire_bytes=coll.total_wire_bytes,
+        compute_s=flops / hw.peak_flops,
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=coll.total_wire_bytes / hw.link_bw,
+        model_flops_global=mf, model_flops_per_device=mf_dev,
+        useful_s=mf_dev / hw.peak_flops,
+        bytes_per_device=mem,
+        collectives=coll.summary(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash-kernel adjustment (stub-attention calibration; DESIGN.md sec. 6).
+# ---------------------------------------------------------------------------
+
+
+def flash_io_bytes(config, shape, dp: int, tp: int,
+                   block_q: int = 512) -> float:
+    """Analytic per-device HBM bytes of Pallas flash attention for the cell.
+
+    The kernel streams q once, writes o once, and re-streams k/v once per
+    q block within the attended span (causal: the average half-span;
+    window: own+previous block; chunk: own block).  Training multiplies by
+    ~4 (forward + remat recompute + backward's re-reads and dq/dk/dv
+    writes); prefill runs forward only.
+    """
+    from repro.configs.base import ModelConfig  # noqa: F401 (doc)
+    from repro.models.attention import AttnSpec
+
+    from repro.models.common import padded_heads as _ph
+
+    if shape.kind == "decode":
+        # flash-decode streams each attention layer's k+v cache once per
+        # token; bounded-window layers hold only their window
+        from repro.models.decode import cache_window as _cw
+        b_loc = max(shape.global_batch / dp, 1.0)
+        k_loc = max(_ph(config.n_kv_heads, tp) / tp, 1.0)
+        total = 0.0
+        for lk in config.layers:
+            if lk.kind not in ("dense", "moe", "enc", "encdec"):
+                continue
+            W = _cw(lk, shape.seq_len)
+            if shape.global_batch == 1:        # long ctx: seq over "data"
+                W = W / dp if W == shape.seq_len else W
+            total += 2.0 * b_loc * W * k_loc * config.head_dim * 2
+            if lk.kind == "encdec":
+                total += 2.0 * b_loc * config.enc_seq * k_loc                     * config.head_dim * 2
+        return total
+    tokens_dev = shape.global_batch * shape.seq_len / dp
+    S = shape.seq_len
+    total = 0.0
+    for lk in config.layers:
+        if lk.kind not in ("dense", "moe", "enc", "encdec"):
+            continue
+        from repro.models.common import padded_heads
+        h_loc = padded_heads(config.n_heads, tp) / tp
+        k_loc = padded_heads(config.n_kv_heads, tp) / tp
+        hd = config.head_dim
+        n_q = max(1, S // block_q)
+        if lk.attn == "window" and lk.window > 0:
+            reread = 2.0
+        elif lk.attn == "chunk" and lk.window > 0:
+            reread = max(1.0, lk.window / block_q)
+        else:  # causal / bidir
+            reread = (n_q + 1) / 2.0
+        qo = 2.0 * tokens_dev * h_loc * hd * 2          # q read + o write
+        kv = 2.0 * tokens_dev * k_loc * hd * 2 * reread  # k+v streams
+        cross = 0.0
+        if lk.kind == "encdec":                          # cross attention
+            enc_dev = shape.global_batch * config.enc_seq / dp
+            cross = (2.0 * tokens_dev * h_loc * hd * 2
+                     + 2.0 * enc_dev * k_loc * hd * 2)
+        total += qo + kv + cross
+    factor = 4.0 if shape.kind == "train" else 1.0
+    return total * factor
+
+
+def flash_adjusted(real: RooflineReport, stub: RooflineReport, config,
+                   shape, dp: int, tp: int, hw: HW = HW()) -> RooflineReport:
+    """Roofline with the score/softmax HBM traffic replaced by the Pallas
+    flash kernel's streaming IO.  FLOPs and collectives come from the real
+    module (the kernel does the same math on the MXU)."""
+    fio = flash_io_bytes(config, shape, dp, tp)
+    mem = stub.hbm_bytes + fio
+    return dataclasses.replace(
+        real,
+        hbm_bytes=mem,
+        memory_s=mem / hw.hbm_bw,
+        note=(f"flash-adjusted: stub_hbm={stub.hbm_bytes:.3e} "
+              f"flash_io={fio:.3e} score_traffic="
+              f"{max(real.hbm_bytes - stub.hbm_bytes, 0.0):.3e}"),
+    )
+
+
+def save_report(report: RooflineReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

@@ -1,0 +1,10 @@
+from .simulator import (
+    Arrival,
+    JobStream,
+    PoissonArrivals,
+    QueueSimulator,
+    blended_stream,
+)
+
+__all__ = ["Arrival", "JobStream", "PoissonArrivals", "QueueSimulator",
+           "blended_stream"]

@@ -1,0 +1,119 @@
+"""Job streams, blends, arrival processes and the sojourn-time queue.
+
+Paper constructs reproduced here:
+  * a *job stream* of blended types (sec. 3): each arriving job is drawn
+    from the blend distribution alpha (which may change mid-stream,
+    sec. 4.3);
+  * *jobs executed in parallel* with a queue (sec. 4.2.2): a single-server
+    (cluster) queue where the objective measures sojourn = wait + service
+    time instead of bare execution time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Iterator, Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    n: int
+    job: str
+    t: float            # arrival time (seconds)
+
+
+class JobStream:
+    """Deterministic stream of blended job types (paper sec. 3)."""
+
+    def __init__(self, blend: Mapping[str, float], seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+        self.set_blend(blend)
+        self.n = 0
+
+    def set_blend(self, blend: Mapping[str, float]) -> None:
+        names = list(blend)
+        w = np.asarray([blend[k] for k in names], np.float64)
+        self._names, self._w = names, w / w.sum()
+
+    def __iter__(self) -> Iterator[str]:
+        return self
+
+    def __next__(self) -> str:
+        job = self._names[int(self._rng.choice(len(self._names),
+                                               p=self._w))]
+        self.n += 1
+        return job
+
+
+def blended_stream(blend_before: Mapping[str, float],
+                   blend_after: Mapping[str, float],
+                   change_at: int, n_jobs: int, seed: int = 0
+                   ) -> list[str]:
+    """The sec. 4.3 experiment stream: blend changes at job `change_at`."""
+    s = JobStream(blend_before, seed)
+    out = []
+    for i in range(n_jobs):
+        if i == change_at:
+            s.set_blend(blend_after)
+        out.append(next(s))
+    return out
+
+
+class PoissonArrivals:
+    """Poisson arrival process over a JobStream."""
+
+    def __init__(self, stream: JobStream, rate_per_s: float, seed: int = 0):
+        self.stream = stream
+        self.rate = float(rate_per_s)
+        self._rng = np.random.default_rng(seed + 1)
+        self._t = 0.0
+        self._n = 0
+
+    def __iter__(self) -> Iterator[Arrival]:
+        return self
+
+    def __next__(self) -> Arrival:
+        self._t += float(self._rng.exponential(1.0 / self.rate))
+        a = Arrival(n=self._n, job=next(self.stream), t=self._t)
+        self._n += 1
+        return a
+
+
+@dataclasses.dataclass
+class Completion:
+    arrival: Arrival
+    start_t: float
+    finish_t: float
+
+    @property
+    def sojourn_s(self) -> float:
+        return self.finish_t - self.arrival.t
+
+
+class QueueSimulator:
+    """Single-server FIFO queue over a service-time function.
+
+    ``service_time(job_name) -> seconds`` is evaluated under the *current*
+    cluster configuration (the annealer changes it between jobs); the
+    measured objective input is the sojourn time (paper sec. 4.2.2).
+    """
+
+    def __init__(self, service_time: Callable[[str], float]):
+        self.service_time = service_time
+
+    def run(self, arrivals: list[Arrival]) -> list[Completion]:
+        completions = []
+        free_at = 0.0
+        for a in sorted(arrivals, key=lambda a: a.t):
+            start = max(a.t, free_at)
+            finish = start + float(self.service_time(a.job))
+            free_at = finish
+            completions.append(Completion(a, start, finish))
+        return completions
+
+    def mean_sojourn(self, arrivals: list[Arrival]) -> float:
+        cs = self.run(arrivals)
+        return float(np.mean([c.sojourn_s for c in cs])) if cs else 0.0

@@ -1,0 +1,181 @@
+"""Annealing chain: acceptance rule, landscape escape, temperature laws.
+
+Validates the paper's core claims P1/P2/P4 (DESIGN.md sec. 1) on the
+synthetic landscapes, plus unit properties of the heat-bath rule.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Annealer,
+    acceptance_probability,
+    anneal_chain,
+    anneal_chain_dynamic,
+    bimodal_landscape,
+    changed_landscape,
+    first_hit_time,
+    jobs_to_min_vs_tau,
+)
+from repro.core.neighborhood import StepNeighborhood
+from repro.core.state import ConfigSpace, Dimension
+
+
+# ---------------------------------------------------------------------------
+# Heat-bath acceptance rule (paper sec. 2.2 / 3).
+# ---------------------------------------------------------------------------
+
+
+@given(dy=st.floats(-1e6, 1e6, allow_nan=False),
+       tau=st.floats(1e-6, 1e6, allow_nan=False))
+def test_acceptance_in_unit_interval(dy, tau):
+    p = acceptance_probability(dy, tau)
+    assert 0.0 <= p <= 1.0
+
+
+@given(dy=st.floats(-1e6, 0, allow_nan=False),
+       tau=st.floats(1e-6, 1e6))
+def test_improvements_always_accepted(dy, tau):
+    assert acceptance_probability(dy, tau) == 1.0
+
+
+@given(dy=st.floats(1e-3, 1e3), tau1=st.floats(1e-3, 1e3),
+       tau2=st.floats(1e-3, 1e3))
+def test_acceptance_monotone_in_temperature(dy, tau1, tau2):
+    """Higher tau -> more exploration (paper sec. 2.2)."""
+    lo, hi = sorted([tau1, tau2])
+    assert (acceptance_probability(dy, lo)
+            <= acceptance_probability(dy, hi) + 1e-12)
+
+
+@given(dy1=st.floats(0.0, 1e3), dy2=st.floats(0.0, 1e3),
+       tau=st.floats(1e-3, 1e3))
+def test_acceptance_monotone_in_objective_increase(dy1, dy2, tau):
+    lo, hi = sorted([dy1, dy2])
+    assert (acceptance_probability(hi, tau)
+            <= acceptance_probability(lo, tau) + 1e-12)
+
+
+def test_zero_temperature_is_pure_exploitation():
+    assert acceptance_probability(0.5, 0.0) == 0.0
+    assert acceptance_probability(-0.5, 0.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# P1: escapes the local minimum of the bimodal landscape (Figs 2-3).
+# ---------------------------------------------------------------------------
+
+
+def test_escapes_local_minimum():
+    y = jnp.asarray(bimodal_landscape(), jnp.float32)
+    local, target = 10, int(np.argmin(y))
+    hits = []
+    for seed in range(8):
+        states, _, _ = anneal_chain(jax.random.key(seed), y, 3000, tau=2.0,
+                                    init=local)
+        hits.append(int(first_hit_time(states, target)) < 3000)
+    assert sum(hits) >= 6, f"escaped only {sum(hits)}/8 chains"
+
+
+def test_zero_ish_temperature_stays_trapped():
+    y = jnp.asarray(bimodal_landscape(), jnp.float32)
+    local, target = 10, int(np.argmin(y))
+    states, _, _ = anneal_chain(jax.random.key(0), y, 2000, tau=1e-4,
+                                init=local)
+    assert int(first_hit_time(states, target)) == 2000, \
+        "greedy descent should not cross the barrier"
+
+
+# ---------------------------------------------------------------------------
+# P2: jobs-to-minimum decreases with temperature (Fig. 4 / Fig. 10).
+# ---------------------------------------------------------------------------
+
+
+def test_jobs_to_min_decreases_with_tau():
+    y = bimodal_landscape()
+    res = jobs_to_min_vs_tau(jax.random.key(1), y,
+                             taus=[0.25, 1.0, 4.0], n_seeds=48,
+                             n_steps=4000, init=0)
+    m = res["mean_jobs"]
+    assert m[0] > m[1] > m[2], m
+    assert res["std_jobs"].shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# P4: exploration events increase with temperature (Fig. 9).
+# ---------------------------------------------------------------------------
+
+
+def test_exploration_rate_monotone_in_tau():
+    y = jnp.asarray(bimodal_landscape(), jnp.float32)
+
+    def rate(tau):
+        states, ys, accepts = anneal_chain(jax.random.key(2), y, 4000, tau)
+        prev = jnp.concatenate([ys[:1], ys[:-1]])
+        explored = accepts & (ys > prev)
+        return float(explored.mean())
+
+    r = [rate(t) for t in (0.25, 1.0, 4.0)]
+    assert r[0] < r[1] < r[2], r
+
+
+# ---------------------------------------------------------------------------
+# Adaptation (Fig. 5): landscape change mid-stream.
+# ---------------------------------------------------------------------------
+
+
+def test_adapts_to_landscape_change():
+    y1 = bimodal_landscape()
+    y2 = changed_landscape()
+    n, change_at = 6000, 2000
+    tables = np.stack([y1 if i < change_at else y2 for i in range(n)])
+    states, _, _ = anneal_chain_dynamic(
+        jax.random.key(3), jnp.asarray(tables, jnp.float32), n, tau=1.0,
+        init=int(np.argmin(y1)))
+    post = np.asarray(states[change_at:])
+    new_target = int(np.argmin(y2))
+    hits = (post == new_target)
+    assert hits.any(), "never found the new optimum after the change"
+    # spends meaningful time near the new optimum afterwards
+    tail = post[len(post) // 2:]
+    assert np.mean(np.abs(tail - new_target) <= 3) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# Online Annealer object (measured mode).
+# ---------------------------------------------------------------------------
+
+
+def _space_1d(n):
+    return ConfigSpace((Dimension("x", tuple(range(n))),))
+
+
+def test_annealer_runs_and_records():
+    y = bimodal_landscape()
+    space = _space_1d(len(y))
+    ann = Annealer(space, StepNeighborhood(space),
+                   evaluate=lambda cfg, n: float(y[cfg["x"]]),
+                   schedule=1.0, seed=0, init=(10,))
+    steps = ann.run(500)
+    assert len(steps) == 500
+    best_state, best_y = ann.best()
+    assert best_y <= float(y[10])
+    assert 0.0 <= ann.exploration_rate() <= 1.0
+
+
+def test_annealer_incumbent_only_changes_on_accept():
+    y = bimodal_landscape()
+    space = _space_1d(len(y))
+    ann = Annealer(space, StepNeighborhood(space),
+                   evaluate=lambda cfg, n: float(y[cfg["x"]]),
+                   schedule=0.5, seed=1, init=(5,))
+    prev = ann.state
+    for rec in ann.run(200):
+        if rec.accepted:
+            assert rec.state == rec.proposed
+        else:
+            assert rec.state == prev
+        prev = rec.state

@@ -1,0 +1,62 @@
+"""P5: at fixed tau the chain's empirical distribution approaches the
+Gibbs distribution prop. to exp(-Y/tau) (paper sec. 2.2).
+
+The heat-bath chain with symmetric +-1 proposals on a ring (uniform
+|nu(x)|) is reversible w.r.t. the Gibbs measure; we check the empirical
+occupation against it with a chi-square-style tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.annealing import anneal_chain
+
+
+def gibbs(y, tau):
+    w = np.exp(-(y - y.min()) / tau)
+    return w / w.sum()
+
+
+def test_gibbs_stationarity_small_ring():
+    # small landscape so the chain mixes quickly
+    rng = np.random.default_rng(0)
+    y = rng.uniform(0.0, 2.0, size=8)
+    tau = 1.0
+    n = 200_000
+
+    # boundary reflection changes |nu| at the ends; embed the landscape
+    # periodically by mirroring so +-1 moves with reflection still target
+    # the Gibbs measure of the mirrored chain.  Simpler: compare against
+    # the *empirical* detailed-balance prediction on interior states.
+    states, _, _ = anneal_chain(jax.random.key(0),
+                                jnp.asarray(y, jnp.float32), n, tau, init=0)
+    states = np.asarray(states[n // 10:])      # burn-in
+    counts = np.bincount(states, minlength=len(y)).astype(np.float64)
+    emp = counts / counts.sum()
+    tgt = gibbs(np.asarray(y), tau)
+
+    # interior states (1..n-2) follow Gibbs up to boundary corrections
+    interior = slice(1, len(y) - 1)
+    emp_i = emp[interior] / emp[interior].sum()
+    tgt_i = tgt[interior] / tgt[interior].sum()
+    tv = 0.5 * np.abs(emp_i - tgt_i).sum()
+    assert tv < 0.08, (tv, emp_i, tgt_i)
+
+
+def test_detailed_balance_transition_ratio():
+    """pi(x) P(x->x') == pi(x') P(x'->x) for the heat-bath rule."""
+    rng = np.random.default_rng(1)
+    y = rng.uniform(0.0, 3.0, size=6)
+    tau = 0.7
+
+    def p_acc(dy):
+        return np.exp(-max(dy, 0.0) / tau)
+
+    pi = gibbs(np.asarray(y), tau)
+    for x in range(1, 5):
+        for xp in (x - 1, x + 1):
+            # uniform proposal over 2 neighbors for interior states
+            lhs = pi[x] * 0.5 * p_acc(y[xp] - y[x])
+            rhs = pi[xp] * 0.5 * p_acc(y[x] - y[xp])
+            np.testing.assert_allclose(lhs, rhs, rtol=1e-10)

@@ -1,0 +1,258 @@
+"""Unit + property tests: state space, neighborhoods, objective, pricing,
+schedules, tabu, change detection."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.change_detect import PageHinkley, WindowedZScore
+from repro.core.neighborhood import (
+    BlockNeighborhood,
+    StepNeighborhood,
+    check_connected,
+)
+from repro.core.objective import BlendedObjective, Measurement, Objective, \
+    blend_from_weights
+from repro.core.pricing import (
+    EC2_CATALOG,
+    EC2_CATALOG_ADJUSTED,
+    TPU_CATALOG,
+    interpolated_family,
+)
+from repro.core.schedules import (
+    AdaptiveReheat,
+    FixedTemperature,
+    GeometricCooling,
+    LogCooling,
+)
+from repro.core.state import ClusterConfig, ConfigSpace, Dimension, \
+    cluster_config_from
+from repro.core.tabu import TabuMemory
+
+
+# ---------------------------------------------------------------------------
+# ConfigSpace encode/decode roundtrip (hypothesis).
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def spaces(draw):
+    n_dims = draw(st.integers(1, 4))
+    dims = tuple(
+        Dimension(f"d{i}", tuple(range(draw(st.integers(2, 6)))))
+        for i in range(n_dims))
+    return ConfigSpace(dims)
+
+
+@given(spaces(), st.data())
+def test_encode_decode_roundtrip(space, data):
+    idx = tuple(data.draw(st.integers(0, len(d) - 1))
+                for d in space.dimensions)
+    cfg = space.decode(idx)
+    assert space.encode(cfg) == idx
+    assert space.contains(idx)
+
+
+@given(spaces())
+@settings(max_examples=25, deadline=None)
+def test_step_neighborhood_connected(space):
+    assert check_connected(space, StepNeighborhood(space))
+
+
+@given(spaces())
+@settings(max_examples=15, deadline=None)
+def test_block_neighborhood_connected(space):
+    assert check_connected(space, BlockNeighborhood(space, max_step=2))
+
+
+def test_neighborhood_excludes_self_and_is_symmetric():
+    space = ConfigSpace((Dimension("a", (0, 1, 2)),
+                         Dimension("b", (0, 1, 2))))
+    nbhd = StepNeighborhood(space)
+    for s in space.valid_states():
+        ns = nbhd.neighbors(s)
+        assert s not in ns
+        for t in ns:
+            assert s in nbhd.neighbors(t)   # reversibility (paper fn 2)
+
+
+def test_validity_predicate_respected():
+    space = ConfigSpace(
+        (Dimension("chips", (8, 16, 32)), Dimension("tp", (1, 2, 4, 8))),
+        is_valid=lambda c: c["chips"] % c["tp"] == 0)
+    nbhd = StepNeighborhood(space)
+    for s in space.valid_states():
+        cfg = space.decode(s)
+        assert cfg["chips"] % cfg["tp"] == 0
+        for t in nbhd.neighbors(s):
+            assert space.contains(t)
+
+
+# ---------------------------------------------------------------------------
+# Objective (paper sec. 3): Y = t + lambda c; blends.
+# ---------------------------------------------------------------------------
+
+
+@given(t=st.floats(0, 1e5), c=st.floats(0, 1e5), lam=st.floats(0, 100))
+def test_objective_formula(t, c, lam):
+    y = Objective(lambda_cost=lam)(Measurement(t, c))
+    assert np.isclose(y, t + lam * c)
+
+
+def test_objective_slo_penalty():
+    obj = Objective(lambda_cost=0.0, slo_s=10.0, slo_penalty=5.0)
+    assert obj(Measurement(8.0, 1.0)) == 8.0
+    assert obj(Measurement(12.0, 1.0)) == 12.0 + 5.0 * 2.0
+
+
+def test_objective_migration_accounting():
+    obj = Objective(lambda_cost=2.0, include_migration=True)
+    y = obj(Measurement(5.0, 1.0, migration_s=3.0, migration_usd=0.5))
+    assert np.isclose(y, (5 + 3) + 2.0 * (1 + 0.5))
+
+
+@given(w=st.lists(st.floats(0.1, 10), min_size=2, max_size=5))
+def test_blend_weights_normalized(w):
+    blend = blend_from_weights({f"j{i}": wi for i, wi in enumerate(w)})
+    assert np.isclose(sum(blend.alphas), 1.0)
+    ms = [Measurement(1.0, 0.0)] * len(w)
+    assert np.isclose(blend(ms), 1.0)
+
+
+def test_blend_reweight():
+    b = blend_from_weights({"a": 1.0, "b": 1.0})
+    b2 = b.reweighted([3.0, 1.0])
+    ms = [Measurement(4.0, 0.0), Measurement(0.0, 0.0)]
+    assert b2(ms) > b(ms)
+
+
+# ---------------------------------------------------------------------------
+# Pricing (paper sec. 4.2).
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_cost_linear_in_cores_and_time():
+    c1 = EC2_CATALOG.cost("general", 10, 3600)
+    assert np.isclose(EC2_CATALOG.cost("general", 20, 3600), 2 * c1)
+    assert np.isclose(EC2_CATALOG.cost("general", 10, 7200), 2 * c1)
+
+
+def test_interpolated_family_between_endpoints():
+    fam = interpolated_family(EC2_CATALOG, "compute", "memory", 0.5)
+    lo = EC2_CATALOG["compute"].price_per_core_hr
+    hi = EC2_CATALOG["memory"].price_per_core_hr
+    assert lo < fam.price_per_core_hr < hi
+
+
+def test_adjusted_catalog_replaces_storage_family():
+    assert (EC2_CATALOG_ADJUSTED["storage"].price_per_core_hr
+            < EC2_CATALOG["storage"].price_per_core_hr)
+
+
+def test_tpu_catalog_spot_cheaper_and_revocable():
+    assert TPU_CATALOG["v5e-spot"].price_per_core_hr \
+        < TPU_CATALOG["v5e"].price_per_core_hr
+    assert TPU_CATALOG["v5e-spot"].revocable
+
+
+def test_cluster_config_from_ignores_extra_keys():
+    cfg = cluster_config_from({"instance_type": "v5e", "n_workers": 16,
+                               "tp_degree": 4, "job": "x"})
+    assert cfg == ClusterConfig("v5e", 16, tp_degree=4)
+
+
+# ---------------------------------------------------------------------------
+# Schedules.
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_temperature():
+    s = FixedTemperature(2.0)
+    assert s(0) == s(1000) == 2.0
+    with pytest.raises(ValueError):
+        FixedTemperature(0.0)
+
+
+def test_log_cooling_decreases():
+    s = LogCooling(c=3.0)
+    assert s(1) > s(10) > s(1000) > 0
+
+
+def test_geometric_cooling_floor():
+    s = GeometricCooling(tau0=1.0, gamma=0.5, tau_min=0.1)
+    assert s(100) == 0.1
+
+
+def test_adaptive_reheat_spikes_then_relaxes():
+    s = AdaptiveReheat(tau_base=1.0, tau_hot=8.0, relax=0.5)
+    assert s(5) == 1.0
+    s.reheat(10)
+    assert s(10) == 8.0
+    assert 1.0 < s(12) < 8.0
+    assert abs(s(40) - 1.0) < 1e-6
+    assert s(9) == 1.0     # before the reheat point
+
+
+# ---------------------------------------------------------------------------
+# Tabu memory (paper sec. 2.2 remark).
+# ---------------------------------------------------------------------------
+
+
+def test_tabu_discourages_recent_revisits():
+    t = TabuMemory(horizon=2, max_retries=8)
+    t.visit((0,), 1.0)
+    t.visit((1,), 2.0)
+    assert t.is_tabu((0,)) and t.is_tabu((1,))
+    t.visit((2,), 0.5)
+    assert not t.is_tabu((0,))          # aged out (horizon 2)
+    # filter redraws away from tabu proposals
+    seq = iter([(1,), (1,), (3,)])
+    out = t.filter((0,), (1,), redraw=lambda: next(seq))
+    assert out == (3,)
+
+
+def test_tabu_best_seen_tracks_minimum():
+    t = TabuMemory()
+    t.visit((0,), 5.0)
+    t.visit((0,), 3.0)
+    t.visit((0,), 9.0)
+    assert t.best_seen[(0,)] == 3.0
+
+
+def test_tabu_advisory_not_absolute():
+    """Irreducibility: after max_retries the tabu proposal is allowed."""
+    t = TabuMemory(horizon=4, max_retries=2)
+    t.visit((1,), 1.0)
+    out = t.filter((0,), (1,), redraw=lambda: (1,))
+    assert out == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Change detection -> reheat (paper sec. 4.3).
+# ---------------------------------------------------------------------------
+
+
+def test_page_hinkley_detects_mean_shift():
+    rng = np.random.default_rng(0)
+    d = PageHinkley(delta=0.5, threshold=8.0)
+    fired = []
+    for i in range(400):
+        x = rng.normal(10.0 if i < 200 else 16.0, 0.5)
+        fired.append(d.update(x))
+    assert not any(fired[:200])
+    assert any(fired[200:260]), "change not detected within 60 jobs"
+
+
+def test_page_hinkley_quiet_on_stationary():
+    rng = np.random.default_rng(1)
+    d = PageHinkley(delta=0.5, threshold=10.0)
+    assert not any(d.update(rng.normal(5.0, 0.5)) for _ in range(1000))
+
+
+def test_windowed_zscore_detects():
+    rng = np.random.default_rng(2)
+    d = WindowedZScore(window=30, z=4.0)
+    fired = [d.update(rng.normal(0, 1)) for _ in range(100)]
+    fired += [d.update(rng.normal(8, 1)) for _ in range(30)]
+    assert not any(fired[:100])
+    assert any(fired[100:])

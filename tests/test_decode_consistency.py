@@ -1,0 +1,95 @@
+"""Serving correctness: prefill+decode must reproduce the teacher-forced
+forward logits for every architecture.
+
+MoE archs use a no-drop capacity factor here (capacity dropping is batch-
+composition-dependent by design, so exact decode equivalence only holds
+without drops).  Hybrid (RG-LRU) tolerates small bf16 conv-state noise.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import (
+    init_model,
+    logits_fn,
+    model_decode,
+    model_fwd,
+    model_prefill,
+    set_constrain_hook,
+    split_boxes,
+)
+
+TOL = {  # max |delta logits| per family (bf16 models, logits O(10))
+    "recurrentgemma-2b": 0.3,
+    "rwkv6-7b": 0.1,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_teacher_forcing(arch):
+    S, B, EXTRA = 32, 2, 3
+    set_constrain_hook(None)
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, remat="none", capacity_factor=64.0)
+    n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
+
+    boxes = init_model(jax.random.key(0), cfg, tp=1)
+    params, _ = split_boxes(boxes)
+    key = jax.random.key(42)
+    tokens = jax.random.randint(key, (B, S + EXTRA), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["audio_embed"] = 0.02 * jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embed"] = 0.02 * jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model)).astype(jnp.bfloat16)
+
+    hidden, _ = model_fwd(params, batch, cfg, 1)
+    full_logits = logits_fn(params, hidden)
+
+    pbatch = dict(batch)
+    pbatch["tokens"] = tokens[:, :S]
+    logits, cache, _ = model_prefill(params, pbatch, cfg,
+                                     max_len=S + EXTRA + 1, tp=1)
+    tol = TOL.get(arch, 0.08)   # unrolled decode refuses bit-exactness
+    errs = [float(jnp.max(jnp.abs(
+        logits.astype(jnp.float32) - full_logits[:, S - 1].astype(jnp.float32))))]
+    for i in range(EXTRA):
+        pos = S + i
+        # vlm stub prepends n_img image tokens: text stream is shifted
+        tok = tokens[:, pos - n_img: pos - n_img + 1]
+        logits, cache = model_decode(params, cache, tok, jnp.int32(pos),
+                                     cfg, 1)
+        errs.append(float(jnp.max(jnp.abs(
+            logits.astype(jnp.float32)
+            - full_logits[:, pos].astype(jnp.float32)))))
+    assert max(errs) <= tol, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "gemma3-27b", "rwkv6-7b",
+                                  "recurrentgemma-2b"])
+def test_ring_buffer_wraps_beyond_window(arch):
+    """Decode far past the local window: bounded-cache layers must stay
+    finite and consistent (ring reuse)."""
+    set_constrain_hook(None)
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, remat="none")
+    boxes = init_model(jax.random.key(0), cfg, tp=1)
+    params, _ = split_boxes(boxes)
+    S = 16
+    tokens = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab,
+                                jnp.int32)
+    logits, cache, _ = model_prefill(params, {"tokens": tokens}, cfg,
+                                     max_len=4 * S, tp=1)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for pos in range(S, 3 * S):
+        logits, cache = model_decode(params, cache, tok, jnp.int32(pos),
+                                     cfg, 1)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), pos
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

@@ -1,0 +1,275 @@
+"""System behaviour: fault tolerance, stragglers, serving queue,
+procurement controller end-to-end, partitioning rules, HLO analyzer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.costmodel import SimulatedEvaluator
+from repro.core.landscape import BLEND_AFTER, BLEND_BEFORE
+from repro.core.objective import Objective
+from repro.core.pricing import EC2_CATALOG_ADJUSTED
+from repro.core.procurement import ProcurementController, make_ec2_space
+from repro.core.change_detect import PageHinkley
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    StepFailure,
+    Supervisor,
+)
+from repro.runtime.straggler import MitigationPolicy, StragglerDetector
+from repro.runtime.partitioning import (
+    ACT_RULES_TRAIN,
+    PARAM_RULES,
+    logical_to_physical,
+    spec_shardable,
+    zero_spec,
+)
+from repro.workloads import JobStream, PoissonArrivals, QueueSimulator, \
+    blended_stream
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance.
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_restores_and_completes():
+    saved = {"state": 0, "step": 0}
+
+    def restore():
+        return saved["state"], saved["step"]
+
+    inj = FailureInjector(fail_steps=(5, 11))
+    log = []
+
+    def step_fn(state, step):
+        inj.check(step)
+        state = state + 1
+        log.append(step)
+        if step % 3 == 2:       # checkpoint every 3 steps
+            saved.update(state=state, step=step + 1)
+        return state
+
+    sup = Supervisor(restore=restore)
+    state, final = sup.run(0, 0, 20, step_fn)
+    assert final == 20
+    assert sup.restarts == 2
+    assert state >= 20 - 2 * 3  # lost at most the un-checkpointed work
+
+
+def test_supervisor_budget_exhaustion():
+    def step_fn(state, step):
+        raise StepFailure("always")
+
+    sup = Supervisor(restore=lambda: (0, 0), max_restarts=2)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run(0, 0, 5, step_fn)
+
+
+def test_training_resumes_identically(tmp_path):
+    """Kill at step k -> identical final loss stream vs uninterrupted."""
+    from repro.launch.train import TrainRun, run_training
+    from repro.runtime.train import TrainStepOptions
+
+    def mk(ckpt):
+        return TrainRun(arch="whisper-base-reduced", steps=12, batch=2,
+                        seq=32, ckpt_dir=ckpt, save_every=4,
+                        options=TrainStepOptions())
+
+    base = run_training(mk(str(tmp_path / "a")))
+    injected = run_training(mk(str(tmp_path / "b")),
+                            injector=FailureInjector(fail_steps=(7,)))
+    assert injected["restarts"] == 1
+    # after restore at the last checkpoint (step 4), steps 4.. replay:
+    # the final loss must match the uninterrupted run exactly
+    np.testing.assert_allclose(base["losses"][-1], injected["losses"][-1],
+                               rtol=1e-6)
+    assert injected["final_step"] == base["final_step"] == 12
+
+
+# ---------------------------------------------------------------------------
+# Stragglers (paper sec. 5 rule).
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detector_flags_slow_worker():
+    det = StragglerDetector(n_workers=8)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        t = rng.normal(1.0, 0.02, size=8)
+        t[3] = 2.5
+        det.observe(t)
+    assert det.persistent(3)[3]
+    assert det.persistent(3).sum() == 1
+
+
+def test_mitigation_forces_reheat_and_suggests_lru_state():
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED,
+                           core_counts=tuple(range(8, 80, 8)))
+    ctrl = ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED,
+        evaluator=SimulatedEvaluator(EC2_CATALOG_ADJUSTED),
+        blend={"wordcount": 1.0},
+        schedule=__import__("repro.core.schedules",
+                            fromlist=["AdaptiveReheat"]).AdaptiveReheat(
+            tau_base=1.0, tau_hot=8.0),
+        tabu=__import__("repro.core.tabu", fromlist=["TabuMemory"]
+                        ).TabuMemory(),
+        seed=0)
+    ctrl.run(20)
+    det = StragglerDetector(n_workers=4)
+    for _ in range(4):
+        det.observe(np.asarray([1.0, 1.0, 1.0, 9.9]))
+    pol = MitigationPolicy(det)
+    act = pol.suggest(ctrl)
+    assert act["action"] == "reheat"
+    assert act["stragglers"] == [3]
+    assert "suggested_state" in act
+    # re-heat raised the temperature for the next jobs
+    tau_next = ctrl.annealer.schedule(ctrl.annealer.n)
+    assert tau_next > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Procurement controller end-to-end (simulated HiBench blend).
+# ---------------------------------------------------------------------------
+
+
+def test_controller_converges_to_good_config():
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED,
+                           core_counts=tuple(range(4, 132, 8)))
+    ev = SimulatedEvaluator(EC2_CATALOG_ADJUSTED)
+    ctrl = ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED, evaluator=ev,
+        objective=Objective(lambda_cost=1.0),
+        blend=dict(BLEND_BEFORE), evaluate_blend=True,
+        schedule=1.0, seed=0)
+    ctrl.run(300)
+    best_cfg, best_y = ctrl.best_config()
+
+    # exhaustive optimum over the space for comparison
+    from repro.core.landscape import blended_surface
+    cores = tuple(range(4, 132, 8))
+    Y = blended_surface(EC2_CATALOG_ADJUSTED, BLEND_BEFORE, cores)
+    y_opt = Y.min()
+    assert best_y <= 1.15 * y_opt, (best_y, y_opt)
+
+
+def test_controller_adapts_after_blend_change():
+    """Paper sec. 4.3: blend changes mid-stream; detector reheats; the
+    controller re-finds a near-optimal config for the NEW blend."""
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED,
+                           core_counts=tuple(range(4, 132, 8)))
+    ev = SimulatedEvaluator(EC2_CATALOG_ADJUSTED)
+    from repro.core.schedules import AdaptiveReheat
+    ctrl = ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED, evaluator=ev,
+        blend=dict(BLEND_BEFORE), evaluate_blend=True,
+        schedule=AdaptiveReheat(tau_base=0.8, tau_hot=6.0, relax=0.95),
+        detector=PageHinkley(delta=0.2, threshold=4.0),
+        seed=1)
+    ctrl.run(250)
+    ctrl.reweight(BLEND_AFTER)
+    ctrl.run(350)
+
+    from repro.core.landscape import blended_surface
+    cores = tuple(range(4, 132, 8))
+    Y2 = blended_surface(EC2_CATALOG_ADJUSTED, BLEND_AFTER, cores)
+    y_opt2 = Y2.min()
+    # best config seen in the post-change window is near the new optimum
+    post = ctrl.decisions[250:]
+    best_post = min(d.y for d in post)
+    assert best_post <= 1.2 * y_opt2, (best_post, y_opt2)
+    assert any(d.reheated for d in post), "detector never fired"
+
+
+# ---------------------------------------------------------------------------
+# Workloads: streams, arrivals, queue (paper sec. 4.2.2).
+# ---------------------------------------------------------------------------
+
+
+def test_job_stream_respects_blend():
+    s = JobStream({"a": 0.8, "b": 0.2}, seed=0)
+    draws = [next(s) for _ in range(4000)]
+    frac = draws.count("a") / len(draws)
+    assert 0.75 < frac < 0.85
+
+
+def test_blended_stream_changes_at_breakpoint():
+    jobs = blended_stream({"a": 1.0}, {"b": 1.0}, change_at=50, n_jobs=100)
+    assert set(jobs[:50]) == {"a"} and set(jobs[50:]) == {"b"}
+
+
+def test_queue_sojourn_exceeds_service_under_load():
+    stream = JobStream({"j": 1.0})
+    arr = PoissonArrivals(stream, rate_per_s=2.0, seed=0)
+    arrivals = [next(arr) for _ in range(200)]
+    q = QueueSimulator(service_time=lambda j: 1.0)   # rho = 2 -> saturates
+    cs = q.run(arrivals)
+    mean_sojourn = np.mean([c.sojourn_s for c in cs])
+    assert mean_sojourn > 5.0       # queueing dominates
+    q2 = QueueSimulator(service_time=lambda j: 0.01)  # rho << 1
+    mean2 = np.mean([c.sojourn_s for c in q2.run(arrivals)])
+    assert mean2 < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Partitioning rules.
+# ---------------------------------------------------------------------------
+
+
+def test_logical_to_physical_basic(host_mesh):
+    spec = logical_to_physical(("embed", "mlp"), PARAM_RULES, host_mesh)
+    assert spec == P(None, "model")
+
+
+def test_zero_spec_adds_data_axis():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = zero_spec((64, 128), P(None, "model"), mesh)
+    assert out == P("data", "model")
+    # respects existing data shardings
+    out2 = zero_spec((64, 128), P("data", None), mesh)
+    assert out2 == P("data", None)
+
+
+def test_spec_shardable_drops_indivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # "model" has size 1 here; use a fake divisibility check via shape 7
+    out = spec_shardable((7, 8), P("model", None), mesh)
+    assert out == P("model", None)   # size 1 divides everything
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer: known-flops program with a scan.
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_analyzer_counts_scan_trip_flops():
+    from repro.tools.hlo import analyze_hlo
+
+    M = 128
+    reps = 8
+
+    def f(w, x):
+        def body(x, wi):
+            return wi @ x, None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    w = jnp.zeros((reps, M, M), jnp.float32)
+    x = jnp.zeros((M, M), jnp.float32)
+    text = jax.jit(f).lower(w, x).compile().as_text()
+    cost = analyze_hlo(text)
+    want = 2 * M * M * M * reps
+    assert abs(cost.flops - want) / want < 0.05, (cost.flops, want)
+
+
+def test_hlo_analyzer_counts_collectives():
+    from repro.tools.hlo import analyze_hlo
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device for a real collective")

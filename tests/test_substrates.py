@@ -1,0 +1,250 @@
+"""Substrate tests: loss, optimizer, compression, data pipeline,
+checkpointing, partitioning rules, HLO analyzer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.data import DataConfig, SyntheticLM, make_pipeline
+from repro.optim.compression import compressed_roundtrip, quantize_int8
+from repro.optim.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.runtime.loss import softmax_xent, token_accuracy
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+
+def test_xent_matches_log_softmax():
+    key = jax.random.key(0)
+    logits = jax.random.normal(key, (2, 8, 32), jnp.float32)
+    labels = jax.random.randint(key, (2, 8), 0, 32, jnp.int32)
+    loss, _ = softmax_xent(logits, labels)
+    want = -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                labels[..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(loss), float(want), rtol=1e-5)
+
+
+def test_xent_mask_excludes_tokens():
+    logits = jax.random.normal(jax.random.key(1), (1, 6, 16))
+    labels = jnp.zeros((1, 6), jnp.int32)
+    mask = jnp.asarray([[1, 1, 1, 0, 0, 0]])
+    l_masked, _ = softmax_xent(logits, labels, mask=mask)
+    l_short, _ = softmax_xent(logits[:, :3], labels[:, :3])
+    np.testing.assert_allclose(float(l_masked), float(l_short), rtol=1e-5)
+
+
+def test_xent_z_loss_positive_addition():
+    logits = 5.0 * jax.random.normal(jax.random.key(2), (2, 4, 16))
+    labels = jnp.zeros((2, 4), jnp.int32)
+    l0, _ = softmax_xent(logits, labels, z_loss=0.0)
+    l1, _ = softmax_xent(logits, labels, z_loss=1e-2)
+    assert float(l1) > float(l0)
+
+
+def test_uniform_logits_loss_is_log_vocab():
+    V = 64
+    logits = jnp.zeros((1, 4, V))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    loss, _ = softmax_xent(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(V), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer.
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_first_step_is_signed_lr():
+    """After step 1, bias-corrected Adam update == lr * sign-ish(g)."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.ones((4, 4), jnp.float32)}
+    grads = {"w": jnp.full((4, 4), 0.5, jnp.float32)}
+    state = adamw_init(params, cfg)
+    new_p, state = adamw_update(grads, state, params, cfg)
+    # mhat/sqrt(vhat) == 1 for constant grads at step 1
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(params["w"]) - 0.1, rtol=1e-5)
+    assert int(state.count) == 1
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.1, grad_clip=0.0)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    grads = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    state = adamw_init(params, cfg)
+    new_p, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(new_p["w"])) < 1.0     # decayed
+    np.testing.assert_allclose(np.asarray(new_p["b"]), 1.0)  # not decayed
+
+
+def test_bf16_state_dtype():
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    state = adamw_init({"w": jnp.ones((2, 2))}, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(48 + 36), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert 0.0 < float(lr(jnp.int32(0))) <= 0.2   # step 0 trains
+    np.testing.assert_allclose(float(lr(jnp.int32(10))), 1.0, rtol=1e-5)
+    assert float(lr(jnp.int32(55))) < 1.0
+    np.testing.assert_allclose(float(lr(jnp.int32(100))), 0.1, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression with error feedback.
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_int8_bounds():
+    x = jax.random.normal(jax.random.key(0), (16, 64)) * 10
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    deq = q.astype(jnp.float32) * s
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(jnp.max(s)) * 0.51
+
+
+def test_error_feedback_preserves_sum():
+    """Over steps, error feedback keeps cumulative bias near zero."""
+    key = jax.random.key(1)
+    g = {"w": 0.01 * jax.random.normal(key, (32, 64), jnp.float32)}
+    residual = None
+    total_deq = jnp.zeros((32, 64))
+    for i in range(20):
+        deq, residual = compressed_roundtrip(g, residual)
+        total_deq = total_deq + deq["w"]
+    total_true = 20 * g["w"]
+    # residual carries what was lost; cumulative error is one-step-sized
+    err = float(jnp.max(jnp.abs(total_deq + residual["w"] - total_true)))
+    assert err < 1e-4, err
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab=512, seq_len=64, global_batch=4, seed=3)
+    src = SyntheticLM(cfg)
+    b5 = src.batch_at(5)
+    again = SyntheticLM(cfg).batch_at(5)
+    np.testing.assert_array_equal(b5["tokens"], again["tokens"])
+    # labels are next-token
+    np.testing.assert_array_equal(b5["tokens"][:, 1:], b5["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab=512, seq_len=32, global_batch=8)
+    full = SyntheticLM(cfg).batch_at(0)["tokens"]
+    parts = []
+    for host in range(2):
+        c = DataConfig(vocab=512, seq_len=32, global_batch=8, n_hosts=2,
+                       host_id=host)
+        parts.append(SyntheticLM(c).batch_at(0)["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_pipeline_prefetch_matches_direct():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=2)
+    it = make_pipeline(cfg, start_step=7, prefetch=2)
+    step, batch = next(it)
+    assert step == 7
+    np.testing.assert_array_equal(batch["tokens"],
+                                  SyntheticLM(cfg).batch_at(7)["tokens"])
+    it.close()
+
+
+def test_data_has_learnable_structure():
+    """Bigram structure: conditional entropy < unigram entropy."""
+    cfg = DataConfig(vocab=64, seq_len=256, global_batch=8)
+    toks = SyntheticLM(cfg).batch_at(0)["tokens"].ravel()
+    pairs = set(zip(toks[:-1].tolist(), toks[1:].tolist()))
+    # with 8 successors per token, pair diversity << vocab^2
+    assert len(pairs) < 64 * 16
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing.
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)},
+            "n": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path), step=3, extra={"step": 3})
+    out, extra = restore_pytree(t, str(tmp_path))
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomicity_ignores_uncommitted(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path), step=1)
+    # simulate a crash mid-write: a .tmp dir and a dir without marker
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    os.makedirs(tmp_path / "step_00000005")
+    m = CheckpointManager(str(tmp_path), keep=2)
+    assert m.latest_step() == 1
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        m.save(t, s)
+    from repro.checkpoint.checkpointer import committed_steps
+    assert committed_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(_tree(), 10, blocking=False)
+    m.wait()
+    assert m.latest_step() == 10
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    save_pytree(_tree(), str(tmp_path), step=1)
+    with pytest.raises(ValueError):
+        restore_pytree({"only": jnp.zeros(3)}, str(tmp_path))
+
+
+def test_checkpoint_restore_with_shardings(tmp_path):
+    """Elastic re-placement: restore against explicit target shardings."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    t = _tree()
+    save_pytree(t, str(tmp_path), step=1)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    out, _ = restore_pytree(t, str(tmp_path), shardings=sh)
+    assert out["a"].sharding == NamedSharding(mesh, P())
