@@ -1,22 +1,31 @@
 """Reproductions of the paper's illustrative experiments (Figs 2-5):
 the 1-D bimodal landscape, job streams under annealing, jobs-to-minimum
-vs temperature, and adaptation to a mid-stream workload change."""
+vs temperature, and adaptation to a mid-stream workload change.
+
+Fig. 4/5 sweeps run through the batched N-dim engine (`anneal_fleet` /
+`anneal_chain_nd`): the whole temperatures x seeds grid is one jitted
+call, with a timed comparison against the per-job Python `Annealer`."""
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    Annealer,
+    StepNeighborhood,
     anneal_chain,
-    anneal_chain_dynamic,
+    anneal_chain_nd,
     bimodal_landscape,
     changed_landscape,
     first_hit_time,
-    jobs_to_min_vs_tau,
+    jobs_to_min_vs_tau_fleet,
 )
-from .common import Bench, write_csv
+from repro.core.state import ConfigSpace, Dimension
+from .common import Bench, write_csv, write_json
 
 
 def fig3_jobstream() -> dict:
@@ -53,12 +62,16 @@ def fig3_jobstream() -> dict:
 
 
 def fig4_temperature() -> dict:
-    """Fig. 4: #jobs until the global minimum vs tau, +-2 std bars."""
+    """Fig. 4: #jobs until the global minimum vs tau, +-2 std bars.
+
+    Runs through the batched N-dim engine: the whole (temperatures x
+    seeds) grid is one jitted fleet call."""
     b = Bench("fig4_temperature", "Fig. 4")
     y = bimodal_landscape()
+    space = ConfigSpace((Dimension("cores", tuple(range(len(y)))),))
     taus = [0.25, 0.5, 1.0, 2.0, 4.0]
-    res = jobs_to_min_vs_tau(jax.random.key(0), y, taus, n_seeds=64,
-                             n_steps=4000, init=0)
+    res = jobs_to_min_vs_tau_fleet(jax.random.key(0), space, y, taus,
+                                   n_seeds=64, n_steps=4000, init=(0,))
     write_csv("fig4_temperature.csv", ["tau", "mean_jobs", "std_jobs"],
               [[t, m, s] for t, m, s in
                zip(res["taus"], res["mean_jobs"], res["std_jobs"])])
@@ -82,9 +95,11 @@ def fig5_change() -> dict:
     tables = jnp.asarray(
         np.stack([y1 if i < change_at else y2 for i in range(n)]),
         jnp.float32)
-    states, ys, _ = anneal_chain_dynamic(
-        jax.random.key(1), tables, n, tau=1.0, init=int(np.argmin(y1)))
-    states = np.asarray(states)
+    space = ConfigSpace((Dimension("cores", tuple(range(len(y1)))),))
+    states, ys, _ = anneal_chain_nd(
+        jax.random.key(0), space, tables, n, tau=1.0,
+        init=(int(np.argmin(y1)),))
+    states = np.asarray(states)[:, 0]
     rows = [[i, int(states[i]), float(ys[i])] for i in range(0, n, 10)]
     write_csv("fig5_change.csv", ["job", "state", "exec_time"], rows)
 
@@ -102,5 +117,63 @@ def fig5_change() -> dict:
     return b.finish()
 
 
+def fig4_engine_speedup() -> dict:
+    """Fig. 4-style temperature sweep, per-job Python `Annealer` vs the
+    batched engine: same landscape, same (tau x seed) grid, same step
+    budget.  The fleet runs the whole grid as one jitted call; the Python
+    driver steps one proposal per job per chain."""
+    b = Bench("fig4_engine_speedup", "Fig. 4 (engine timing)")
+    y = bimodal_landscape()
+    space = ConfigSpace((Dimension("cores", tuple(range(len(y)))),))
+    taus = [0.25, 0.5, 1.0, 2.0, 4.0]
+    n_seeds, n_steps = 8, 1500
+    n_chains = len(taus) * n_seeds
+
+    t0 = time.perf_counter()
+    py_means = []
+    for tau in taus:
+        hits = []
+        for seed in range(n_seeds):
+            ann = Annealer(space, StepNeighborhood(space),
+                           evaluate=lambda cfg, n: float(y[cfg["cores"]]),
+                           schedule=float(tau), seed=seed, init=(0,))
+            steps = ann.run(n_steps)
+            target = int(np.argmin(y))
+            good = [s.n for s in steps if s.state == (target,)]
+            hits.append(good[0] if good else n_steps)
+        py_means.append(float(np.mean(hits)))
+    t_python = time.perf_counter() - t0
+
+    key = jax.random.key(0)
+    t0 = time.perf_counter()
+    jobs_to_min_vs_tau_fleet(key, space, y, taus, n_seeds=n_seeds,
+                             n_steps=n_steps, init=(0,))
+    t_fleet_cold = time.perf_counter() - t0   # includes compile
+    t0 = time.perf_counter()
+    res = jobs_to_min_vs_tau_fleet(key, space, y, taus, n_seeds=n_seeds,
+                                   n_steps=n_steps, init=(0,))
+    t_fleet = time.perf_counter() - t0        # steady state (cached jit)
+
+    speedup = t_python / t_fleet
+    chain_steps = n_chains * n_steps
+    write_json("fig4_engine_speedup.json", {
+        "chains": n_chains, "steps_per_chain": n_steps,
+        "python_annealer_s": round(t_python, 3),
+        "fleet_cold_s": round(t_fleet_cold, 3),
+        "fleet_warm_s": round(t_fleet, 4),
+        "speedup_warm": round(speedup, 1),
+        "python_steps_per_s": round(chain_steps / t_python),
+        "fleet_steps_per_s": round(chain_steps / t_fleet),
+    })
+    b.check("both engines agree on P2 (jobs-to-min decreases with tau)",
+            py_means[0] > py_means[-1]
+            and res["mean_jobs"][0] > res["mean_jobs"][-1])
+    b.check(f">= 10x speedup over the Python Annealer "
+            f"(got {speedup:.0f}x warm, cold {t_python / t_fleet_cold:.0f}x)",
+            speedup >= 10.0)
+    return b.finish()
+
+
 def run_all() -> list[dict]:
-    return [fig3_jobstream(), fig4_temperature(), fig5_change()]
+    return [fig3_jobstream(), fig4_temperature(), fig5_change(),
+            fig4_engine_speedup()]

@@ -7,8 +7,12 @@ from .annealing import (
     acceptance_probability,
     anneal_chain,
     anneal_chain_dynamic,
+    anneal_chain_nd,
+    anneal_fleet,
     first_hit_time,
     jobs_to_min_vs_tau,
+    jobs_to_min_vs_tau_fleet,
+    random_valid_states,
 )
 from .change_detect import PageHinkley, WindowedZScore
 from .costmodel import (
@@ -28,12 +32,15 @@ from .landscape import (
     blended_surface,
     changed_landscape,
     dnn_epoch_landscape,
+    tabulate,
+    tabulate_dynamic,
 )
 from .neighborhood import (
     BlockNeighborhood,
     Neighborhood,
     StepNeighborhood,
     check_connected,
+    propose_nd,
 )
 from .objective import BlendedObjective, Measurement, Objective, blend_from_weights
 from .pricing import (
@@ -50,6 +57,7 @@ from .procurement import (
     default_adaptive_schedule,
     make_ec2_space,
     make_tpu_space,
+    offline_plan,
 )
 from .schedules import (
     AdaptiveReheat,
@@ -57,27 +65,38 @@ from .schedules import (
     GeometricCooling,
     LogCooling,
     Schedule,
+    schedule_to_array,
 )
-from .state import ClusterConfig, ConfigSpace, Dimension, cluster_config_from
+from .state import (
+    ClusterConfig,
+    ConfigSpace,
+    Dimension,
+    EncodedSpace,
+    cluster_config_from,
+)
 from .tabu import TabuMemory
 
 __all__ = [
     "Annealer", "Step", "acceptance_probability", "anneal_chain",
-    "anneal_chain_dynamic", "first_hit_time", "jobs_to_min_vs_tau",
+    "anneal_chain_dynamic", "anneal_chain_nd", "anneal_fleet",
+    "first_hit_time", "jobs_to_min_vs_tau", "jobs_to_min_vs_tau_fleet",
+    "random_valid_states",
     "PageHinkley", "WindowedZScore",
     "Evaluator", "MeasuredEvaluator", "RooflineEvaluator",
     "SimulatedEvaluator", "StepCosts", "objective_of",
     "BLEND_AFTER", "BLEND_BEFORE", "HIBENCH_JOBS", "JobModel",
     "bimodal_landscape", "blended_surface", "changed_landscape",
-    "dnn_epoch_landscape",
+    "dnn_epoch_landscape", "tabulate", "tabulate_dynamic",
     "BlockNeighborhood", "Neighborhood", "StepNeighborhood", "check_connected",
+    "propose_nd",
     "BlendedObjective", "Measurement", "Objective", "blend_from_weights",
     "EC2_CATALOG", "EC2_CATALOG_ADJUSTED", "TPU_CATALOG", "InstanceFamily",
     "ServiceCatalog", "interpolated_family",
     "Decision", "ProcurementController", "default_adaptive_schedule",
-    "make_ec2_space", "make_tpu_space",
+    "make_ec2_space", "make_tpu_space", "offline_plan",
     "AdaptiveReheat", "FixedTemperature", "GeometricCooling", "LogCooling",
-    "Schedule",
-    "ClusterConfig", "ConfigSpace", "Dimension", "cluster_config_from",
+    "Schedule", "schedule_to_array",
+    "ClusterConfig", "ConfigSpace", "Dimension", "EncodedSpace",
+    "cluster_config_from",
     "TabuMemory",
 ]

@@ -16,11 +16,18 @@ i.e. always accepted when the objective does not increase.  Two engines:
   precomputed objective table, used to reproduce the paper's illustrative
   and temperature-sweep figures at scale (many seeds x temperatures in one
   compiled call).
+
+* :func:`anneal_chain_nd` / :func:`anneal_fleet` — the compiled chain
+  generalized to full N-dimensional :class:`ConfigSpace`s (mixed
+  ordinal/categorical axes, validity masks, time-indexed tables, array
+  temperature schedules with reheats), batched over thousands of chains —
+  seeds x temperatures x tenants — in a single jitted call.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, Sequence
 
@@ -28,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .neighborhood import Neighborhood
+from .neighborhood import Neighborhood, flat_index, propose_nd
 from .schedules import FixedTemperature, Schedule
-from .state import ConfigSpace
+from .state import ConfigSpace, EncodedSpace
 from .tabu import TabuMemory
 
 
@@ -98,6 +105,9 @@ class Annealer:
         self.y: float | None = None   # incumbent objective (lazily measured)
         self.n = 0
         self.history: list[Step] = []
+        # every measurement taken, incumbent refreshes included — proposals
+        # alone under-report `best()` when the initial state is never beaten
+        self.evaluations: list[tuple[tuple[int, ...], float]] = []
 
     # -- paper sec. 3: "Starting with a random configuration for x_0" --
     def _random_valid_state(self, tries: int = 10_000) -> tuple[int, ...]:
@@ -126,6 +136,7 @@ class Annealer:
         if self.y is None:  # first job, or incumbent invalidated (reheat):
             # this job runs under the incumbent to refresh its objective
             self.y = float(self.evaluate(self.space.decode(self.state), n))
+            self.evaluations.append((self.state, self.y))
 
         proposal = self.nbhd.propose(self.state, self.rng)
         if self.tabu is not None:
@@ -134,6 +145,7 @@ class Annealer:
                 lambda: self.nbhd.propose(self.state, self.rng),
             )
         y_new = float(self.evaluate(self.space.decode(proposal), n))
+        self.evaluations.append((proposal, y_new))
 
         dy = y_new - self.y
         p = acceptance_probability(dy, tau)
@@ -158,8 +170,10 @@ class Annealer:
 
     # -- diagnostics used by the paper's figures --
     def best(self) -> tuple[tuple[int, ...], float]:
-        best = min(self.history, key=lambda s: s.y_proposed)
-        return best.proposed, best.y_proposed
+        """Lowest measured objective over ALL evaluations — incumbent
+        initial/refresh measurements included, not just proposals."""
+        state, y = min(self.evaluations, key=lambda e: e[1])
+        return state, y
 
     def exploration_rate(self) -> float:
         if not self.history:
@@ -205,6 +219,7 @@ def anneal_chain(
         z = x + delta
         z = jnp.clip(z, 0, S - 1)
         z = jnp.where(z == x, x - delta, z)  # reflect at the boundary
+        z = jnp.clip(z, 0, S - 1)            # S == 1: reflection has nowhere to go
         y_z = measure(k2, z)
         dy = y_z - y_x
         p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
@@ -245,6 +260,7 @@ def anneal_chain_dynamic(
         delta = jnp.where(jax.random.bernoulli(k1), 1, -1)
         z = jnp.clip(x + delta, 0, S - 1)
         z = jnp.where(z == x, x - delta, z)
+        z = jnp.clip(z, 0, S - 1)            # S == 1: reflection has nowhere to go
         y_z = y_now[z]
         dy = y_z - y_x
         p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
@@ -301,4 +317,277 @@ def jobs_to_min_vs_tau(
         "mean_jobs": np.asarray(means),
         "std_jobs": np.asarray(stds),
         "raw": np.stack(raw),
+    }
+
+
+# ---------------------------------------------------------------------------
+# N-dimensional batched engine: the compiled chain over full ConfigSpaces.
+# ---------------------------------------------------------------------------
+
+
+def _as_encoded(space: ConfigSpace | EncodedSpace) -> EncodedSpace:
+    return space.encoded() if isinstance(space, ConfigSpace) else space
+
+
+def _chain_nd_core(
+    key, y_flat, valid_flat, taus, init,
+    *, shape, categorical, dynamic, noise_std,
+):
+    """One N-dim chain.  ``y_flat`` is the flattened objective table —
+    (size,) static or (n_steps, size) time-indexed; ``valid_flat`` is a
+    (size,) bool mask or None; ``taus`` is (n_steps,).  Proposals into
+    invalid states are rejected (zero-acceptance Metropolis move), which
+    keeps the chain inside the constrained region without enumerating
+    neighbors in the trace."""
+
+    def measure(k, y):
+        if noise_std > 0.0:
+            y = y + noise_std * jax.random.normal(k, ())
+        return y
+
+    def body(carry, inp):
+        key, x, y_x = carry
+        if dynamic:
+            t, y_now = inp
+        else:
+            (t,) = inp
+            y_now = y_flat
+        key, k_prop, k_meas, k_acc = jax.random.split(key, 4)
+        z = propose_nd(k_prop, x, shape, categorical)
+        zi = flat_index(z, shape)
+        y_z = measure(k_meas, y_now[zi])
+        dy = y_z - y_x
+        p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
+        accept = jax.random.uniform(k_acc) < p
+        if valid_flat is not None:
+            accept = accept & valid_flat[zi]
+        x_new = jnp.where(accept, z, x)
+        y_new = jnp.where(accept, y_z, y_x)
+        return (key, x_new, y_new), (x_new, y_z, accept)
+
+    init = jnp.asarray(init, jnp.int32)
+    key, k0 = jax.random.split(key)
+    y0_table = y_flat[0] if dynamic else y_flat
+    y0 = measure(k0, y0_table[flat_index(init, shape)])
+    xs = (taus, y_flat) if dynamic else (taus,)
+    (_, _, _), (states, ys, accepts) = jax.lax.scan(
+        body, (key, init, y0), xs)
+    return states, ys, accepts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shape", "categorical", "dynamic", "noise_std"))
+def _chain_nd_jit(key, y_flat, valid_flat, taus, init,
+                  *, shape, categorical, dynamic, noise_std):
+    return _chain_nd_core(
+        key, y_flat, valid_flat, taus, init, shape=shape,
+        categorical=categorical, dynamic=dynamic, noise_std=noise_std)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shape", "categorical", "dynamic", "noise_std",
+                     "per_chain"))
+def _fleet_nd_jit(keys, y_flat, valid_flat, taus, inits,
+                  *, shape, categorical, dynamic, noise_std, per_chain):
+    def one(key, tau_row, init, y):
+        return _chain_nd_core(
+            key, y, valid_flat, tau_row, init, shape=shape,
+            categorical=categorical, dynamic=dynamic, noise_std=noise_std)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 0 if per_chain else None))(
+        keys, taus, inits, y_flat)
+
+
+def _default_init(enc: EncodedSpace) -> np.ndarray:
+    if enc.valid_mask is None:
+        return np.zeros(enc.ndim, np.int32)
+    flat = enc.valid_mask.reshape(-1)
+    first = int(np.argmax(flat))
+    if not flat[first]:
+        raise ValueError("space has no valid states")
+    return np.asarray(np.unravel_index(first, enc.shape), np.int32)
+
+
+def random_valid_states(
+    key: jax.Array, space: ConfigSpace | EncodedSpace, n: int
+) -> jax.Array:
+    """(n, ndim) int32 index vectors uniform over the VALID region."""
+    enc = _as_encoded(space)
+    if enc.valid_mask is None:
+        maxs = jnp.asarray(enc.shape, jnp.int32)
+        return jax.random.randint(key, (n, enc.ndim), 0, maxs,
+                                  dtype=jnp.int32)
+    flat = np.flatnonzero(enc.valid_mask.reshape(-1))
+    if flat.size == 0:
+        raise ValueError("space has no valid states")
+    picks = jax.random.choice(key, jnp.asarray(flat, jnp.int32), (n,))
+    return jnp.stack(jnp.unravel_index(picks, enc.shape), axis=-1) \
+              .astype(jnp.int32)
+
+
+def anneal_chain_nd(
+    key: jax.Array,
+    space: ConfigSpace | EncodedSpace,
+    y_table: jax.Array | np.ndarray,
+    n_steps: int,
+    tau: jax.Array | float,          # scalar or (n_steps,) temperatures
+    init: Sequence[int] | jax.Array | None = None,
+    noise_std: float = 0.0,
+):
+    """One chain over an N-dim ConfigSpace (the compiled online algorithm).
+
+    ``y_table`` has shape ``space.shape`` (static landscape) or
+    ``(n_steps,) + space.shape`` (time-indexed — workload drift; the
+    incumbent's stored objective goes stale exactly as in the online
+    Annealer).  Ordinal axes move +-1 (reflected); categorical axes
+    resample uniformly; invalid states are rejection-masked.  Temperatures
+    are data: pass :func:`repro.core.schedules.schedule_to_array` output to
+    trace reheat events.  Returns (states, ys, accepts) with states of
+    shape (n_steps, ndim).
+    """
+    enc = _as_encoded(space)
+    y = jnp.asarray(y_table, jnp.float32)
+    if y.ndim == enc.ndim + 1:
+        dynamic = True
+        if y.shape != (n_steps,) + enc.shape:
+            raise ValueError(f"dynamic table shape {y.shape} != "
+                             f"{(n_steps,) + enc.shape}")
+    elif y.ndim == enc.ndim:
+        dynamic = False
+        if y.shape != enc.shape:
+            raise ValueError(f"table shape {y.shape} != {enc.shape}")
+    else:
+        raise ValueError(f"table rank {y.ndim} vs space rank {enc.ndim}")
+    y_flat = y.reshape((n_steps, -1)) if dynamic else y.reshape(-1)
+    valid_flat = (None if enc.valid_mask is None
+                  else jnp.asarray(enc.valid_mask.reshape(-1)))
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_steps,))
+    if init is None:
+        init = _default_init(enc)
+    init = jnp.asarray(init, jnp.int32)
+    return _chain_nd_jit(
+        key, y_flat, valid_flat, taus, init, shape=enc.shape,
+        categorical=enc.categorical, dynamic=dynamic,
+        noise_std=float(noise_std))
+
+
+def anneal_fleet(
+    key: jax.Array,
+    space: ConfigSpace | EncodedSpace,
+    y_table: jax.Array | np.ndarray,
+    n_steps: int,
+    taus: jax.Array | np.ndarray | Sequence[float] | float,
+    inits: jax.Array | np.ndarray | None = None,
+    n_chains: int | None = None,
+    noise_std: float = 0.0,
+    per_chain_tables: bool = False,
+) -> dict[str, jax.Array]:
+    """A fleet of N-dim chains in ONE jitted call (paper Figs. 4/5/10 at
+    scale: seeds x temperatures x tenants).
+
+    ``taus``: scalar (shared), (C,) per-chain constants, or (C, n_steps)
+    per-chain schedules (e.g. with reheat events baked in).  ``inits``:
+    None (uniform over the valid region) or (ndim,) / (C, ndim).
+    ``per_chain_tables``: ``y_table`` carries a leading (C,) axis — one
+    objective table per chain (multi-tenant fleets); combined with a
+    time axis the per-chain tables may also be dynamic.
+
+    Returns ``{"states": (C, n_steps, ndim), "ys": (C, n_steps),
+    "accepts": (C, n_steps), "inits": (C, ndim)}`` — inits included so
+    callers scanning for the best visited state also see step-0 states.
+    """
+    enc = _as_encoded(space)
+    y = jnp.asarray(y_table, jnp.float32)
+    base = y.ndim - (1 if per_chain_tables else 0)
+    if base == enc.ndim + 1:
+        dynamic = True
+    elif base == enc.ndim:
+        dynamic = False
+    else:
+        raise ValueError(f"table rank {y.ndim} vs space rank {enc.ndim}")
+
+    taus_arr = jnp.asarray(taus, jnp.float32)
+    if n_chains is None:
+        if taus_arr.ndim >= 1:
+            n_chains = taus_arr.shape[0]
+        elif inits is not None and np.ndim(inits) == 2:
+            n_chains = len(inits)
+        elif per_chain_tables:
+            n_chains = y.shape[0]
+        else:
+            raise ValueError("pass n_chains (or batched taus/inits/tables)")
+    if taus_arr.ndim == 0:
+        taus_b = jnp.broadcast_to(taus_arr, (n_chains, n_steps))
+    elif taus_arr.ndim == 1:
+        taus_b = jnp.broadcast_to(taus_arr[:, None], (n_chains, n_steps))
+    else:
+        taus_b = jnp.broadcast_to(taus_arr, (n_chains, n_steps))
+
+    key, k_init = jax.random.split(key)
+    keys = jax.random.split(key, n_chains)
+    if inits is None:
+        inits = random_valid_states(k_init, enc, n_chains)
+    else:
+        inits = jnp.asarray(inits, jnp.int32)
+        if inits.ndim == 1:
+            inits = jnp.broadcast_to(inits, (n_chains, enc.ndim))
+
+    lead = (n_chains,) if per_chain_tables else ()
+    time = (n_steps,) if dynamic else ()
+    expect = lead + time + enc.shape
+    if y.shape != expect:
+        raise ValueError(f"table shape {y.shape} != expected {expect} "
+                         f"(chains={n_chains}, steps={n_steps}, "
+                         f"space={enc.shape})")
+    y_flat = y.reshape(lead + time + (-1,))
+    valid_flat = (None if enc.valid_mask is None
+                  else jnp.asarray(enc.valid_mask.reshape(-1)))
+
+    states, ys, accepts = _fleet_nd_jit(
+        keys, y_flat, valid_flat, taus_b, inits, shape=enc.shape,
+        categorical=enc.categorical, dynamic=dynamic,
+        noise_std=float(noise_std), per_chain=per_chain_tables)
+    return {"states": states, "ys": ys, "accepts": accepts,
+            "inits": inits}
+
+
+def jobs_to_min_vs_tau_fleet(
+    key: jax.Array,
+    space: ConfigSpace | EncodedSpace,
+    y_table: np.ndarray | jax.Array,
+    taus: Sequence[float],
+    n_seeds: int = 64,
+    n_steps: int = 2000,
+    init: Sequence[int] | None = None,
+    target: Sequence[int] | None = None,
+) -> dict[str, np.ndarray]:
+    """Fig. 4 / Fig. 10 sweep through the batched engine: the whole
+    (temperature x seed) grid runs as ONE jitted fleet call, on any
+    N-dim ConfigSpace."""
+    enc = _as_encoded(space)
+    y_np = np.asarray(y_table, np.float64)
+    if target is None:
+        masked = (y_np if enc.valid_mask is None
+                  else np.where(enc.valid_mask, y_np, np.inf))
+        target = np.unravel_index(int(np.argmin(masked)), enc.shape)
+    target = np.asarray(target, np.int32)
+
+    n_taus = len(taus)
+    n_chains = n_taus * n_seeds
+    taus_b = np.repeat(np.asarray(taus, np.float32), n_seeds)
+    inits = (None if init is None
+             else np.tile(np.asarray(init, np.int32), (n_chains, 1)))
+    out = anneal_fleet(key, enc, y_np, n_steps, taus_b, inits=inits,
+                       n_chains=n_chains)
+    states = np.asarray(out["states"])            # (C, n_steps, ndim)
+    hit = (states == target).all(-1)              # (C, n_steps)
+    hits = np.where(hit.any(1), hit.argmax(1), n_steps)
+    hits = hits.reshape(n_taus, n_seeds)
+    return {
+        "taus": np.asarray(taus, np.float64),
+        "mean_jobs": hits.mean(1),
+        "std_jobs": hits.std(1, ddof=1),
+        "raw": hits,
     }

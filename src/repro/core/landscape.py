@@ -17,11 +17,13 @@ post-change optimum shift).
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+import itertools
+from typing import Any, Callable, Mapping
 
 import numpy as np
 
 from .pricing import ServiceCatalog
+from .state import ConfigSpace
 
 
 def bimodal_landscape(
@@ -56,6 +58,61 @@ def changed_landscape(n_states: int = 48) -> np.ndarray:
         n_states=n_states, local_min=34, global_min=12,
         local_depth=5.5, global_depth=8.5,
     )
+
+
+# ---------------------------------------------------------------------------
+# N-dim tabulation: ConfigSpace x evaluator -> objective table for the
+# compiled chain (anneal_chain_nd).  Figure-scale spaces only.
+# ---------------------------------------------------------------------------
+
+
+def tabulate(
+    space: ConfigSpace,
+    fn: Callable[[dict[str, Any]], float],
+    invalid: float = np.inf,
+    max_size: int = 200_000,
+    valid_mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """``Y[idx] = fn(space.decode(idx))`` over the full product.
+
+    Invalid states (per ``space.is_valid``) get ``invalid`` (+inf by
+    default, which the chain's validity mask makes unreachable anyway).
+    Pass a precomputed ``valid_mask`` (e.g. ``space.encoded().valid_mask``)
+    to avoid re-running the validity predicate over the whole product.
+    Returns an array of shape ``space.shape``.
+    """
+    if space.size() > max_size:
+        raise ValueError(f"space too large to tabulate: {space.size()}")
+    Y = np.full(space.shape, invalid, np.float64)
+    for idx in itertools.product(*(range(n) for n in space.shape)):
+        ok = valid_mask[idx] if valid_mask is not None else space.contains(idx)
+        if ok:
+            Y[idx] = float(fn(space.decode(idx)))
+    return Y
+
+
+def tabulate_dynamic(
+    space: ConfigSpace,
+    fn: Callable[[dict[str, Any], int], float],
+    n_steps: int,
+    invalid: float = np.inf,
+    max_size: int = 200_000,
+) -> np.ndarray:
+    """Time-indexed tables ``Y[t, idx] = fn(space.decode(idx), t)`` — the
+    N-dim counterpart of the Fig. 5 changing landscape.  Shape
+    ``(n_steps,) + space.shape``."""
+    if space.size() * n_steps > max_size:
+        raise ValueError(
+            f"dynamic table too large: {space.size()} x {n_steps}")
+    Y = np.full((n_steps,) + space.shape, invalid, np.float64)
+    valid = [idx for idx in
+             itertools.product(*(range(n) for n in space.shape))
+             if space.contains(idx)]
+    decoded = {idx: space.decode(idx) for idx in valid}
+    for t in range(n_steps):
+        for idx in valid:
+            Y[(t,) + idx] = float(fn(decoded[idx], t))
+    return Y
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,63 @@ class BlockNeighborhood(StepNeighborhood):
         return nbrs[rng.integers(len(nbrs))]
 
 
+# ---------------------------------------------------------------------------
+# Traced proposal kernels (consumed by repro.core.annealing.anneal_chain_nd).
+# ---------------------------------------------------------------------------
+
+
+def propose_nd(
+    key,
+    x,
+    shape: tuple[int, ...],
+    categorical: tuple[bool, ...],
+):
+    """Traced counterpart of :meth:`StepNeighborhood.propose`.
+
+    Picks one axis uniformly; ordinal axes move +-1 with boundary
+    reflection (clamped, so size-1 axes stay put), categorical axes
+    resample uniformly among the *other* values.  Both moves are symmetric,
+    so the base chain stays reversible.  ``shape``/``categorical`` are
+    static tuples; ``x`` is an (ndim,) int vector.
+
+    Validity is NOT checked here — the chain rejects invalid proposals via
+    the :class:`repro.core.state.EncodedSpace` mask, which preserves
+    detailed balance (a masked move is a zero-acceptance Metropolis step)
+    without enumerating valid neighbors inside the trace.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    ndim = len(shape)
+    sizes = jnp.asarray(shape, x.dtype)
+    cat = jnp.asarray(categorical, bool)
+    k_axis, k_dir, k_cat = jax.random.split(key, 3)
+    axis = jax.random.randint(k_axis, (), 0, ndim)
+    n = sizes[axis]
+    cur = x[axis]
+
+    delta = jnp.where(jax.random.bernoulli(k_dir), 1, -1).astype(x.dtype)
+    z = jnp.clip(cur + delta, 0, n - 1)
+    z = jnp.where(z == cur, cur - delta, z)   # reflect at the boundary
+    z_ord = jnp.clip(z, 0, n - 1)             # size-1 axis: nowhere to go
+
+    # uniform over the n-1 other values: draw r in [0, n-1), skip `cur`
+    r = jax.random.randint(k_cat, (), 0, jnp.maximum(n - 1, 1)).astype(x.dtype)
+    z_cat = jnp.where(r >= cur, r + 1, r)
+    z_cat = jnp.where(n > 1, z_cat, cur)
+
+    new = jnp.where(cat[axis], z_cat, z_ord)
+    return x.at[axis].set(new)
+
+
+def flat_index(x, shape: tuple[int, ...]):
+    """Row-major flat index of the (ndim,) index vector ``x`` (traced)."""
+    import jax.numpy as jnp
+
+    strides = np.cumprod((shape[1:] + (1,))[::-1])[::-1].copy()
+    return (x * jnp.asarray(strides, x.dtype)).sum()
+
+
 def check_connected(space: ConfigSpace, nbhd: Neighborhood) -> bool:
     """BFS over the valid region; True iff the move graph is connected.
 

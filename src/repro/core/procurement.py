@@ -13,13 +13,14 @@ detector, and the tabu memory, and exposes a decision log for audit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
-from .annealing import Annealer, Step
+from .annealing import Annealer, Step, anneal_fleet
 from .change_detect import PageHinkley
 from .costmodel import Evaluator
+from .landscape import tabulate
 from .neighborhood import Neighborhood, StepNeighborhood
 from .objective import Measurement, Objective
 from .pricing import ServiceCatalog
@@ -77,14 +78,17 @@ class ProcurementController:
             seed=self._rng, tabu=self.tabu, init=self.init,
         )
 
+    def _blend_weights(self) -> tuple[list[str], np.ndarray]:
+        names = list(self.blend)
+        weights = np.asarray([self.blend[k] for k in names], np.float64)
+        return names, weights / weights.sum()
+
     # -- objective evaluation: run job(s) under a decoded configuration --
     def _evaluate(self, decoded: dict[str, Any], n: int) -> float:
         cfg = cluster_config_from(decoded)
         mig_s, mig_usd = self.evaluator.migration(
             self._prev_cfg, cfg, self.catalog)
-        names = list(self.blend)
-        weights = np.asarray([self.blend[k] for k in names], np.float64)
-        weights = weights / weights.sum()
+        names, weights = self._blend_weights()
         measures: list[Measurement] = []
         if self.evaluate_blend:
             y = 0.0
@@ -138,6 +142,41 @@ class ProcurementController:
     def force_reheat(self) -> None:
         self.annealer.reheat()
 
+    # -- offline planning (batched sweep -> online warm start) --
+    def plan(
+        self,
+        n_chains: int = 256,
+        n_steps: int = 200,
+        tau: float = 1.0,
+        seed: int | None = None,
+    ) -> tuple[ClusterConfig, float]:
+        """Offline pass: tabulate the blended objective on the simulator,
+        anneal a jitted fleet over it, and warm-start the ONLINE chain at
+        the best configuration found (paper's offline mode as a planner;
+        cf. AutoTune-style joint-space sweeps).
+
+        The warm start's objective is deliberately left unmeasured
+        (``annealer.y = None``): the first live job re-measures it on the
+        real workload, so a simulator/real mismatch cannot pin the chain.
+        Returns (planned config, its simulated objective).
+        """
+        best_idx, best_y = offline_plan(
+            self.space, self._plan_objective,
+            n_chains=n_chains, n_steps=n_steps, tau=tau,
+            seed=self.seed if seed is None else seed)
+        self.annealer.state = tuple(best_idx)
+        self.annealer.y = None
+        return cluster_config_from(self.space.decode(best_idx)), best_y
+
+    def _plan_objective(self, decoded: dict[str, Any]) -> float:
+        """Blend-weighted objective WITHOUT migration/stream side effects —
+        a pure function of the configuration, suitable for tabulation."""
+        cfg = cluster_config_from(decoded)
+        names, weights = self._blend_weights()
+        return float(sum(
+            w * self.objective(self.evaluator.measure(cfg, name, 0))
+            for w, name in zip(weights, names)))
+
     # -- diagnostics --
     def best_config(self) -> tuple[ClusterConfig, float]:
         idx, y = self.annealer.best()
@@ -150,6 +189,39 @@ class ProcurementController:
         return sum(
             d.measurement.cost_usd + d.measurement.migration_usd
             for d in self.decisions)
+
+
+def offline_plan(
+    space: ConfigSpace,
+    objective_fn: Callable[[dict[str, Any]], float],
+    n_chains: int = 256,
+    n_steps: int = 200,
+    tau: float = 1.0,
+    seed: int = 0,
+) -> tuple[tuple[int, ...], float]:
+    """Batched offline sweep: tabulate ``objective_fn`` over the space and
+    run an ``anneal_fleet`` (one jitted call) from random valid starts.
+
+    Returns (best visited index vector, its tabulated objective).  Visited
+    states are always valid (invalid proposals are rejection-masked), so
+    the argmin over visited table entries needs no re-filtering.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    enc = space.encoded()
+    table = tabulate(space, objective_fn, valid_mask=enc.valid_mask)
+    y = jnp.asarray(table, jnp.float32)
+    out = anneal_fleet(jax.random.key(seed), enc, y, n_steps, float(tau),
+                       n_chains=n_chains)
+    # include step-0 states: a chain that STARTS at the best state it ever
+    # sees never records it in the scan outputs
+    states = np.concatenate(
+        [np.asarray(out["inits"])[:, None, :], np.asarray(out["states"])],
+        axis=1).reshape(-1, enc.ndim)
+    visited_y = table[tuple(states.T)]
+    k = int(np.argmin(visited_y))
+    return tuple(int(v) for v in states[k]), float(visited_y[k])
 
 
 def default_adaptive_schedule(tau: float = 1.0) -> AdaptiveReheat:
@@ -198,8 +270,9 @@ def make_tpu_space(
             Dimension("n_workers", tuple(chip_counts)),
             Dimension("tp_degree", tuple(allow_tp)),
             Dimension("microbatches", tuple(microbatches)),
-            Dimension("remat", tuple(remats)),
-            Dimension("compression", tuple(compressions)),
+            # no meaningful order: the compiled engine resamples these
+            Dimension("remat", tuple(remats), kind="categorical"),
+            Dimension("compression", tuple(compressions), kind="categorical"),
         ),
         is_valid=valid,
     )

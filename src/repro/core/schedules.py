@@ -12,8 +12,12 @@ offerings change (sec. 1, sec. 4.3).  All schedules expose
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
+from typing import Iterable
+
+import numpy as np
 
 
 class Schedule:
@@ -90,3 +94,29 @@ class AdaptiveReheat(Schedule):
 
     def reheat(self, n: int) -> None:
         self._reheat_at = n
+
+
+def schedule_to_array(
+    schedule: Schedule | float,
+    n_steps: int,
+    reheats: Iterable[int] = (),
+) -> np.ndarray:
+    """Materialize ``tau_n`` for ``n = 0..n_steps-1`` as an array.
+
+    The compiled chain (:func:`repro.core.annealing.anneal_chain_nd`)
+    consumes temperatures as data, so stateful schedules — including
+    reheat events at known job indices — are exported up front.
+    ``reheats`` lists the indices where ``schedule.reheat(n)`` fires before
+    ``tau(n)`` is read.  The schedule is deep-copied: exporting never
+    mutates the caller's (possibly live, online) schedule object.
+    """
+    if isinstance(schedule, (int, float)):
+        return np.full(n_steps, float(schedule))
+    s = copy.deepcopy(schedule)
+    fire = frozenset(int(r) for r in reheats)
+    out = np.empty(n_steps, np.float64)
+    for n in range(n_steps):
+        if n in fire:
+            s.reheat(n)
+        out[n] = s(n)
+    return out

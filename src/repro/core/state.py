@@ -25,24 +25,39 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Mapping, Sequence
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class Dimension:
-    """One ordered, discrete configuration dimension.
+    """One discrete configuration dimension.
 
-    ``values`` must be ordered so that adjacent values are "close" in effect
-    (the paper notes that a poor ordering of categorical instance types can
-    introduce artificial local minima, sec. 4.2.1).
+    ``kind`` distinguishes the paper's "partially categorical" axes:
+
+    * ``"ordinal"`` — ``values`` are ordered so adjacent values are "close"
+      in effect; neighborhoods move +-1 along the axis.  (The paper notes
+      that a poor ordering of categorical instance types can introduce
+      artificial local minima, sec. 4.2.1.)
+    * ``"categorical"`` — no meaningful order (e.g. remat strategy); the
+      traced proposal kernel resamples uniformly among the other values
+      instead of stepping, which removes the artificial-adjacency problem.
+
+    The Python-side :class:`repro.core.neighborhood.StepNeighborhood` treats
+    every axis ordinally; ``kind`` is consumed by the compiled N-dim engine
+    (:func:`repro.core.annealing.anneal_chain_nd`).
     """
 
     name: str
     values: tuple[Any, ...]
+    kind: str = "ordinal"
 
     def __post_init__(self) -> None:
         if len(self.values) == 0:
             raise ValueError(f"dimension {self.name!r} has no values")
         if len(set(map(repr, self.values))) != len(self.values):
             raise ValueError(f"dimension {self.name!r} has duplicate values")
+        if self.kind not in ("ordinal", "categorical"):
+            raise ValueError(f"dimension {self.name!r}: bad kind {self.kind!r}")
 
     def __len__(self) -> int:
         return len(self.values)
@@ -111,6 +126,59 @@ class ConfigSpace:
             if self.contains(idx):
                 out.append(idx)
         return out
+
+    def validity_mask(self, max_size: int = 200_000) -> np.ndarray | None:
+        """Boolean array of shape :attr:`shape`; None when every index is
+        valid (no ``is_valid`` predicate).  Requires an enumerable space."""
+        if self.is_valid is None:
+            return None
+        if self.size() > max_size:
+            raise ValueError(f"space too large to tabulate: {self.size()}")
+        mask = np.zeros(self.shape, dtype=bool)
+        for idx in itertools.product(*(range(len(d)) for d in self.dimensions)):
+            mask[idx] = self.contains(idx)
+        return mask
+
+    def encoded(self, max_size: int = 200_000) -> "EncodedSpace":
+        """Static, trace-friendly view consumed by the compiled engine."""
+        return EncodedSpace(
+            shape=self.shape,
+            categorical=tuple(d.kind == "categorical" for d in self.dimensions),
+            valid_mask=self.validity_mask(max_size),
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq would compare the mask array
+class EncodedSpace:
+    """A ConfigSpace flattened for the pure-JAX chain.
+
+    ``shape`` and ``categorical`` are Python tuples — static under jit, so
+    they can parameterize compiled proposal kernels; ``valid_mask`` is a
+    host-side boolean array over the full product (None == all valid) that
+    the chain consults as data, turning the constrained region into a
+    rejection mask.
+    """
+
+    shape: tuple[int, ...]
+    categorical: tuple[bool, ...]
+    valid_mask: np.ndarray | None = None
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.categorical):
+            raise ValueError("shape/categorical rank mismatch")
+        if self.valid_mask is not None and self.valid_mask.shape != self.shape:
+            raise ValueError(
+                f"valid_mask shape {self.valid_mask.shape} != {self.shape}")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
 
 
 # ---------------------------------------------------------------------------

@@ -16,14 +16,30 @@ DCN boundary — exactly one gradient reduction crosses it per step.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit Auto/Explicit/Manual axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax (e.g. 0.4.x): every axis is implicitly Auto
+    AxisType = None
+
+
+def mesh_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` kwargs for :func:`jax.make_mesh`, feature-detected.
+
+    On jax builds without ``jax.sharding.AxisType`` returns ``{}`` — those
+    versions treat every mesh axis as Auto, which is exactly what we ask
+    for on newer builds.
+    """
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
@@ -31,7 +47,7 @@ def make_host_mesh(model: int = 1) -> Mesh:
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+                         **mesh_axis_kwargs(2))
 
 
 def mesh_chips(mesh: Mesh) -> int:

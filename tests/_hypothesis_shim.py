@@ -1,0 +1,112 @@
+"""Optional-hypothesis compatibility layer for the property tests.
+
+When hypothesis is installed, its ``given``/``settings``/``strategies`` are
+re-exported unchanged.  When it is not (the minimal tier-1 environment),
+a tiny seeded pseudo-random fallback implements the strategy surface these
+tests actually use, so the same assertions still run — with weaker example
+coverage than real hypothesis, but deterministically (the generator is
+seeded from the test name).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data()`` object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example(self._rng)
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:       # exercise the endpoints
+                    return lo
+                if r < 0.10:
+                    return hi
+                return rng.uniform(lo, hi)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def draw(rng):
+                    return fn(_DataObject(rng).draw, *args, **kwargs)
+
+                return _Strategy(draw)
+
+            return build
+
+        @staticmethod
+        def data():
+            return _Strategy(_DataObject)
+
+    def given(*arg_strategies, **kwarg_strategies):
+        def decorate(fn):
+            # NOTE: deliberately not functools.wraps — pytest must see a
+            # zero-argument signature (the drawn parameters are not
+            # fixtures), and `__wrapped__` would leak the original one.
+            def wrapper():
+                n = (getattr(wrapper, "_max_examples", None)
+                     or getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                rng = random.Random(zlib.adler32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kwarg_strategies.items()}
+                    fn(*drawn, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = getattr(fn, "_max_examples", None)
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, deadline=None, **_):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (
     Annealer,
@@ -22,6 +22,7 @@ from repro.core import (
 )
 from repro.core.neighborhood import StepNeighborhood
 from repro.core.state import ConfigSpace, Dimension
+from repro.core.tabu import TabuMemory
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +165,62 @@ def test_annealer_runs_and_records():
     best_state, best_y = ann.best()
     assert best_y <= float(y[10])
     assert 0.0 <= ann.exploration_rate() <= 1.0
+
+
+def test_anneal_chain_single_state_space_stays_in_range():
+    """S == 1: reflection at the boundary used to produce an out-of-range
+    index (-1 or +1); the chain must stay pinned at the only state."""
+    y = jnp.asarray([3.0], jnp.float32)
+    states, ys, _ = anneal_chain(jax.random.key(0), y, 64, tau=1.0)
+    assert np.all(np.asarray(states) == 0)
+    np.testing.assert_allclose(np.asarray(ys), 3.0)
+    tables = jnp.broadcast_to(y, (64, 1))
+    states, _, _ = anneal_chain_dynamic(jax.random.key(1), tables, 64, 1.0)
+    assert np.all(np.asarray(states) == 0)
+
+
+def test_annealer_best_includes_incumbent_measurement():
+    y = bimodal_landscape()
+    space = _space_1d(len(y))
+    start = int(np.argmin(y))           # start AT the global minimum
+    ann = Annealer(space, StepNeighborhood(space),
+                   evaluate=lambda cfg, n: float(y[cfg["x"]]),
+                   schedule=1e-6, seed=0, init=(start,))
+    ann.run(5)                          # cold chain: never improves on init
+    best_state, best_y = ann.best()
+    assert best_state == (start,)
+    assert np.isclose(best_y, float(y[start]))
+
+
+def test_reheat_invalidates_incumbent_and_remeasures_with_tabu():
+    """Reheat + tabu: the stale incumbent objective must be dropped and the
+    incumbent re-measured on the next step (on the NEW landscape)."""
+    y1, y2 = bimodal_landscape(), changed_landscape()
+    current = {"y": y1}
+    calls = []
+
+    def ev(cfg, n):
+        calls.append(cfg["x"])
+        return float(current["y"][cfg["x"]])
+
+    space = _space_1d(len(y1))
+    ann = Annealer(space, StepNeighborhood(space), evaluate=ev,
+                   schedule=1.0, seed=3, init=(int(np.argmin(y1)),),
+                   tabu=TabuMemory(horizon=4))
+    ann.run(20)
+    assert ann.y is not None
+    current["y"] = y2                   # the workload changes...
+    ann.reheat()                        # ...and the controller reheats
+    assert ann.y is None                # incumbent invalidated
+    incumbent = ann.state
+    n_calls = len(calls)
+    ann.step()
+    # first evaluation after the reheat is the incumbent itself
+    assert calls[n_calls] == incumbent[0]
+    assert len(calls) == n_calls + 2    # incumbent refresh + one proposal
+    # the refreshed objective comes from the new landscape, not the old one
+    post = [e for e in ann.evaluations if e[0] == incumbent][-1]
+    assert np.isclose(post[1], float(y2[incumbent[0]]))
 
 
 def test_annealer_incumbent_only_changes_on_accept():

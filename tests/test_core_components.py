@@ -3,7 +3,7 @@ schedules, tabu, change detection."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.change_detect import PageHinkley, WindowedZScore
 from repro.core.neighborhood import (

@@ -13,6 +13,7 @@ from repro.core.objective import Objective
 from repro.core.pricing import EC2_CATALOG_ADJUSTED
 from repro.core.procurement import ProcurementController, make_ec2_space
 from repro.core.change_detect import PageHinkley
+from repro.launch.mesh import mesh_axis_kwargs
 from repro.runtime.fault_tolerance import (
     FailureInjector,
     StepFailure,
@@ -226,8 +227,7 @@ def test_logical_to_physical_basic(host_mesh):
 
 
 def test_zero_spec_adds_data_axis():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **mesh_axis_kwargs(2))
     out = zero_spec((64, 128), P(None, "model"), mesh)
     assert out == P("data", "model")
     # respects existing data shardings
@@ -236,8 +236,7 @@ def test_zero_spec_adds_data_axis():
 
 
 def test_spec_shardable_drops_indivisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **mesh_axis_kwargs(2))
     # "model" has size 1 here; use a fake divisibility check via shape 7
     out = spec_shardable((7, 8), P("model", None), mesh)
     assert out == P("model", None)   # size 1 divides everything

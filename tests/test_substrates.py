@@ -10,6 +10,7 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.launch.mesh import mesh_axis_kwargs
 from repro.data import DataConfig, SyntheticLM, make_pipeline
 from repro.optim.compression import compressed_roundtrip, quantize_int8
 from repro.optim.optimizer import (
@@ -241,8 +242,7 @@ def test_checkpoint_structure_mismatch_raises(tmp_path):
 
 def test_checkpoint_restore_with_shardings(tmp_path):
     """Elastic re-placement: restore against explicit target shardings."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",), **mesh_axis_kwargs(1))
     t = _tree()
     save_pytree(t, str(tmp_path), step=1)
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
