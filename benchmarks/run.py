@@ -9,13 +9,14 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import blended_workloads, dnn_annealing, kernel_bench, \
-    paper_figures, roofline_table
+from . import blended_workloads, dnn_annealing, fleet_arbitration, \
+    kernel_bench, paper_figures, roofline_table
 from .common import write_json
 
 SUITES = {
     "paper_figures": paper_figures.run_all,
     "blended_workloads": blended_workloads.run_all,
+    "fleet_arbitration": fleet_arbitration.run_all,
     "dnn_annealing": dnn_annealing.run_all,
     "roofline_table": roofline_table.run_all,
     "kernel_bench": kernel_bench.run_all,

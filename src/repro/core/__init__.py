@@ -14,7 +14,8 @@ from .annealing import (
     jobs_to_min_vs_tau_fleet,
     random_valid_states,
 )
-from .change_detect import PageHinkley, WindowedZScore
+from .change_detect import BatchedPageHinkley, PageHinkley, WindowedZScore
+from .fleet import FleetController, FleetDecision, TenantSpec
 from .costmodel import (
     Evaluator,
     MeasuredEvaluator,
@@ -42,16 +43,24 @@ from .neighborhood import (
     check_connected,
     propose_nd,
 )
-from .objective import BlendedObjective, Measurement, Objective, blend_from_weights
+from .objective import (
+    BlendedObjective,
+    Measurement,
+    Objective,
+    PenalizedObjective,
+    blend_from_weights,
+)
 from .pricing import (
     EC2_CATALOG,
     EC2_CATALOG_ADJUSTED,
     TPU_CATALOG,
+    CapacityError,
     InstanceFamily,
     ServiceCatalog,
     interpolated_family,
 )
 from .procurement import (
+    ControllerMixin,
     Decision,
     ProcurementController,
     default_adaptive_schedule,
@@ -81,7 +90,8 @@ __all__ = [
     "anneal_chain_dynamic", "anneal_chain_nd", "anneal_fleet",
     "first_hit_time", "jobs_to_min_vs_tau", "jobs_to_min_vs_tau_fleet",
     "random_valid_states",
-    "PageHinkley", "WindowedZScore",
+    "BatchedPageHinkley", "PageHinkley", "WindowedZScore",
+    "FleetController", "FleetDecision", "TenantSpec",
     "Evaluator", "MeasuredEvaluator", "RooflineEvaluator",
     "SimulatedEvaluator", "StepCosts", "objective_of",
     "BLEND_AFTER", "BLEND_BEFORE", "HIBENCH_JOBS", "JobModel",
@@ -89,10 +99,12 @@ __all__ = [
     "dnn_epoch_landscape", "tabulate", "tabulate_dynamic",
     "BlockNeighborhood", "Neighborhood", "StepNeighborhood", "check_connected",
     "propose_nd",
-    "BlendedObjective", "Measurement", "Objective", "blend_from_weights",
-    "EC2_CATALOG", "EC2_CATALOG_ADJUSTED", "TPU_CATALOG", "InstanceFamily",
-    "ServiceCatalog", "interpolated_family",
-    "Decision", "ProcurementController", "default_adaptive_schedule",
+    "BlendedObjective", "Measurement", "Objective", "PenalizedObjective",
+    "blend_from_weights",
+    "EC2_CATALOG", "EC2_CATALOG_ADJUSTED", "TPU_CATALOG", "CapacityError",
+    "InstanceFamily", "ServiceCatalog", "interpolated_family",
+    "ControllerMixin", "Decision", "ProcurementController",
+    "default_adaptive_schedule",
     "make_ec2_space", "make_tpu_space", "offline_plan",
     "AdaptiveReheat", "FixedTemperature", "GeometricCooling", "LogCooling",
     "Schedule", "schedule_to_array",

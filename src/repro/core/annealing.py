@@ -117,7 +117,12 @@ class Annealer:
             )
             if self.space.contains(idx):
                 return idx
-        raise RuntimeError("could not sample a valid initial state")
+        raise ValueError(
+            f"no valid state found in ConfigSpace"
+            f"({', '.join(self.space.names)}) shape={self.space.shape} "
+            f"after {tries} uniform samples — the validity predicate may "
+            f"reject every state (or the valid region is vanishingly small; "
+            f"pass an explicit init)")
 
     def reheat(self) -> None:
         """Signal a workload/offering change: raise the temperature AND
@@ -331,18 +336,27 @@ def _as_encoded(space: ConfigSpace | EncodedSpace) -> EncodedSpace:
 
 def _chain_nd_core(
     key, y_flat, valid_flat, taus, init,
-    *, shape, categorical, dynamic, noise_std,
+    *, shape, categorical, dynamic, noise_std, extra_flat=None,
 ):
     """One N-dim chain.  ``y_flat`` is the flattened objective table —
     (size,) static or (n_steps, size) time-indexed; ``valid_flat`` is a
     (size,) bool mask or None; ``taus`` is (n_steps,).  Proposals into
     invalid states are rejected (zero-acceptance Metropolis move), which
     keeps the chain inside the constrained region without enumerating
-    neighbors in the trace."""
+    neighbors in the trace.  ``extra_flat`` is an optional (size,) additive
+    cost row folded into every measurement — the fleet controller's
+    coupling penalty (aggregate capacity/budget overshoot), applied inside
+    the acceptance rule so arbitration pressure shapes the walk itself."""
 
     def measure(k, y):
         if noise_std > 0.0:
             y = y + noise_std * jax.random.normal(k, ())
+        return y
+
+    def lookup(y_now, zi):
+        y = y_now[zi]
+        if extra_flat is not None:
+            y = y + extra_flat[zi]
         return y
 
     def body(carry, inp):
@@ -355,7 +369,7 @@ def _chain_nd_core(
         key, k_prop, k_meas, k_acc = jax.random.split(key, 4)
         z = propose_nd(k_prop, x, shape, categorical)
         zi = flat_index(z, shape)
-        y_z = measure(k_meas, y_now[zi])
+        y_z = measure(k_meas, lookup(y_now, zi))
         dy = y_z - y_x
         p = jnp.exp(-jnp.maximum(dy, 0.0) / t)
         accept = jax.random.uniform(k_acc) < p
@@ -368,7 +382,7 @@ def _chain_nd_core(
     init = jnp.asarray(init, jnp.int32)
     key, k0 = jax.random.split(key)
     y0_table = y_flat[0] if dynamic else y_flat
-    y0 = measure(k0, y0_table[flat_index(init, shape)])
+    y0 = measure(k0, lookup(y0_table, flat_index(init, shape)))
     xs = (taus, y_flat) if dynamic else (taus,)
     (_, _, _), (states, ys, accepts) = jax.lax.scan(
         body, (key, init, y0), xs)
@@ -389,15 +403,21 @@ def _chain_nd_jit(key, y_flat, valid_flat, taus, init,
     jax.jit,
     static_argnames=("shape", "categorical", "dynamic", "noise_std",
                      "per_chain"))
-def _fleet_nd_jit(keys, y_flat, valid_flat, taus, inits,
+def _fleet_nd_jit(keys, y_flat, valid_flat, taus, inits, extra,
                   *, shape, categorical, dynamic, noise_std, per_chain):
-    def one(key, tau_row, init, y):
+    def one(key, tau_row, init, y, e):
         return _chain_nd_core(
             key, y, valid_flat, tau_row, init, shape=shape,
-            categorical=categorical, dynamic=dynamic, noise_std=noise_std)
+            categorical=categorical, dynamic=dynamic, noise_std=noise_std,
+            extra_flat=e)
 
-    return jax.vmap(one, in_axes=(0, 0, 0, 0 if per_chain else None))(
-        keys, taus, inits, y_flat)
+    # `extra` is None (no coupling) or (C, size) per-chain additive rows;
+    # None is an empty pytree, so in_axes=None traces the no-extra variant.
+    return jax.vmap(
+        one,
+        in_axes=(0, 0, 0, 0 if per_chain else None,
+                 None if extra is None else 0),
+    )(keys, taus, inits, y_flat, extra)
 
 
 def _default_init(enc: EncodedSpace) -> np.ndarray:
@@ -483,6 +503,8 @@ def anneal_fleet(
     n_chains: int | None = None,
     noise_std: float = 0.0,
     per_chain_tables: bool = False,
+    extra_costs: jax.Array | np.ndarray | None = None,
+    coupling_penalty: Callable[[EncodedSpace, int], np.ndarray] | None = None,
 ) -> dict[str, jax.Array]:
     """A fleet of N-dim chains in ONE jitted call (paper Figs. 4/5/10 at
     scale: seeds x temperatures x tenants).
@@ -494,9 +516,21 @@ def anneal_fleet(
     objective table per chain (multi-tenant fleets); combined with a
     time axis the per-chain tables may also be dynamic.
 
+    ``extra_costs``: optional per-chain additive cost rows, shape
+    ``(C,) + space.shape`` or ``(C, size)`` flattened — every measurement
+    of chain c at state s sees ``y_table[...] + extra_costs[c, s]``.  This
+    is the multi-tenant coupling channel: the FleetController encodes the
+    aggregate capacity/budget overshoot each tenant would cause (given the
+    other tenants' incumbents) as a penalty surface, so shared-resource
+    pressure acts *inside* the acceptance rule rather than as an
+    after-the-fact clamp.  ``coupling_penalty`` is the callable form of the
+    same hook: ``coupling_penalty(encoded_space, n_chains)`` must return
+    such an array (mutually exclusive with ``extra_costs``).
+
     Returns ``{"states": (C, n_steps, ndim), "ys": (C, n_steps),
     "accepts": (C, n_steps), "inits": (C, ndim)}`` — inits included so
-    callers scanning for the best visited state also see step-0 states.
+    callers scanning for the best visited state also see step-0 states;
+    ``ys`` include the extra-cost term when one is supplied.
     """
     enc = _as_encoded(space)
     y = jnp.asarray(y_table, jnp.float32)
@@ -545,8 +579,22 @@ def anneal_fleet(
     valid_flat = (None if enc.valid_mask is None
                   else jnp.asarray(enc.valid_mask.reshape(-1)))
 
+    if coupling_penalty is not None:
+        if extra_costs is not None:
+            raise ValueError("pass extra_costs OR coupling_penalty, not both")
+        extra_costs = coupling_penalty(enc, n_chains)
+    extra = None
+    if extra_costs is not None:
+        extra = jnp.asarray(extra_costs, jnp.float32)
+        if extra.shape == (n_chains,) + enc.shape:
+            extra = extra.reshape(n_chains, -1)
+        if extra.shape != (n_chains, enc.size()):
+            raise ValueError(
+                f"extra_costs shape {extra.shape} != "
+                f"{(n_chains,) + enc.shape} (or its flattened form)")
+
     states, ys, accepts = _fleet_nd_jit(
-        keys, y_flat, valid_flat, taus_b, inits, shape=enc.shape,
+        keys, y_flat, valid_flat, taus_b, inits, extra, shape=enc.shape,
         categorical=enc.categorical, dynamic=dynamic,
         noise_std=float(noise_std), per_chain=per_chain_tables)
     return {"states": states, "ys": ys, "accepts": accepts,

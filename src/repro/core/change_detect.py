@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class PageHinkley:
@@ -60,6 +62,68 @@ class PageHinkley:
             self.reset()
             return True
         return False
+
+
+@dataclasses.dataclass
+class BatchedPageHinkley:
+    """:class:`PageHinkley` over B parallel streams, vectorized.
+
+    Per-stream semantics are identical to the scalar detector (same Welford
+    statistics, margins, clipping, per-stream reset on signal); the batch
+    axis amortizes what would otherwise be B x steps Python-level
+    ``update`` calls per fleet control round into a handful of numpy ops.
+    Non-finite observations are skipped per stream (the fleet feeds
+    chain-measured objectives, where proposals into masked-out states
+    measure +inf).
+    """
+
+    n_streams: int
+    delta: float = 0.2
+    threshold: float = 6.0
+    min_obs: int = 25
+    z_clip: float = 6.0
+
+    def __post_init__(self) -> None:
+        if self.n_streams < 1:
+            raise ValueError("n_streams must be >= 1")
+        self.reset()
+
+    def reset(self, mask: np.ndarray | None = None) -> None:
+        """Reset all streams (mask=None) or the masked subset."""
+        if mask is None:
+            z = np.zeros(self.n_streams)
+            self._n = np.zeros(self.n_streams, np.int64)
+            self._mean, self._m2 = z.copy(), z.copy()
+            self._up, self._down = z.copy(), z.copy()
+            return
+        self._n[mask] = 0
+        for arr in (self._mean, self._m2, self._up, self._down):
+            arr[mask] = 0.0
+
+    def update(self, ys: np.ndarray) -> np.ndarray:
+        """Feed one observation per stream; returns (B,) bool fired flags
+        (fired streams reset, exactly like the scalar detector)."""
+        y = np.asarray(ys, np.float64)
+        if y.shape != (self.n_streams,):
+            raise ValueError(f"expected ({self.n_streams},), got {y.shape}")
+        ok = np.isfinite(y)
+        y0 = np.where(ok, y, 0.0)
+        self._n = self._n + ok
+        d = np.where(ok, y0 - self._mean, 0.0)
+        self._mean = self._mean + d / np.maximum(self._n, 1)
+        self._m2 = self._m2 + d * np.where(ok, y0 - self._mean, 0.0)
+        active = ok & (self._n >= self.min_obs)
+        std = np.sqrt(self._m2 / np.maximum(self._n - 1, 1)) + 1e-12
+        z = np.clip((y0 - self._mean) / std, -self.z_clip, self.z_clip)
+        self._up = np.where(
+            active, np.maximum(0.0, self._up + z - self.delta), self._up)
+        self._down = np.where(
+            active, np.maximum(0.0, self._down - z - self.delta), self._down)
+        fired = active & ((self._up > self.threshold)
+                          | (self._down > self.threshold))
+        if fired.any():
+            self.reset(fired)
+        return fired
 
 
 @dataclasses.dataclass

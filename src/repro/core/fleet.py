@@ -1,0 +1,574 @@
+"""Multi-tenant fleet control: shared-capacity arbitration over one
+batched annealing call.
+
+The paper's controller (:mod:`repro.core.procurement`) anneals ONE tenant's
+configuration against an unbounded catalog; its conclusion argues the
+platform should extend to many concurrent workloads negotiating a shared
+cloud.  Per-service tuning without a cluster-wide budget oscillates and
+overspends (AutoTune, arXiv:2106.10334; Rodriguez & Buyya,
+arXiv:1812.00300), so the coupling here lives *inside* the annealing
+objective rather than as an after-the-fact clamp.
+
+:class:`FleetController` owns T tenants over a shared :class:`ConfigSpace`,
+a capacity-capped :class:`ServiceCatalog` and a global dollar-rate budget.
+Each control round it
+
+1. draws one job per tenant from a :class:`MultiTenantStream` (per-tenant
+   blends, staggered change points) and rebuilds any tenant's blended
+   objective table whose blend changed (tables are cached per blend);
+2. recomputes each tenant's *coupling penalty row* from the previous
+   round's incumbents: for every candidate state, the aggregate
+   capacity/budget overshoot the tenant would cause given the OTHER
+   tenants' current allocations, scaled by
+   :meth:`PenalizedObjective.penalize`;
+3. runs all T chains in ONE jitted :func:`anneal_fleet` call
+   (``per_chain_tables=True``), threading the penalty rows through the
+   compiled acceptance rule as ``extra_costs``;
+4. arbitrates the tenants' proposals — **admit** / **hold** / **defer** /
+   **preempt** by priority-weighted objective deltas — so no round ends
+   with the aggregate over capacity while a feasible repair exists;
+5. logs one :class:`FleetDecision` per tenant (field-compatible with the
+   single-tenant :class:`Decision` audit format) and mirrors the final
+   allocation into the catalog's reservation ledger
+   (:meth:`ServiceCatalog.reserve`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .annealing import _fleet_nd_jit
+from .change_detect import BatchedPageHinkley
+from .costmodel import Evaluator
+from .landscape import tabulate
+from .objective import Objective, PenalizedObjective
+from .pricing import ServiceCatalog
+from .procurement import ControllerMixin, Decision
+from .schedules import AdaptiveReheat, Schedule
+from .state import ConfigSpace, cluster_config_from
+from ..workloads.simulator import MultiTenantStream, TenantWorkload
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of the shared fleet.
+
+    ``priority`` weighs the tenant's objective deltas during arbitration
+    (higher = admitted first) and shields it from preemption (lowest
+    priority is preempted first).  ``blend_after``/``change_at`` declare a
+    staggered workload change at the given control ROUND (paper sec. 4.3,
+    per tenant).  ``init`` overrides the default start (the cheapest valid
+    state, which keeps round 0 trivially feasible when capacity admits
+    every tenant at minimum scale).
+    """
+
+    name: str
+    blend: Mapping[str, float]
+    priority: float = 1.0
+    blend_after: Mapping[str, float] | None = None
+    change_at: int | None = None
+    init: tuple[int, ...] | None = None
+
+    def __post_init__(self) -> None:
+        if self.priority <= 0:
+            raise ValueError(f"tenant {self.name!r}: priority must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDecision(Decision):
+    """A per-tenant, per-round fleet decision.
+
+    Extends the single-tenant audit record with the tenant identity, the
+    control round, the arbitration ``action`` ("admit" — proposal applied;
+    "hold" — no improving proposal; "defer" — improving proposal rejected
+    for aggregate capacity/budget; "preempt" — forcibly moved to restore
+    feasibility) and ``violation`` — the tenant's marginal contribution
+    (unweighted: cores over capacity plus $/hr over budget) to the FINAL
+    assignment's aggregate overshoot, 0.0 in any feasible round.
+    ``n`` carries the round index, so single-tenant audit tooling keyed on
+    ``n`` still orders records correctly.  ``explored`` keeps the
+    single-tenant meaning — the tenant's chain accepted an uphill move
+    during the round — not a property of the arbitrated proposal (which,
+    as an argmin over visited states, is never uphill).
+    """
+
+    tenant: str
+    round: int
+    action: str
+    violation: float
+
+
+class FleetController(ControllerMixin):
+    """Online multi-tenant procurement over a shared, finite catalog.
+
+    All tenants share one ``space`` (the catalog's configuration axes);
+    their individual workloads live in per-tenant objective *tables*, which
+    is exactly the ``per_chain_tables`` mode of :func:`anneal_fleet`.
+
+    ``budget_usd_hr`` caps the fleet's aggregate spend *rate* (sum over
+    tenants of their configuration's on-demand $/hr); per-family core
+    capacities come from the catalog (:meth:`ServiceCatalog.capacity`).
+    """
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        catalog: ServiceCatalog,
+        evaluator: Evaluator,
+        tenants: Sequence[TenantSpec],
+        objective: Objective | PenalizedObjective | None = None,
+        budget_usd_hr: float = math.inf,
+        steps_per_round: int = 32,
+        tau: float = 1.0,
+        tau_hot: float | None = None,
+        detectors: bool = True,
+        seed: int = 0,
+    ):
+        if not tenants:
+            raise ValueError("at least one tenant required")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        if steps_per_round < 1:
+            raise ValueError("steps_per_round must be >= 1")
+        if objective is None:
+            objective = PenalizedObjective()
+        elif isinstance(objective, Objective):
+            objective = PenalizedObjective(base=objective)
+        self.space = space
+        self.catalog = catalog
+        self.evaluator = evaluator
+        self.tenants = tuple(tenants)
+        self.objective = objective
+        self.budget_usd_hr = float(budget_usd_hr)
+        self.steps_per_round = int(steps_per_round)
+        self._key = jax.random.key(seed)
+        self._enc = space.encoded()
+        self._shape = self._enc.shape
+
+        self._stream = MultiTenantStream(
+            [TenantWorkload(t.name, t.blend, t.blend_after, t.change_at)
+             for t in tenants],
+            seed=seed,
+        )
+
+        # -- static usage model over the flattened space --
+        S = self._enc.size()
+        fam_names = catalog.names()
+        self._families = fam_names
+        fam_idx = {f: i for i, f in enumerate(fam_names)}
+        self._cores_by_family = np.zeros((len(fam_names), S), np.float64)
+        self._spend_rate = np.zeros(S, np.float64)
+        self._valid_flat = (np.ones(S, bool) if self._enc.valid_mask is None
+                            else self._enc.valid_mask.reshape(-1))
+        self._valid_jnp = (None if self._enc.valid_mask is None
+                           else jnp.asarray(self._valid_flat))
+        self._tables_jnp = None     # (T, S) device copy; rebuilt on change
+        for s in range(S):
+            idx = np.unravel_index(s, self._shape)
+            cfg = cluster_config_from(space.decode([int(i) for i in idx]))
+            cores = float(cfg.total_cores)
+            self._cores_by_family[fam_idx[cfg.instance_type], s] = cores
+            self._spend_rate[s] = (
+                catalog[cfg.instance_type].price_per_core_hr * cores)
+        self._mirrored: dict[str, float] = {}
+        self._capacity = np.zeros(len(fam_names), np.float64)
+        self._refresh_capacity()   # respects pre-existing foreign holds
+        feasible_spend = np.where(self._valid_flat, self._spend_rate, np.inf)
+        feasible_cores = np.where(
+            self._valid_flat, self._cores_by_family.sum(0), np.inf)
+        self._fallback = int(np.lexsort((feasible_cores, feasible_spend))[0])
+        if not self._valid_flat[self._fallback]:
+            raise ValueError("space has no valid states")
+
+        # -- per-tenant mutable controller state --
+        self._tables: dict[tuple, np.ndarray] = {}       # blend -> flat table
+        self._incumbents = np.empty(len(tenants), np.int64)
+        for i, t in enumerate(tenants):
+            if t.init is not None:
+                if not space.contains(t.init):
+                    raise ValueError(
+                        f"tenant {t.name!r}: init {t.init} not valid")
+                self._incumbents[i] = int(
+                    np.ravel_multi_index(t.init, self._shape))
+            else:
+                self._incumbents[i] = self._fallback
+        self._tenant_tables = [
+            self._table_for(self._stream.blend_of(t.name))
+            for t in tenants
+        ]
+        self._schedules: list[Schedule] = [
+            AdaptiveReheat(
+                tau_base=tau,
+                tau_hot=8.0 * tau if tau_hot is None else tau_hot,
+                relax=0.9)
+            for _ in tenants
+        ]
+        self._detector = (BatchedPageHinkley(len(tenants)) if detectors
+                          else None)
+        self._reheat_pending = [False] * len(tenants)
+        self._prev_cfgs = [None] * len(tenants)
+        self._round = 0
+        self._init_decision_log()
+        self.violation_history: list[float] = []
+        self._mirror_reservations()
+
+    # ------------------------------------------------------------------
+    # tables and coupling penalties
+    # ------------------------------------------------------------------
+
+    def _table_for(self, blend: Mapping[str, float]) -> np.ndarray:
+        """Flat (size,) blended base-objective table; cached per blend."""
+        names, weights = self.normalize_blend(blend)
+        key = tuple(sorted(zip(names, weights)))
+        if key not in self._tables:
+            base = self.objective.base
+
+            def fn(decoded: dict[str, Any]) -> float:
+                cfg = cluster_config_from(decoded)
+                return float(sum(
+                    w * base(self.evaluator.measure(cfg, name, 0))
+                    for name, w in zip(names, weights)))
+
+            table = tabulate(self.space, fn,
+                             valid_mask=self._enc.valid_mask)
+            self._tables[key] = table.reshape(-1)
+        return self._tables[key]
+
+    def _overshoot_row(
+        self, others_cores: np.ndarray, others_spend: float
+    ) -> np.ndarray:
+        """(size,) aggregate overshoot a tenant would cause at each
+        candidate state, given the other tenants' usage: capacity overshoot
+        in cores (summed across families) plus $/hr beyond the budget.
+        The single source of truth for both the annealing coupling penalty
+        and arbitration's feasibility headroom."""
+        over_c = np.clip(
+            self._cores_by_family
+            + (others_cores - self._capacity)[:, None],
+            0.0, None).sum(0)
+        over_b = np.clip(
+            self._spend_rate + (others_spend - self.budget_usd_hr),
+            0.0, None)
+        return over_c + over_b
+
+    def coupling_rows(
+        self, incumbents: Sequence[int] | np.ndarray | None = None
+    ) -> np.ndarray:
+        """(T, size) penalty rows: for tenant i at candidate state s, the
+        weighted aggregate capacity + budget overshoot given the OTHER
+        tenants' incumbent allocations."""
+        inc = np.asarray(
+            self._incumbents if incumbents is None else incumbents,
+            np.int64)
+        T = len(self.tenants)
+        if inc.shape != (T,):
+            raise ValueError(f"incumbents shape {inc.shape} != ({T},)")
+        agg_cores = self._cores_by_family[:, inc].sum(1)       # (F,)
+        agg_spend = float(self._spend_rate[inc].sum())
+        rows = np.zeros((T, self._enc.size()), np.float64)
+        for i in range(T):
+            others_c = agg_cores - self._cores_by_family[:, inc[i]]
+            others_s = agg_spend - self._spend_rate[inc[i]]
+            rows[i] = self.objective.penalize(
+                0.0, self._overshoot_row(others_c, others_s))
+        return rows
+
+    def coupling_penalty(self, enc, n_chains: int) -> np.ndarray:
+        """The :func:`anneal_fleet` ``coupling_penalty`` hook form: current
+        incumbent-derived rows, reshaped to ``(T,) + space.shape``."""
+        if n_chains != len(self.tenants):
+            raise ValueError(
+                f"n_chains {n_chains} != {len(self.tenants)} tenants")
+        return self.coupling_rows().reshape((n_chains,) + self._shape)
+
+    # ------------------------------------------------------------------
+    # feasibility
+    # ------------------------------------------------------------------
+
+    def _aggregate(self, states: np.ndarray) -> tuple[np.ndarray, float]:
+        return (self._cores_by_family[:, states].sum(1),
+                float(self._spend_rate[states].sum()))
+
+    def _refresh_capacity(self) -> None:
+        """Effective per-family capacity = what the catalog can still give
+        us plus what we already hold: ``remaining() + own mirror``.  Read
+        each round, so reservations placed by OTHERS (operator headroom
+        holds, a second controller on the same catalog) shrink our
+        feasible region live instead of being silently allocated over."""
+        self._capacity = np.asarray([
+            self.catalog.remaining(f) + self._mirrored.get(f, 0.0)
+            for f in self._families], np.float64)
+
+    def _overshoot(self, cores: np.ndarray, spend: float) -> float:
+        """Scalar overshoot of an aggregate usage: cores beyond each
+        family's capacity (summed) plus $/hr beyond the budget.  The one
+        source of truth for feasibility — `_violation`, `_best_feasible`
+        and the preemption pass all measure against this."""
+        return float(np.clip(cores - self._capacity, 0.0, None).sum()
+                     + max(0.0, spend - self.budget_usd_hr))
+
+    def _violation(self, states: np.ndarray) -> float:
+        """Aggregate overshoot (cores across families + $/hr) of an
+        assignment; 0.0 iff feasible."""
+        return self._overshoot(*self._aggregate(states))
+
+    def _feasible(self, states: np.ndarray) -> bool:
+        return self._violation(states) <= 1e-9
+
+    def _others_usage(
+        self, i: int, states: np.ndarray
+    ) -> tuple[np.ndarray, float]:
+        """Aggregate (cores-by-family, $/hr) of everyone EXCEPT tenant i."""
+        cores, spend = self._aggregate(states)
+        return (cores - self._cores_by_family[:, states[i]],
+                spend - self._spend_rate[states[i]])
+
+    def _best_feasible(self, i: int, states: np.ndarray) -> int:
+        """Tenant i's best valid state that adds no MARGINAL overshoot
+        beyond what the other tenants already cause; the global cheapest
+        valid state if every state would deepen the breach.  Marginal —
+        not total — headroom matters here: while others violate, the
+        others' overshoot is a constant across ALL of tenant i's candidate
+        states, and testing against total overshoot would declare nothing
+        fitting and churn tenants that use none of the breached resource."""
+        cores_wo, spend_wo = self._others_usage(i, states)
+        row = self._overshoot_row(cores_wo, spend_wo)
+        others_v = self._overshoot(cores_wo, spend_wo)
+        fits = self._valid_flat & (row - others_v <= 1e-9)
+        if not fits.any():
+            return self._fallback
+        y = self._tenant_tables[i]
+        return int(np.where(fits, y, np.inf).argmin())
+
+    def _arbitrate(
+        self, proposals: np.ndarray, pen_tables: np.ndarray
+    ) -> tuple[np.ndarray, list[str]]:
+        """Greedy admission by priority-weighted improvement, then a
+        preemption repair pass (lowest priority first) if the assignment is
+        still infeasible.  ``pen_tables`` is (T, size): base + coupling."""
+        T = len(self.tenants)
+        cur = self._incumbents.copy()
+        deltas = np.asarray([
+            pen_tables[i, cur[i]] - pen_tables[i, proposals[i]]
+            for i in range(T)])
+        weights = np.asarray([t.priority for t in self.tenants])
+        order = np.argsort(-(weights * deltas), kind="stable")
+        actions = ["hold"] * T
+        for i in order:
+            if proposals[i] == cur[i] or deltas[i] <= 0:
+                continue
+            trial = cur.copy()
+            trial[i] = proposals[i]
+            if self._feasible(trial):
+                cur = trial
+                actions[i] = "admit"
+            else:
+                actions[i] = "defer"
+        if not self._feasible(cur):
+            # incumbents themselves violate (shrunk capacity, hot start):
+            # preempt lowest-priority tenants onto their best fitting
+            # state — but only tenants actually CONTRIBUTING to the breach
+            # (moving a tenant whose marginal overshoot is zero costs a
+            # migration and reduces the violation by nothing)
+            for i in sorted(range(T), key=lambda i: weights[i]):
+                if self._feasible(cur):
+                    break
+                others_v = self._overshoot(*self._others_usage(i, cur))
+                if self._violation(cur) - others_v <= 1e-9:
+                    continue
+                best = self._best_feasible(i, cur)
+                if best != cur[i]:
+                    cur[i] = best
+                    actions[i] = "preempt"
+        return cur, actions
+
+    # ------------------------------------------------------------------
+    # the control round
+    # ------------------------------------------------------------------
+
+    def round(self) -> list[FleetDecision]:
+        """One fleet control round: draw jobs, anneal all tenants in one
+        jitted call, arbitrate, log, and account."""
+        r = self._round
+        T = len(self.tenants)
+        steps = self.steps_per_round
+
+        # blend change points fire through the stream; rebuild stale tables
+        # BEFORE drawing (blend_of reflects round r exactly — drawing first
+        # would advance the stream and switch tables one round early).
+        # Cached per blend, so unchanged tenants cost a dict lookup.
+        tables_changed = self._tables_jnp is None
+        for i, t in enumerate(self.tenants):
+            table = self._table_for(self._stream.blend_of(t.name))
+            if table is not self._tenant_tables[i]:
+                self._tenant_tables[i] = table
+                tables_changed = True
+        if tables_changed:
+            self._tables_jnp = jnp.asarray(
+                np.stack(self._tenant_tables), jnp.float32)
+        jobs = next(self._stream)
+        self._refresh_capacity()   # pick up foreign reservation changes
+
+        rows = self.coupling_rows()                          # (T, size)
+        n0 = r * steps
+        taus = np.empty((T, steps), np.float64)
+        reheats_fired = [False] * T
+        for i, sched in enumerate(self._schedules):
+            if self._reheat_pending[i]:
+                sched.reheat(n0)
+                self._reheat_pending[i] = False
+                reheats_fired[i] = True
+            taus[i] = sched.tau_array(n0, steps)
+
+        inits = np.stack(
+            np.unravel_index(self._incumbents, self._shape),
+            axis=-1).astype(np.int32)
+        # the hot path calls the jitted kernel directly with cached device
+        # tables — anneal_fleet's per-call conveniences (shape checks,
+        # asarray/broadcast of static data) cost real milliseconds at
+        # hundreds of rounds (see benchmarks/fleet_arbitration.py)
+        keys = jax.random.split(jax.random.fold_in(self._key, r), T)
+        st, ys_d, acc_d = _fleet_nd_jit(
+            keys, self._tables_jnp, self._valid_jnp,
+            jnp.asarray(taus, jnp.float32), jnp.asarray(inits),
+            jnp.asarray(rows, jnp.float32),
+            shape=self._shape, categorical=self._enc.categorical,
+            dynamic=False, noise_std=0.0, per_chain=True)
+        out = {"states": st, "ys": ys_d, "accepts": acc_d}
+
+        # proposals: best visited state (step-0 incumbent included) under
+        # the penalized objective
+        visited = np.concatenate(
+            [inits[:, None, :], np.asarray(out["states"])], axis=1)
+        flat = np.ravel_multi_index(
+            tuple(visited.transpose(2, 0, 1)), self._shape)   # (T, steps+1)
+        pen_tables = np.stack(self._tenant_tables) + rows     # (T, size)
+        proposals = np.asarray([
+            flat[i, pen_tables[i, flat[i]].argmin()] for i in range(T)],
+            np.int64)
+
+        # drift detection on the measured (penalized) objective stream —
+        # all tenants per step in one batched update (proposals into
+        # masked-out states measure +inf; the batched detector skips
+        # non-finite entries, so they cannot poison the Welford stats)
+        ys = np.asarray(out["ys"])                            # (T, steps)
+        if self._detector is not None:
+            for k in range(steps):
+                for i in np.flatnonzero(self._detector.update(ys[:, k])):
+                    self._reheat_pending[i] = True
+
+        # exploration: did the chain ACCEPT an uphill move this round?
+        # (the single-tenant Step.explored semantics — the arbitrated
+        # proposal itself is an argmin over visited states, so it can
+        # never be uphill of the incumbent.)  The incumbent y before step
+        # k is the last accepted measurement before k (y0 if none):
+        # forward-fill the accepted indices and gather.
+        accepts = np.asarray(out["accepts"])                  # (T, steps)
+        kk = np.arange(steps)[None, :]
+        last_acc = np.maximum.accumulate(np.where(accepts, kk, -1), axis=1)
+        prev_acc = np.concatenate(
+            [np.full((T, 1), -1), last_acc[:, :-1]], axis=1)
+        y0 = pen_tables[np.arange(T), flat[:, 0]][:, None]
+        inc_before = np.where(
+            prev_acc >= 0,
+            np.take_along_axis(ys, np.maximum(prev_acc, 0), axis=1), y0)
+        explored_chain = (accepts & (ys > inc_before)).any(axis=1)
+
+        prev = self._incumbents.copy()
+        final, actions = self._arbitrate(proposals, pen_tables)
+        self._incumbents = final
+        self.violation_history.append(self._violation(final))
+        self._mirror_reservations()
+
+        decisions = []
+        final_v = self._violation(final)
+        for i, t in enumerate(self.tenants):
+            s = int(final[i])
+            # the tenant's marginal contribution (unweighted cores + $/hr)
+            # to the FINAL assignment's aggregate overshoot — 0.0 whenever
+            # the round ends feasible
+            viol_i = max(0.0, final_v
+                         - self._overshoot(*self._others_usage(i, final)))
+            idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
+            cfg = cluster_config_from(self.space.decode(idx))
+            mig_s, mig_usd = self.evaluator.migration(
+                self._prev_cfgs[i], cfg, self.catalog)
+            m = dataclasses.replace(
+                self.evaluator.measure(cfg, jobs[t.name], r),
+                migration_s=mig_s, migration_usd=mig_usd)
+            self._prev_cfgs[i] = cfg
+            pen_y = float(pen_tables[i, s])
+            d = FleetDecision(
+                n=r, job=jobs[t.name], config=cfg, measurement=m,
+                y=pen_y, accepted=bool(s != prev[i]),
+                explored=bool(explored_chain[i]),
+                tau=float(taus[i, -1]), reheated=reheats_fired[i],
+                tenant=t.name, round=r, action=actions[i],
+                violation=viol_i,
+            )
+            decisions.append(d)
+            self.decisions.append(d)
+        self._round += 1
+        return decisions
+
+    def run(self, n_rounds: int) -> list[FleetDecision]:
+        out = []
+        for _ in range(n_rounds):
+            out.extend(self.round())
+        return out
+
+    # ------------------------------------------------------------------
+    # accounting / diagnostics
+    # ------------------------------------------------------------------
+
+    def _mirror_reservations(self) -> None:
+        """Reflect the current allocation in the catalog's ledger so
+        ``catalog.remaining(family)`` answers 'what could one more tenant
+        get'.  Only this controller's OWN previously-mirrored amounts are
+        released — reservations placed by anyone else (an operator holding
+        headroom, a second controller sharing the catalog) are preserved;
+        if foreign holds leave less room than our aggregate, the mirror is
+        clamped to what remains.  While the assignment is infeasible
+        (transient: a repair pass could not fully restore feasibility) our
+        entries are cleared rather than left mirroring a stale round — an
+        empty mirror is visibly wrong, a previous round's is silently
+        wrong."""
+        for f, c in self._mirrored.items():
+            self.catalog.release(f, c)
+        self._mirrored = {}
+        if not self._feasible(self._incumbents):
+            return
+        cores, _ = self._aggregate(self._incumbents)
+        for f, c in zip(self._families, cores):
+            amt = min(float(c), self.catalog.remaining(f))
+            if amt > 0:
+                self.catalog.reserve(f, amt)
+                self._mirrored[f] = amt
+
+    def allocations(self) -> dict[str, dict[str, Any]]:
+        """Per-tenant current configuration and spend rate."""
+        out = {}
+        for i, t in enumerate(self.tenants):
+            s = int(self._incumbents[i])
+            idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
+            out[t.name] = {
+                "config": cluster_config_from(self.space.decode(idx)),
+                "usd_per_hr": float(self._spend_rate[s]),
+                "y": float(self._tenant_tables[i][s]),
+            }
+        return out
+
+    def aggregate_usage(self) -> dict[str, Any]:
+        cores, spend = self._aggregate(self._incumbents)
+        return {
+            "cores": {f: float(c) for f, c in zip(self._families, cores)},
+            "usd_per_hr": spend,
+            "violation": self._violation(self._incumbents),
+        }

@@ -63,6 +63,39 @@ class Objective:
 
 
 @dataclasses.dataclass(frozen=True)
+class PenalizedObjective:
+    """Coupling wrapper: ``Y'(m) = base(m) + weight * violation``.
+
+    The violation is *exogenous* to the measurement — for the multi-tenant
+    FleetController it is the aggregate capacity/budget overshoot a tenant's
+    candidate configuration would cause given the other tenants' incumbents.
+    Folding it into the objective (rather than clamping configurations after
+    the fact) keeps the arbitration pressure inside the annealing acceptance
+    rule, which is what prevents the per-service oscillation AutoTune-style
+    tuners exhibit under shared budgets.
+
+    Drop-in where an :class:`Objective` is expected: with the default
+    ``violation=0`` it reduces exactly to the base objective.
+    :meth:`penalize` is the array-friendly form used to build whole penalty
+    tables (numpy or JAX).
+    """
+
+    base: Objective = dataclasses.field(default_factory=Objective)
+    weight: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.weight < 0:
+            raise ValueError("penalty weight must be >= 0")
+
+    def __call__(self, m: Measurement, violation: float = 0.0) -> float:
+        return float(self.base(m) + self.weight * violation)
+
+    def penalize(self, y, violation):
+        """``y + weight * violation`` elementwise (array friendly)."""
+        return y + self.weight * violation
+
+
+@dataclasses.dataclass(frozen=True)
 class BlendedObjective:
     """Y = sum_i alpha_i Y_i over N workload types (paper sec. 3).
 

@@ -16,7 +16,13 @@ spin-up latency used by the migration-cost term of the objective).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Mapping
+
+
+class CapacityError(RuntimeError):
+    """A reservation would exceed a family's capacity (or release more than
+    is reserved)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,10 +48,27 @@ class ServiceCatalog:
     the categorical instance-type axis can introduce artificial local minima.
     The default ordering below sorts families by price per core, which makes
     the price monotone along the categorical axis.
+
+    ``capacities`` (optional) caps the cores (chips) available per family —
+    the shared-cloud finiteness the multi-tenant FleetController arbitrates
+    over.  Families without an entry are unbounded (the single-tenant
+    paper setting).  :meth:`reserve` / :meth:`release` keep a running
+    allocation ledger; :meth:`remaining` is what a new tenant can still get.
     """
 
-    def __init__(self, families: Mapping[str, InstanceFamily]):
+    def __init__(
+        self,
+        families: Mapping[str, InstanceFamily],
+        capacities: Mapping[str, float] | None = None,
+    ):
         self._families = dict(families)
+        self._capacity = dict(capacities or {})
+        unknown = set(self._capacity) - set(self._families)
+        if unknown:
+            raise ValueError(f"capacities for unknown families: {unknown}")
+        if any(c < 0 for c in self._capacity.values()):
+            raise ValueError("capacities must be >= 0")
+        self._reserved: dict[str, float] = {}
 
     def __getitem__(self, name: str) -> InstanceFamily:
         return self._families[name]
@@ -65,9 +88,59 @@ class ServiceCatalog:
         return self[instance_type].price_for(n_cores, seconds)
 
     def with_family(self, fam: InstanceFamily) -> "ServiceCatalog":
+        """A copy with ``fam`` added/replaced.  Capacities carry over;
+        like :meth:`with_capacities`, the copy starts with a fresh, empty
+        reservation ledger (reservations describe live allocations against
+        ONE catalog instance and do not transfer)."""
         out = dict(self._families)
         out[fam.name] = fam
-        return ServiceCatalog(out)
+        return ServiceCatalog(out, self._capacity)
+
+    # -- capacity / reservation accounting (multi-tenant arbitration) --
+    def capacity(self, name: str) -> float:
+        """Cores available in family ``name``; +inf when uncapped."""
+        self[name]  # KeyError on unknown families
+        return self._capacity.get(name, math.inf)
+
+    def reserved(self, name: str) -> float:
+        self[name]
+        return self._reserved.get(name, 0.0)
+
+    def remaining(self, name: str) -> float:
+        """Unreserved capacity of family ``name`` (+inf when uncapped)."""
+        return self.capacity(name) - self.reserved(name)
+
+    def reserve(self, name: str, n_cores: float) -> None:
+        """Claim ``n_cores`` from family ``name``; CapacityError if it
+        would exceed the family's capacity."""
+        if n_cores < 0:
+            raise ValueError("n_cores must be >= 0")
+        if n_cores > self.remaining(name) + 1e-9:
+            raise CapacityError(
+                f"reserve({name!r}, {n_cores}) exceeds remaining capacity "
+                f"{self.remaining(name)} (capacity {self.capacity(name)}, "
+                f"reserved {self.reserved(name)})")
+        self._reserved[name] = self.reserved(name) + n_cores
+
+    def release(self, name: str, n_cores: float) -> None:
+        if n_cores < 0:
+            raise ValueError("n_cores must be >= 0")
+        if n_cores > self.reserved(name) + 1e-9:
+            raise CapacityError(
+                f"release({name!r}, {n_cores}) exceeds reservation "
+                f"{self.reserved(name)}")
+        self._reserved[name] = max(0.0, self.reserved(name) - n_cores)
+
+    def release_all(self) -> None:
+        self._reserved.clear()
+
+    def with_capacities(
+        self, capacities: Mapping[str, float]
+    ) -> "ServiceCatalog":
+        """A copy with (re)set per-family capacity limits and a fresh,
+        empty reservation ledger."""
+        merged = {**self._capacity, **dict(capacities)}
+        return ServiceCatalog(self._families, merged)
 
 
 # ---------------------------------------------------------------------------

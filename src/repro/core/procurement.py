@@ -44,8 +44,56 @@ class Decision:
     reheated: bool
 
 
+class ControllerMixin:
+    """Decision-log, blend and detector/reheat plumbing shared by the two
+    controllers (single-tenant :class:`ProcurementController` here,
+    multi-tenant :class:`repro.core.fleet.FleetController`).
+
+    Both controllers log :class:`Decision`-compatible records into
+    ``self.decisions``, so audit tooling (``spend()``, CSV export of
+    decision fields) works unchanged across them.
+    """
+
+    decisions: list[Decision]
+
+    def _init_decision_log(self) -> None:
+        self.decisions = []
+
+    @staticmethod
+    def normalize_blend(
+        blend: Mapping[str, float],
+    ) -> tuple[list[str], np.ndarray]:
+        """Blend mapping -> (names, weights summing to one)."""
+        names = list(blend)
+        if not names:
+            raise ValueError("blend must name at least one job type")
+        weights = np.asarray([blend[k] for k in names], np.float64)
+        if weights.sum() <= 0 or (weights < 0).any():
+            raise ValueError(f"blend weights must be >= 0, sum > 0: {blend}")
+        return names, weights / weights.sum()
+
+    @staticmethod
+    def _detect_reheat(
+        detector: PageHinkley | None,
+        y: float,
+        reheat: Callable[[], None],
+    ) -> bool:
+        """Feed one objective observation to the drift detector; fire the
+        reheat callback on a signal.  Returns True iff a reheat fired."""
+        if detector is None or not detector.update(float(y)):
+            return False
+        reheat()
+        return True
+
+    def spend(self) -> float:
+        """Total dollars across logged decisions (jobs + migrations)."""
+        return sum(
+            d.measurement.cost_usd + d.measurement.migration_usd
+            for d in self.decisions)
+
+
 @dataclasses.dataclass
-class ProcurementController:
+class ProcurementController(ControllerMixin):
     """Online annealing-based IaaS/TPU procurement.
 
     ``blend`` gives the workload composition: each arriving "job" is a draw
@@ -72,16 +120,14 @@ class ProcurementController:
         nbhd = self.neighborhood or StepNeighborhood(self.space)
         self._prev_cfg: ClusterConfig | None = None
         self._last_measures: list[Measurement] = []
-        self.decisions: list[Decision] = []
+        self._init_decision_log()
         self.annealer = Annealer(
             self.space, nbhd, self._evaluate, schedule=self.schedule,
             seed=self._rng, tabu=self.tabu, init=self.init,
         )
 
     def _blend_weights(self) -> tuple[list[str], np.ndarray]:
-        names = list(self.blend)
-        weights = np.asarray([self.blend[k] for k in names], np.float64)
-        return names, weights / weights.sum()
+        return self.normalize_blend(self.blend)
 
     # -- objective evaluation: run job(s) under a decoded configuration --
     def _evaluate(self, decoded: dict[str, Any], n: int) -> float:
@@ -116,10 +162,8 @@ class ProcurementController:
         """Process one arriving job; returns the decision record."""
         self._last_job = job or next(iter(self.blend))
         step: Step = self.annealer.step()
-        reheated = False
-        if self.detector is not None and self.detector.update(step.y_proposed):
-            self.annealer.reheat()
-            reheated = True
+        reheated = self._detect_reheat(
+            self.detector, step.y_proposed, self.annealer.reheat)
         m = self._last_measures[0] if self._last_measures else Measurement(0, 0)
         d = Decision(
             n=step.n, job=self._last_job,
@@ -184,11 +228,6 @@ class ProcurementController:
 
     def exploration_rate(self) -> float:
         return self.annealer.exploration_rate()
-
-    def spend(self) -> float:
-        return sum(
-            d.measurement.cost_usd + d.measurement.migration_usd
-            for d in self.decisions)
 
 
 def offline_plan(

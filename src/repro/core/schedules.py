@@ -27,6 +27,14 @@ class Schedule:
     def reheat(self, n: int) -> None:  # default: no-op
         return None
 
+    def tau_array(self, n0: int, n_steps: int) -> np.ndarray:
+        """``[tau(n0), ..., tau(n0 + n_steps - 1)]`` without firing any
+        reheats (cf. :func:`schedule_to_array`, which replays them).
+        Subclasses with a closed form override this — the fleet controller
+        materializes T schedules per control round."""
+        return np.asarray([self(n) for n in range(n0, n0 + n_steps)],
+                          np.float64)
+
 
 @dataclasses.dataclass
 class FixedTemperature(Schedule):
@@ -94,6 +102,14 @@ class AdaptiveReheat(Schedule):
 
     def reheat(self, n: int) -> None:
         self._reheat_at = n
+
+    def tau_array(self, n0: int, n_steps: int) -> np.ndarray:
+        ns = np.arange(n0, n0 + n_steps, dtype=np.float64)
+        if self._reheat_at is None:
+            return np.full(n_steps, self.tau_base)
+        k = np.maximum(ns - self._reheat_at, 0.0)
+        out = self.tau_base + (self.tau_hot - self.tau_base) * self.relax ** k
+        return np.where(ns < self._reheat_at, self.tau_base, out)
 
 
 def schedule_to_array(

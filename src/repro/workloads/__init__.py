@@ -1,10 +1,12 @@
 from .simulator import (
     Arrival,
     JobStream,
+    MultiTenantStream,
     PoissonArrivals,
     QueueSimulator,
+    TenantWorkload,
     blended_stream,
 )
 
-__all__ = ["Arrival", "JobStream", "PoissonArrivals", "QueueSimulator",
-           "blended_stream"]
+__all__ = ["Arrival", "JobStream", "MultiTenantStream", "PoissonArrivals",
+           "QueueSimulator", "TenantWorkload", "blended_stream"]

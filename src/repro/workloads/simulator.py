@@ -6,14 +6,17 @@ Paper constructs reproduced here:
     sec. 4.3);
   * *jobs executed in parallel* with a queue (sec. 4.2.2): a single-server
     (cluster) queue where the objective measures sojourn = wait + service
-    time instead of bare execution time.
+    time instead of bare execution time;
+  * a *multi-tenant* multiplexer (:class:`MultiTenantStream`): T per-tenant
+    blended streams with staggered change points, one job per tenant per
+    control round — the workload side of the FleetController.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Iterator, Mapping
+from typing import Callable, Iterator, Mapping, Sequence
 
 import numpy as np
 
@@ -60,6 +63,75 @@ def blended_stream(blend_before: Mapping[str, float],
             s.set_blend(blend_after)
         out.append(next(s))
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantWorkload:
+    """One tenant's workload: a blend, optionally switching to
+    ``blend_after`` at draw index ``change_at`` (the draw with that index
+    is the first from the new blend).  Change points are per-tenant, so a
+    fleet's tenants drift at *staggered* times (paper sec. 4.3 per tenant).
+    """
+
+    name: str
+    blend: Mapping[str, float]
+    blend_after: Mapping[str, float] | None = None
+    change_at: int | None = None
+
+    def __post_init__(self) -> None:
+        if (self.blend_after is None) != (self.change_at is None):
+            raise ValueError(
+                f"tenant {self.name!r}: blend_after and change_at must be "
+                f"given together")
+
+
+class MultiTenantStream:
+    """Per-tenant :class:`JobStream` multiplexer for fleet control rounds.
+
+    ``next(stream)`` draws ONE job per tenant (a control round) and applies
+    any change points that fire at that round.  Per-tenant streams are
+    independently seeded, so one tenant's draws do not perturb another's —
+    adding a tenant never changes the others' job sequences.
+    """
+
+    def __init__(self, tenants: Sequence[TenantWorkload], seed: int = 0):
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        if not tenants:
+            raise ValueError("at least one tenant required")
+        self.tenants = tuple(tenants)
+        self._streams = {
+            t.name: JobStream(t.blend, seed=seed + i)
+            for i, t in enumerate(tenants)
+        }
+        self._blends = {t.name: dict(t.blend) for t in tenants}
+        self.round = 0
+
+    @property
+    def tenant_names(self) -> tuple[str, ...]:
+        return tuple(t.name for t in self.tenants)
+
+    def blend_of(self, name: str) -> dict[str, float]:
+        """The blend tenant ``name`` draws from at the CURRENT round."""
+        self._apply_changes()
+        return dict(self._blends[name])
+
+    def _apply_changes(self) -> None:
+        for t in self.tenants:
+            if t.change_at is not None and self.round >= t.change_at:
+                if self._blends[t.name] != dict(t.blend_after):
+                    self._blends[t.name] = dict(t.blend_after)
+                    self._streams[t.name].set_blend(t.blend_after)
+
+    def __iter__(self) -> Iterator[dict[str, str]]:
+        return self
+
+    def __next__(self) -> dict[str, str]:
+        self._apply_changes()
+        jobs = {t.name: next(self._streams[t.name]) for t in self.tenants}
+        self.round += 1
+        return jobs
 
 
 class PoissonArrivals:

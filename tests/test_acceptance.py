@@ -1,0 +1,68 @@
+"""Invariant tests for the heat-bath acceptance rule (paper sec. 2.2/3).
+
+``acceptance_probability(dy, tau) = exp(-max(dy, 0)/tau)`` had no direct
+tests; these pin the properties every engine (Python Annealer and the
+compiled chains) relies on.
+"""
+
+import math
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core import acceptance_probability
+
+FLOATS = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False)
+TAUS = st.floats(min_value=1e-9, max_value=1e6, allow_nan=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dy=FLOATS, tau=TAUS)
+def test_probability_in_unit_interval(dy, tau):
+    p = acceptance_probability(dy, tau)
+    assert 0.0 <= p <= 1.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(dy=st.floats(min_value=-1e6, max_value=0.0, allow_nan=False),
+       tau=TAUS)
+def test_improving_moves_always_accepted(dy, tau):
+    """dy <= 0 (objective does not increase) -> probability exactly 1."""
+    assert acceptance_probability(dy, tau) == 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(dy=st.floats(min_value=1e-6, max_value=1e4, allow_nan=False),
+       tau=st.floats(min_value=1e-6, max_value=1e3, allow_nan=False))
+def test_monotone_in_tau(dy, tau):
+    """For a fixed uphill dy, hotter chains accept at least as often."""
+    hotter = acceptance_probability(dy, 2.0 * tau)
+    colder = acceptance_probability(dy, tau)
+    assert hotter >= colder
+    # and strictly more often away from degenerate probabilities
+    if 1e-300 < colder < 1.0:
+        assert hotter > colder
+
+
+@settings(max_examples=100, deadline=None)
+@given(dy=st.floats(min_value=0.0, max_value=1e4, allow_nan=False),
+       tau=TAUS)
+def test_monotone_decreasing_in_dy(dy, tau):
+    """Bigger objective increase -> never a higher acceptance chance."""
+    assert (acceptance_probability(dy + 1.0, tau)
+            <= acceptance_probability(dy, tau))
+
+
+@settings(max_examples=100, deadline=None)
+@given(dy=st.floats(min_value=1e-3, max_value=1e6, allow_nan=False),
+       tau=st.floats(min_value=1e-9, max_value=1e6, allow_nan=False))
+def test_exact_heat_bath_form(dy, tau):
+    assert math.isclose(acceptance_probability(dy, tau),
+                        math.exp(-dy / tau), rel_tol=1e-12)
+
+
+def test_zero_temperature_limit():
+    """tau <= 0 degenerates to greedy descent: accept iff not uphill."""
+    assert acceptance_probability(-1.0, 0.0) == 1.0
+    assert acceptance_probability(0.0, 0.0) == 1.0
+    assert acceptance_probability(1e-9, 0.0) == 0.0
+    assert acceptance_probability(5.0, -1.0) == 0.0

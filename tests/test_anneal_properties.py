@@ -1,0 +1,204 @@
+"""Property tests (hypothesis, or its seeded shim) for the compiled N-dim
+chain against the original 1-D chain: determinism under identical seeds,
+encoding invariance, greedy-descent monotonicity, move locality, and
+validity-mask respect on random spaces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core import (
+    Annealer,
+    StepNeighborhood,
+    anneal_chain,
+    anneal_chain_nd,
+)
+from repro.core.state import ConfigSpace, Dimension, EncodedSpace
+
+# small size pool keeps the jit cache warm across examples (shape is a
+# static argument of the compiled chain)
+SIZES = st.integers(min_value=1, max_value=8)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+TAUS = st.floats(min_value=1e-3, max_value=8.0, allow_nan=False)
+N_STEPS = 80
+
+
+def _space_1d(n):
+    return ConfigSpace((Dimension("x", tuple(range(n))),))
+
+
+@st.composite
+def _landscape(draw):
+    n = draw(SIZES)
+    ys = [draw(st.floats(min_value=0.0, max_value=100.0, allow_nan=False))
+          for _ in range(n)]
+    return np.asarray(ys, np.float64)
+
+
+@st.composite
+def _schedule(draw):
+    """A random (n_steps,) temperature array — constant, geometric decay,
+    or a reheat spike, scaled by a random base tau."""
+    tau = draw(TAUS)
+    kind = draw(st.integers(min_value=0, max_value=2))
+    n = np.arange(N_STEPS, dtype=np.float64)
+    if kind == 0:
+        arr = np.full(N_STEPS, tau)
+    elif kind == 1:
+        arr = np.maximum(tau * 0.98 ** n, 1e-4)
+    else:
+        spike = draw(st.integers(min_value=0, max_value=N_STEPS - 1))
+        arr = np.full(N_STEPS, tau)
+        arr[spike:] = tau + 8.0 * tau * 0.9 ** (n[spike:] - spike)
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# Determinism: identical seeds -> identical trajectories.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(y=_landscape(), taus=_schedule(), seed=SEEDS)
+def test_anneal_chain_deterministic_under_identical_seeds(y, taus, seed):
+    key = jax.random.key(seed)
+    a = anneal_chain(key, jnp.asarray(y, jnp.float32), N_STEPS, taus)
+    b = anneal_chain(key, jnp.asarray(y, jnp.float32), N_STEPS, taus)
+    for xa, xb in zip(a, b):
+        assert (np.asarray(xa) == np.asarray(xb)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(y=_landscape(), taus=_schedule(), seed=SEEDS)
+def test_anneal_chain_nd_deterministic_under_identical_seeds(y, taus, seed):
+    space = _space_1d(len(y))
+    key = jax.random.key(seed)
+    a = anneal_chain_nd(key, space, y, N_STEPS, taus)
+    b = anneal_chain_nd(key, space, y, N_STEPS, taus)
+    for xa, xb in zip(a, b):
+        assert (np.asarray(xa) == np.asarray(xb)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(y=_landscape(), tau=TAUS, seed=SEEDS)
+def test_nd_engine_encoding_invariance(y, tau, seed):
+    """ConfigSpace vs pre-encoded EncodedSpace, scalar vs materialized
+    schedule: identical seeds must give identical state trajectories."""
+    space = _space_1d(len(y))
+    key = jax.random.key(seed)
+    via_space = anneal_chain_nd(key, space, y, N_STEPS, tau)
+    via_enc = anneal_chain_nd(key, space.encoded(), y, N_STEPS, tau)
+    via_arr = anneal_chain_nd(key, space, y, N_STEPS,
+                              np.full(N_STEPS, tau, np.float32))
+    for xa, xb, xc in zip(via_space, via_enc, via_arr):
+        assert (np.asarray(xa) == np.asarray(xb)).all()
+        assert (np.asarray(xa) == np.asarray(xc)).all()
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine agreement on random 1-D spaces.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(y=_landscape(), taus=_schedule(), seed=SEEDS)
+def test_both_engines_stay_in_range_and_move_locally(y, taus, seed):
+    """Both engines walk the same move graph: states in [0, S), consecutive
+    states differ by at most 1 (the +-1 reflected neighborhood)."""
+    S = len(y)
+    key = jax.random.key(seed)
+    s1, _, _ = anneal_chain(key, jnp.asarray(y, jnp.float32), N_STEPS, taus)
+    snd, _, _ = anneal_chain_nd(key, _space_1d(S), y, N_STEPS, taus,
+                                init=[0])
+    s1 = np.asarray(s1)
+    snd = np.asarray(snd)[:, 0]
+    for states in (s1, snd):
+        assert ((0 <= states) & (states < S)).all()
+        assert (np.abs(np.diff(states)) <= 1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(y=_landscape(), seed=SEEDS)
+def test_both_engines_greedy_descent_is_monotone(y, seed):
+    """At tau -> 0 the heat-bath rule is greedy descent: the incumbent's
+    objective is non-increasing in both engines (noise-free tables).
+
+    Compared in float32 — the engines' table dtype — with a tolerance above
+    the largest uphill step the acceptance rule can admit at this tau
+    (dy <= ~50 * tau) but below the table's float32 resolution."""
+    S = len(y)
+    key = jax.random.key(seed)
+    tau = 1e-9
+    s1, _, _ = anneal_chain(key, jnp.asarray(y, jnp.float32), N_STEPS, tau,
+                            init=S - 1)
+    snd, _, _ = anneal_chain_nd(key, _space_1d(S), y, N_STEPS, tau,
+                                init=[S - 1])
+    y32 = np.asarray(y, np.float32)
+    for states in (np.asarray(s1), np.asarray(snd)[:, 0]):
+        inc = y32[states]
+        assert (np.diff(inc.astype(np.float64)) <= 1e-6).all(), \
+            f"greedy chain moved uphill: {inc}"
+        assert inc[-1] <= y32[S - 1] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Validity masks on random N-D spaces.
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _masked_space(draw):
+    """Random 2-D mixed space with a random mask (at least one valid)."""
+    n0 = draw(st.integers(min_value=1, max_value=5))
+    n1 = draw(st.integers(min_value=1, max_value=5))
+    cat = bool(draw(st.integers(min_value=0, max_value=1)))
+    bits = [bool(draw(st.integers(min_value=0, max_value=1)))
+            for _ in range(n0 * n1)]
+    mask = np.asarray(bits, bool).reshape(n0, n1)
+    mask[draw(st.integers(min_value=0, max_value=n0 - 1)),
+         draw(st.integers(min_value=0, max_value=n1 - 1))] = True
+    return EncodedSpace(shape=(n0, n1), categorical=(False, cat),
+                        valid_mask=mask)
+
+
+@settings(max_examples=20, deadline=None)
+@given(enc=_masked_space(), taus=_schedule(), seed=SEEDS)
+def test_nd_chain_never_visits_invalid_states(enc, taus, seed):
+    y = np.arange(enc.size(), dtype=np.float64).reshape(enc.shape)
+    init = np.argwhere(enc.valid_mask)[0]
+    states, _, _ = anneal_chain_nd(
+        jax.random.key(seed), enc, y, N_STEPS, taus, init=init)
+    states = np.asarray(states)
+    assert enc.valid_mask[tuple(states.T)].all(), \
+        "chain visited a masked-out state"
+
+
+# ---------------------------------------------------------------------------
+# Annealer._random_valid_state: clear error on an all-invalid space.
+# ---------------------------------------------------------------------------
+
+
+def test_annealer_raises_value_error_naming_space_when_all_invalid():
+    space = ConfigSpace(
+        (Dimension("family", ("a", "b")), Dimension("cores", (1, 2, 4))),
+        is_valid=lambda cfg: False,
+    )
+    with pytest.raises(ValueError) as exc:
+        Annealer(space, StepNeighborhood(space), lambda cfg, n: 0.0,
+                 seed=0)
+    msg = str(exc.value)
+    assert "family" in msg and "cores" in msg, \
+        f"error must name the space's dimensions: {msg}"
+    assert "valid" in msg
+
+
+def test_annealer_random_valid_state_respects_predicate():
+    space = ConfigSpace(
+        (Dimension("x", tuple(range(8))),),
+        is_valid=lambda cfg: cfg["x"] % 2 == 0,
+    )
+    ann = Annealer(space, StepNeighborhood(space), lambda cfg, n: 0.0,
+                   seed=0)
+    assert space.contains(ann.state)

@@ -1,0 +1,175 @@
+"""Direct tests for the drift detectors driving temperature re-heats
+(paper secs. 1, 4.3) — previously only exercised indirectly through the
+controller benches."""
+
+import numpy as np
+import pytest
+
+from repro.core import BatchedPageHinkley, PageHinkley, WindowedZScore
+
+
+# ---------------------------------------------------------------------------
+# PageHinkley
+# ---------------------------------------------------------------------------
+
+
+def test_no_false_alarm_on_constant_stream():
+    det = PageHinkley()
+    assert not any(det.update(3.7) for _ in range(5000))
+
+
+def test_no_false_alarm_on_stationary_noise():
+    """With an insensitivity margin above the noise's typical standardized
+    deviation (delta=1 sigma), the cumulative sums have negative drift and
+    a stationary stream must not alarm.  (The default delta=0.2 is tuned
+    for responsiveness and WILL occasionally excurse past the threshold on
+    pure noise — that is a sensitivity trade-off, not a defect.)"""
+    det = PageHinkley(delta=1.0, threshold=10.0)
+    rng = np.random.default_rng(0)
+    alarms = sum(det.update(float(y))
+                 for y in rng.normal(10.0, 2.0, size=4000))
+    assert alarms == 0
+
+
+def test_detects_step_change_within_threshold_dependent_delay():
+    """After a large step, each observation adds ~(z_clip - delta) sigmas to
+    the cumulative sum, so the alarm must fire within
+    ceil(threshold / (z_clip - delta)) post-change observations (plus the
+    change observation itself)."""
+    det = PageHinkley()
+    rng = np.random.default_rng(1)
+    for y in rng.normal(0.0, 1.0, size=200):
+        assert not det.update(float(y))
+    bound = int(np.ceil(det.threshold / (det.z_clip - det.delta))) + 1
+    delay = None
+    for k in range(50):
+        if det.update(50.0 + float(rng.normal(0.0, 1.0))):
+            delay = k + 1
+            break
+    assert delay is not None, "step change never detected"
+    assert delay <= bound, f"detected after {delay} > bound {bound}"
+
+
+def test_detects_downward_step_too():
+    det = PageHinkley()
+    rng = np.random.default_rng(2)
+    for y in rng.normal(100.0, 1.0, size=200):
+        det.update(float(y))
+    assert any(det.update(float(60.0 + rng.normal(0.0, 1.0)))
+               for _ in range(50))
+
+
+def test_delay_grows_with_threshold():
+    """A stricter (higher) threshold cannot detect earlier.  Measured on a
+    constant pre-change stream so no false alarm resets the statistics
+    mid-warm-up (a reset re-enters the min_obs window and would make a LOW
+    threshold *slower*, masking the monotonicity)."""
+    def delay(threshold):
+        det = PageHinkley(threshold=threshold)
+        for _ in range(200):
+            assert not det.update(0.0)
+        for k in range(200):
+            if det.update(30.0):
+                return k + 1
+        return 201
+
+    assert delay(2.0) <= delay(6.0) <= delay(18.0)
+    assert delay(18.0) <= 10
+
+
+def test_resets_after_alarm():
+    """After signalling, the detector restarts its statistics: a constant
+    stream at the NEW level must never re-alarm."""
+    det = PageHinkley()
+    rng = np.random.default_rng(4)
+    for y in rng.normal(0.0, 1.0, size=200):
+        det.update(float(y))
+    fired = False
+    for _ in range(50):
+        if det.update(25.0):
+            fired = True
+            break
+    assert fired
+    assert sum(det.update(25.0) for _ in range(2000)) == 0
+
+
+def test_min_obs_suppresses_early_alarms():
+    det = PageHinkley(min_obs=25)
+    # wild values inside the warm-up window must not alarm
+    assert not any(det.update(float(v)) for v in [0, 1e6, -1e6, 42] * 6)
+
+
+# ---------------------------------------------------------------------------
+# BatchedPageHinkley: per-stream equivalence with the scalar detector
+# ---------------------------------------------------------------------------
+
+
+def test_batched_page_hinkley_matches_scalar_per_stream():
+    """B parallel streams through the batched detector must fire at exactly
+    the same observations as B independent scalar detectors."""
+    B, N = 5, 600
+    rng = np.random.default_rng(10)
+    streams = rng.normal(0.0, 1.0, size=(B, N))
+    streams[1, 300:] += 40.0                # step up
+    streams[3, 150:] -= 25.0                # step down
+    streams[4, 450:] += 12.0
+
+    scalars = [PageHinkley() for _ in range(B)]
+    batched = BatchedPageHinkley(B)
+    for k in range(N):
+        fired_scalar = np.asarray(
+            [det.update(float(streams[i, k]))
+             for i, det in enumerate(scalars)])
+        fired_batched = batched.update(streams[:, k])
+        assert (fired_scalar == fired_batched).all(), \
+            f"divergence at observation {k}"
+
+
+def test_batched_page_hinkley_skips_non_finite():
+    det = BatchedPageHinkley(2)
+    ref = PageHinkley()
+    rng = np.random.default_rng(11)
+    fired_any = False
+    for k in range(400):
+        y = float(rng.normal(0.0, 1.0)) if k < 300 else 30.0
+        # stream 1 sees +inf every third observation; stream 0 is clean
+        noisy = np.inf if k % 3 == 0 else y
+        fired = det.update(np.asarray([y, noisy]))
+        assert fired[0] == ref.update(y)
+        fired_any |= bool(fired[1])
+    assert fired_any, "stream with interleaved infs must still detect"
+
+
+def test_batched_page_hinkley_validation():
+    with pytest.raises(ValueError):
+        BatchedPageHinkley(0)
+    det = BatchedPageHinkley(3)
+    with pytest.raises(ValueError):
+        det.update(np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# WindowedZScore
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_zscore_no_alarm_on_stationary():
+    det = WindowedZScore()
+    rng = np.random.default_rng(5)
+    assert sum(det.update(float(y))
+               for y in rng.normal(5.0, 1.0, size=2000)) == 0
+
+
+def test_windowed_zscore_detects_level_shift():
+    det = WindowedZScore(window=16, z=4.0, min_history=32)
+    rng = np.random.default_rng(6)
+    for y in rng.normal(0.0, 1.0, size=200):
+        det.update(float(y))
+    assert any(det.update(10.0 + float(rng.normal(0.0, 1.0)))
+               for _ in range(3 * det.window))
+
+
+@pytest.mark.parametrize("det_cls", [PageHinkley, WindowedZScore])
+def test_detectors_return_plain_bool(det_cls):
+    det = det_cls()
+    assert det.update(1.0) in (True, False)

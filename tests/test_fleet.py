@@ -1,0 +1,391 @@
+"""Multi-tenant fleet controller: capacity accounting, coupling penalties
+through the batched engine, arbitration actions, and audit compatibility
+with the single-tenant controller."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    EC2_CATALOG,
+    CapacityError,
+    Decision,
+    FleetController,
+    FleetDecision,
+    InstanceFamily,
+    Measurement,
+    Objective,
+    PenalizedObjective,
+    ServiceCatalog,
+    TenantSpec,
+    anneal_fleet,
+    make_ec2_space,
+)
+from repro.core.costmodel import SimulatedEvaluator
+from repro.core.state import ConfigSpace, Dimension
+
+CORES = tuple(range(4, 68, 8))
+
+
+def _catalog(cap=80.0, families=("general", "compute", "memory", "storage")):
+    return ServiceCatalog(
+        {f: EC2_CATALOG[f] for f in families},
+        capacities={f: cap for f in families})
+
+
+def _controller(n_tenants=4, cap=80.0, budget=float("inf"), steps=16,
+                weight=25.0, seed=0, **kw):
+    catalog = _catalog(cap)
+    space = make_ec2_space(catalog, core_counts=CORES)
+    tenants = [
+        TenantSpec(f"t{i}", {"wordcount": 1.0, "kmeans": 1.0},
+                   priority=1.0 + 0.25 * i)
+        for i in range(n_tenants)
+    ]
+    return FleetController(
+        space, catalog, SimulatedEvaluator(catalog), tenants,
+        objective=PenalizedObjective(Objective(lambda_cost=200.0),
+                                    weight=weight),
+        budget_usd_hr=budget, steps_per_round=steps, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ServiceCatalog capacity / reservation accounting
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_capacity_defaults_to_unbounded():
+    assert EC2_CATALOG.capacity("general") == float("inf")
+    assert EC2_CATALOG.remaining("general") == float("inf")
+
+
+def test_catalog_reserve_release_roundtrip():
+    cat = _catalog(cap=100.0)
+    cat.reserve("general", 60.0)
+    assert cat.remaining("general") == pytest.approx(40.0)
+    assert cat.reserved("general") == pytest.approx(60.0)
+    cat.release("general", 25.0)
+    assert cat.remaining("general") == pytest.approx(65.0)
+    cat.release_all()
+    assert cat.remaining("general") == pytest.approx(100.0)
+
+
+def test_catalog_overreserve_raises():
+    cat = _catalog(cap=50.0)
+    cat.reserve("compute", 50.0)
+    with pytest.raises(CapacityError):
+        cat.reserve("compute", 1.0)
+    with pytest.raises(CapacityError):
+        cat.release("general", 1.0)
+
+
+def test_catalog_capacity_validation():
+    fams = {"general": EC2_CATALOG["general"]}
+    with pytest.raises(ValueError):
+        ServiceCatalog(fams, capacities={"nope": 10.0})
+    with pytest.raises(ValueError):
+        ServiceCatalog(fams, capacities={"general": -1.0})
+    with pytest.raises(KeyError):
+        _catalog().capacity("nope")
+
+
+def test_with_capacities_and_with_family_preserve_each_other():
+    cat = _catalog(cap=30.0)
+    cat2 = cat.with_family(InstanceFamily(
+        "huge", price_per_core_hr=1.0, mem_per_core_gb=1.0, spin_up_s=1.0))
+    assert cat2.capacity("general") == 30.0
+    assert cat2.capacity("huge") == float("inf")
+    cat3 = cat2.with_capacities({"huge": 8.0})
+    assert cat3.capacity("huge") == 8.0
+    assert cat3.capacity("general") == 30.0
+    # fresh ledger on the copy
+    cat.reserve("general", 10.0)
+    assert cat3.reserved("general") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# PenalizedObjective
+# ---------------------------------------------------------------------------
+
+
+def test_penalized_objective_reduces_to_base_at_zero_violation():
+    base = Objective(lambda_cost=3.0)
+    pen = PenalizedObjective(base, weight=10.0)
+    m = Measurement(exec_time_s=5.0, cost_usd=2.0)
+    assert pen(m) == base(m)
+    assert pen(m, violation=1.5) == pytest.approx(base(m) + 15.0)
+
+
+def test_penalized_objective_penalize_is_array_friendly():
+    pen = PenalizedObjective(weight=2.0)
+    y = np.asarray([1.0, 2.0])
+    v = np.asarray([0.0, 3.0])
+    assert np.allclose(pen.penalize(y, v), [1.0, 8.0])
+
+
+def test_penalized_objective_rejects_negative_weight():
+    with pytest.raises(ValueError):
+        PenalizedObjective(weight=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# extra-cost rows through the batched engine
+# ---------------------------------------------------------------------------
+
+
+def test_anneal_fleet_extra_costs_steer_chains_away():
+    """Poisoning half the 1-D landscape with a large extra-cost row must
+    keep cold chains out of it — and the penalty must show up in the
+    measured ys (the acceptance rule sees base + extra)."""
+    space = ConfigSpace((Dimension("x", tuple(range(16))),))
+    y = np.linspace(1.0, 0.0, 16)        # base objective pulls right
+    extra = np.zeros((2, 16))
+    extra[0, 8:] = 1e3                    # chain 0: right half poisoned
+    out = anneal_fleet(jax.random.key(0), space, np.tile(y, (2, 1)),
+                       200, 0.05, inits=np.asarray([[0], [0]]),
+                       per_chain_tables=True, extra_costs=extra)
+    states = np.asarray(out["states"])[..., 0]
+    assert (states[0] < 8).all(), "penalized chain crossed into the poison"
+    assert states[1].max() == 15, "unpenalized chain should reach the pull"
+    ys0 = np.asarray(out["ys"])[0]
+    assert ys0.max() > 100.0, "measured ys must include the extra cost"
+
+
+def test_anneal_fleet_extra_costs_shape_validation():
+    space = ConfigSpace((Dimension("x", tuple(range(4))),))
+    y = np.zeros(4)
+    with pytest.raises(ValueError):
+        anneal_fleet(jax.random.key(0), space, y, 10, 1.0, n_chains=2,
+                     extra_costs=np.zeros((3, 4)))
+    with pytest.raises(ValueError):
+        anneal_fleet(jax.random.key(0), space, y, 10, 1.0, n_chains=2,
+                     extra_costs=np.zeros((2, 4)),
+                     coupling_penalty=lambda enc, c: np.zeros((2, 4)))
+
+
+def test_anneal_fleet_coupling_penalty_hook_matches_extra_costs():
+    space = ConfigSpace((Dimension("x", tuple(range(8))),))
+    y = np.arange(8.0)
+    extra = np.tile(np.linspace(0, 5, 8), (3, 1))
+    a = anneal_fleet(jax.random.key(1), space, y, 50, 1.0, n_chains=3,
+                     inits=np.zeros((3, 1), np.int32), extra_costs=extra)
+    b = anneal_fleet(jax.random.key(1), space, y, 50, 1.0, n_chains=3,
+                     inits=np.zeros((3, 1), np.int32),
+                     coupling_penalty=lambda enc, c: extra)
+    assert (np.asarray(a["states"]) == np.asarray(b["states"])).all()
+    assert np.allclose(np.asarray(a["ys"]), np.asarray(b["ys"]))
+
+
+# ---------------------------------------------------------------------------
+# FleetController
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_respects_capacity_and_logs_all_tenants():
+    fc = _controller(n_tenants=4, cap=60.0, steps=12, seed=1)
+    fc.run(4)
+    assert len(fc.decisions) == 4 * 4
+    assert all(isinstance(d, FleetDecision) for d in fc.decisions)
+    assert fc.violation_history == [0.0] * 4
+    usage = fc.aggregate_usage()
+    for fam, cores in usage["cores"].items():
+        assert cores <= fc.catalog.capacity(fam) + 1e-9
+    # ledger mirrors the allocation
+    for fam, cores in usage["cores"].items():
+        assert fc.catalog.reserved(fam) == pytest.approx(cores)
+
+
+def test_fleet_budget_is_enforced():
+    budget = 3.0
+    fc = _controller(n_tenants=4, cap=1e9, budget=budget, steps=12, seed=2)
+    fc.run(5)
+    assert fc.aggregate_usage()["usd_per_hr"] <= budget + 1e-9
+    assert fc.violation_history[-1] == 0.0
+
+
+def test_fleet_unconstrained_matches_greedy_optimum_direction():
+    """With loose capacity every tenant should improve on its fallback
+    start (the arbitration must not block unconstrained progress)."""
+    fc = _controller(n_tenants=3, cap=1e9, steps=40, seed=3)
+    y0 = [a["y"] for a in fc.allocations().values()]
+    fc.run(6)
+    y1 = [a["y"] for a in fc.allocations().values()]
+    assert sum(y1) < sum(y0)
+    assert any(d.action == "admit" for d in fc.decisions)
+
+
+def test_fleet_capacity_pressure_defers_or_preempts():
+    fc = _controller(n_tenants=6, cap=40.0, steps=16, seed=4)
+    fc.run(6)
+    actions = {d.action for d in fc.decisions}
+    assert actions <= {"admit", "hold", "defer", "preempt"}
+    assert ("defer" in actions or "preempt" in actions
+            or any(d.violation > 0 for d in fc.decisions)), \
+        "tight capacity must produce visible arbitration pressure"
+    assert fc.violation_history[-1] == 0.0
+
+
+def test_fleet_preempts_when_capacity_shrinks_below_incumbents():
+    """Start feasible, then rebuild the controller with crushing capacity:
+    initial incumbents (explicit init) violate and must be preempted."""
+    catalog = _catalog(cap=24.0)
+    space = make_ec2_space(catalog, core_counts=CORES)
+    big = space.encode({"instance_type": "compute", "n_workers": CORES[-1]})
+    tenants = [TenantSpec(f"t{i}", {"wordcount": 1.0}, init=big,
+                          priority=1.0 + i) for i in range(3)]
+    fc = FleetController(space, catalog, SimulatedEvaluator(catalog),
+                         tenants, budget_usd_hr=1e9, steps_per_round=8,
+                         seed=5)
+    ds = fc.round()
+    assert any(d.action == "preempt" for d in ds)
+    assert fc.violation_history[-1] == 0.0
+    # lowest-priority tenant is preempted first
+    preempted = [d.tenant for d in ds if d.action == "preempt"]
+    assert "t0" in preempted
+
+
+def test_fleet_decisions_are_audit_compatible():
+    """FleetDecision must be a Decision (same audit surface): the mixin's
+    spend() works, and every single-tenant audit field is present."""
+    fc = _controller(n_tenants=2, steps=8, seed=6)
+    fc.run(2)
+    d = fc.decisions[0]
+    assert isinstance(d, Decision)
+    single_fields = {f.name for f in dataclasses.fields(Decision)}
+    fleet_fields = {f.name for f in dataclasses.fields(FleetDecision)}
+    assert single_fields <= fleet_fields
+    assert fc.spend() > 0.0
+    assert {d.tenant for d in fc.decisions} == {"t0", "t1"}
+
+
+def test_fleet_staggered_blend_change_rebuilds_tables_and_adapts():
+    catalog = _catalog(cap=1e9)
+    space = make_ec2_space(catalog, core_counts=CORES)
+    tenants = [
+        TenantSpec("drifter", {"wordcount": 1.0},
+                   blend_after={"pagerank": 1.0}, change_at=2),
+        TenantSpec("steady", {"wordcount": 1.0}),
+    ]
+    fc = FleetController(space, catalog, SimulatedEvaluator(catalog),
+                         tenants, objective=Objective(lambda_cost=200.0),
+                         steps_per_round=24, seed=7)
+    fc.run(6)
+    # after the change the drifter's table is the pagerank table: its
+    # allocation should differ from the steady tenant's wordcount optimum
+    alloc = fc.allocations()
+    assert alloc["drifter"]["config"] != alloc["steady"]["config"]
+
+
+def test_fleet_coupling_rows_zero_when_unconstrained():
+    fc = _controller(n_tenants=3, cap=1e9, steps=8, seed=8)
+    assert (fc.coupling_rows() == 0.0).all()
+    hook = fc.coupling_penalty(fc.space.encoded(), 3)
+    assert hook.shape == (3,) + fc.space.shape
+    with pytest.raises(ValueError):
+        fc.coupling_penalty(fc.space.encoded(), 5)
+
+
+def test_fleet_coupling_rows_price_other_tenants_usage():
+    """With others' incumbents nearly filling a family, a tenant's row must
+    penalize states in that family proportionally to the overshoot."""
+    fc = _controller(n_tenants=2, cap=40.0, weight=1.0, steps=8, seed=9)
+    space = fc.space
+    big = int(np.ravel_multi_index(
+        space.encode({"instance_type": "compute", "n_workers": CORES[-1]}),
+        space.shape))
+    rows = fc.coupling_rows(np.asarray([big, big]))
+    # tenant 0 evaluating the same big compute state: aggregate would be
+    # 2 * 60 cores against a 40-core cap -> overshoot 80
+    assert rows[0, big] == pytest.approx(2 * CORES[-1] - 40.0)
+    # a small state in an empty family only pays the OTHER tenant's
+    # overshoot (60 - 40 = 20)
+    small_mem = int(np.ravel_multi_index(
+        space.encode({"instance_type": "memory", "n_workers": CORES[0]}),
+        space.shape))
+    assert rows[0, small_mem] == pytest.approx(CORES[-1] - 40.0)
+
+
+def test_preemption_targets_offenders_not_innocents():
+    """A breach in one family must not churn tenants in another: only
+    tenants with a positive marginal contribution to the violation are
+    preempted, and the offenders land in states that restore feasibility."""
+    cat = ServiceCatalog(
+        {f: EC2_CATALOG[f] for f in ("general", "compute")},
+        capacities={"compute": 10.0, "general": 1000.0})
+    space = make_ec2_space(cat, core_counts=(4, 8, 16))
+    big_compute = space.encode({"instance_type": "compute", "n_workers": 16})
+    innocent = space.encode({"instance_type": "general", "n_workers": 8})
+    tenants = [
+        TenantSpec("hi1", {"wordcount": 1.0}, priority=5.0,
+                   init=big_compute),
+        TenantSpec("hi2", {"wordcount": 1.0}, priority=5.0,
+                   init=big_compute),
+        TenantSpec("low", {"wordcount": 1.0}, priority=0.1, init=innocent),
+    ]
+    fc = FleetController(space, cat, SimulatedEvaluator(cat), tenants,
+                         steps_per_round=4, detectors=False, seed=12)
+    ds = fc.round()
+    by = {d.tenant: d for d in ds}
+    assert by["low"].action != "preempt", \
+        "tenant outside the breached family must not be preempted"
+    assert fc.violation_history[-1] == 0.0
+    for name in ("hi1", "hi2"):
+        assert fc.allocations()[name]["config"].instance_type == "general" \
+            or fc.allocations()[name]["config"].n_workers <= 8
+
+
+def test_fleet_preserves_foreign_reservations():
+    """An operator's manual hold on the shared catalog must survive the
+    controller's per-round ledger mirroring (and constrain remaining())."""
+    fc = _controller(n_tenants=2, cap=200.0, steps=8, seed=11)
+    fc.catalog.reserve("general", 37.0)     # operator headroom hold
+    fc.run(3)
+    own = fc.aggregate_usage()["cores"]["general"]
+    assert fc.catalog.reserved("general") == pytest.approx(own + 37.0)
+    assert fc.catalog.remaining("general") == pytest.approx(
+        200.0 - own - 37.0)
+
+
+def test_foreign_holds_shrink_the_feasible_region():
+    """A reservation placed by someone else BEFORE the controller starts
+    must be treated as unavailable capacity, not allocated over."""
+    catalog = _catalog(cap=60.0)
+    catalog.reserve("compute", 58.0)        # operator hold: 2 cores left
+    space = make_ec2_space(catalog, core_counts=CORES)
+    tenants = [TenantSpec(f"t{i}", {"wordcount": 1.0}) for i in range(3)]
+    fc = FleetController(space, catalog, SimulatedEvaluator(catalog),
+                         tenants, steps_per_round=8, seed=13)
+    fc.run(4)
+    assert fc.aggregate_usage()["cores"]["compute"] == 0.0, \
+        "2 remaining cores cannot fit any tenant (min config is 4)"
+    assert fc.violation_history[-1] == 0.0
+    assert catalog.reserved("compute") == pytest.approx(58.0)
+
+
+def test_adaptive_reheat_tau_array_matches_pointwise():
+    from repro.core import AdaptiveReheat, FixedTemperature
+
+    s = AdaptiveReheat(tau_base=0.5, tau_hot=4.0, relax=0.9)
+    assert np.allclose(s.tau_array(0, 20), [s(n) for n in range(20)])
+    s.reheat(7)
+    assert np.allclose(s.tau_array(0, 30), [s(n) for n in range(30)])
+    assert np.allclose(s.tau_array(25, 10), [s(n) for n in range(25, 35)])
+    f = FixedTemperature(1.5)   # generic Schedule fallback path
+    assert np.allclose(f.tau_array(3, 5), [1.5] * 5)
+
+
+def test_fleet_controller_validation():
+    catalog = _catalog()
+    space = make_ec2_space(catalog, core_counts=CORES)
+    ev = SimulatedEvaluator(catalog)
+    with pytest.raises(ValueError):
+        FleetController(space, catalog, ev, [])
+    t = TenantSpec("t", {"wordcount": 1.0})
+    with pytest.raises(ValueError):
+        FleetController(space, catalog, ev, [t, t])
+    with pytest.raises(ValueError):
+        TenantSpec("t", {"wordcount": 1.0}, priority=0.0)
+    with pytest.raises(ValueError):
+        FleetController(space, catalog, ev, [t], steps_per_round=0)

@@ -1,0 +1,35 @@
+"""Tier-2 (nightly) gate on the multi-tenant fleet arbitration bench: the
+acceptance claims — zero aggregate violations in the final 25% of rounds at
+32 tenants and a >= 5x wall-clock win over 32 independent controllers —
+checked end to end through benchmarks/fleet_arbitration.py."""
+
+import json
+import os
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_fleet_arbitration_bench_meets_claims(tmp_path):
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import common
+    from benchmarks.fleet_arbitration import fleet_arbitration
+
+    old_out = common.OUT_DIR
+    common.OUT_DIR = str(tmp_path)
+    try:
+        res = fleet_arbitration(tenant_counts=(8, 32), timed_T=32)
+    finally:
+        common.OUT_DIR = old_out
+
+    assert res["ok"], f"failed checks: {[c for c in res['checks'] if not c['ok']]}"
+    with open(tmp_path / "fleet_arbitration.json") as f:
+        data = json.load(f)
+    assert data["timed"]["speedup"] >= 5.0
+    assert data["timed"]["fleet_final_quarter_violations"] == 0.0
+    assert data["fleet"]["32"]["final_quarter_violations"] == 0.0

@@ -1,0 +1,167 @@
+"""Regression tests for the workload simulator (paper Figs. 3/11 backing):
+M/M/1 sojourn against the analytic value, exact blend change points, queue
+discipline invariants, and the multi-tenant multiplexer."""
+
+import numpy as np
+import pytest
+
+from repro.workloads import (
+    JobStream,
+    MultiTenantStream,
+    PoissonArrivals,
+    QueueSimulator,
+    TenantWorkload,
+    blended_stream,
+)
+
+
+# ---------------------------------------------------------------------------
+# M/M/1 regression: mean sojourn = 1 / (mu - lambda)
+# ---------------------------------------------------------------------------
+
+
+def test_mm1_mean_sojourn_matches_analytic():
+    lam, mu, n = 0.5, 1.0, 40_000
+    stream = JobStream({"job": 1.0}, seed=0)
+    arrivals = PoissonArrivals(stream, rate_per_s=lam, seed=0)
+    batch = [next(arrivals) for _ in range(n)]
+    rng = np.random.default_rng(7)
+    q = QueueSimulator(lambda job: float(rng.exponential(1.0 / mu)))
+    measured = q.mean_sojourn(batch)
+    analytic = 1.0 / (mu - lam)
+    assert measured == pytest.approx(analytic, rel=0.10), \
+        f"M/M/1 sojourn {measured:.3f} vs analytic {analytic:.3f}"
+
+
+def test_mm1_sojourn_grows_with_utilization():
+    """Heavier load -> longer sojourn (sanity on the queueing direction)."""
+    def mean_sojourn(lam):
+        stream = JobStream({"job": 1.0}, seed=1)
+        arrivals = PoissonArrivals(stream, lam, seed=1)
+        batch = [next(arrivals) for _ in range(10_000)]
+        rng = np.random.default_rng(8)
+        q = QueueSimulator(lambda job: float(rng.exponential(1.0)))
+        return q.mean_sojourn(batch)
+
+    # recreate generators per load so only the rate differs
+    assert mean_sojourn(0.2) < mean_sojourn(0.8)
+
+
+def test_queue_discipline_invariants():
+    """FIFO, single server: no job starts before it arrives or before the
+    previous job finishes; completions keep arrival order."""
+    stream = JobStream({"a": 0.5, "b": 0.5}, seed=2)
+    batch = [next(PoissonArrivals(stream, 2.0, seed=2)) for _ in range(500)]
+    q = QueueSimulator(lambda job: 0.3 if job == "a" else 0.7)
+    cs = q.run(batch)
+    prev_finish = 0.0
+    prev_arrival = -1.0
+    for c in cs:
+        assert c.start_t >= c.arrival.t - 1e-12
+        assert c.start_t >= prev_finish - 1e-12
+        assert c.arrival.t >= prev_arrival - 1e-12
+        assert c.sojourn_s >= 0.3 - 1e-12
+        prev_finish = c.finish_t
+        prev_arrival = c.arrival.t
+
+
+def test_empty_queue_mean_sojourn_is_zero():
+    assert QueueSimulator(lambda job: 1.0).mean_sojourn([]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Arrival process
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_interarrival_mean():
+    stream = JobStream({"job": 1.0}, seed=3)
+    arr = PoissonArrivals(stream, rate_per_s=4.0, seed=3)
+    ts = np.asarray([next(arr).t for _ in range(20_000)])
+    gaps = np.diff(ts)
+    assert (gaps > 0).all()
+    assert gaps.mean() == pytest.approx(1.0 / 4.0, rel=0.05)
+
+
+def test_arrival_indices_are_sequential():
+    stream = JobStream({"job": 1.0}, seed=4)
+    arr = PoissonArrivals(stream, 1.0, seed=4)
+    assert [next(arr).n for _ in range(10)] == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# Blend change points (paper sec. 4.3)
+# ---------------------------------------------------------------------------
+
+
+def test_blended_stream_switches_at_exact_change_point():
+    """With degenerate blends the switch index is observable exactly: the
+    draw at `change_at` is the FIRST from the new blend."""
+    change = 137
+    out = blended_stream({"a": 1.0}, {"b": 1.0}, change_at=change,
+                         n_jobs=300, seed=5)
+    assert out[:change] == ["a"] * change
+    assert out[change:] == ["b"] * (300 - change)
+
+
+def test_blended_stream_mix_frequencies():
+    out = blended_stream({"a": 0.8, "b": 0.2}, {"a": 0.2, "b": 0.8},
+                         change_at=2000, n_jobs=4000, seed=6)
+    before = out[:2000].count("a") / 2000
+    after = out[2000:].count("a") / 2000
+    assert before == pytest.approx(0.8, abs=0.05)
+    assert after == pytest.approx(0.2, abs=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant multiplexer
+# ---------------------------------------------------------------------------
+
+
+def test_multi_tenant_stream_staggered_changes():
+    tenants = [
+        TenantWorkload("t0", {"a": 1.0}, {"b": 1.0}, change_at=3),
+        TenantWorkload("t1", {"a": 1.0}, {"b": 1.0}, change_at=6),
+        TenantWorkload("t2", {"a": 1.0}),
+    ]
+    ms = MultiTenantStream(tenants, seed=0)
+    rounds = [next(ms) for _ in range(10)]
+    t0 = [r["t0"] for r in rounds]
+    t1 = [r["t1"] for r in rounds]
+    t2 = [r["t2"] for r in rounds]
+    assert t0 == ["a"] * 3 + ["b"] * 7
+    assert t1 == ["a"] * 6 + ["b"] * 4
+    assert t2 == ["a"] * 10
+
+
+def test_multi_tenant_stream_blend_of_tracks_round():
+    tenants = [TenantWorkload("t", {"a": 1.0}, {"b": 1.0}, change_at=2)]
+    ms = MultiTenantStream(tenants, seed=0)
+    assert ms.blend_of("t") == {"a": 1.0}
+    next(ms)
+    assert ms.blend_of("t") == {"a": 1.0}
+    next(ms)
+    assert ms.blend_of("t") == {"b": 1.0}
+
+
+def test_multi_tenant_streams_are_independent():
+    """Adding a tenant never perturbs the existing tenants' sequences."""
+    blend = {"a": 0.5, "b": 0.5}
+    two = MultiTenantStream(
+        [TenantWorkload("x", blend), TenantWorkload("y", blend)], seed=9)
+    three = MultiTenantStream(
+        [TenantWorkload("x", blend), TenantWorkload("y", blend),
+         TenantWorkload("z", blend)], seed=9)
+    seq2 = [next(two)["x"] for _ in range(50)]
+    seq3 = [next(three)["x"] for _ in range(50)]
+    assert seq2 == seq3
+
+
+def test_multi_tenant_stream_validation():
+    with pytest.raises(ValueError):
+        MultiTenantStream([], seed=0)
+    with pytest.raises(ValueError):
+        MultiTenantStream([TenantWorkload("t", {"a": 1.0}),
+                           TenantWorkload("t", {"a": 1.0})])
+    with pytest.raises(ValueError):
+        TenantWorkload("t", {"a": 1.0}, blend_after={"b": 1.0})
