@@ -10,7 +10,7 @@ import argparse
 import sys
 
 from . import blended_workloads, dnn_annealing, fleet_arbitration, \
-    kernel_bench, paper_figures, roofline_table
+    kernel_bench, paper_figures, roofline_table, surrogate_scale
 from .common import write_json
 
 SUITES = {
@@ -20,6 +20,7 @@ SUITES = {
     "dnn_annealing": dnn_annealing.run_all,
     "roofline_table": roofline_table.run_all,
     "kernel_bench": kernel_bench.run_all,
+    "surrogate_scale": surrogate_scale.run_all,
 }
 
 

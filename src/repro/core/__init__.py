@@ -83,6 +83,17 @@ from .state import (
     EncodedSpace,
     cluster_config_from,
 )
+from .surrogate import (
+    ExhaustiveSource,
+    MeasurementStore,
+    ObjectiveSource,
+    SpaceEncoding,
+    SurrogateAnnealer,
+    SurrogateModel,
+    SurrogateRound,
+    SurrogateSource,
+    window_space,
+)
 from .tabu import TabuMemory
 
 __all__ = [
@@ -110,5 +121,8 @@ __all__ = [
     "Schedule", "schedule_to_array",
     "ClusterConfig", "ConfigSpace", "Dimension", "EncodedSpace",
     "cluster_config_from",
+    "ExhaustiveSource", "MeasurementStore", "ObjectiveSource",
+    "SpaceEncoding", "SurrogateAnnealer", "SurrogateModel", "SurrogateRound",
+    "SurrogateSource", "window_space",
     "TabuMemory",
 ]

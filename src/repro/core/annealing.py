@@ -37,7 +37,7 @@ import numpy as np
 
 from .neighborhood import Neighborhood, flat_index, propose_nd
 from .schedules import FixedTemperature, Schedule
-from .state import ConfigSpace, EncodedSpace
+from .state import ConfigSpace, EncodedSpace, random_valid_state
 from .tabu import TabuMemory
 
 
@@ -111,18 +111,7 @@ class Annealer:
 
     # -- paper sec. 3: "Starting with a random configuration for x_0" --
     def _random_valid_state(self, tries: int = 10_000) -> tuple[int, ...]:
-        for _ in range(tries):
-            idx = tuple(
-                int(self.rng.integers(n)) for n in self.space.shape
-            )
-            if self.space.contains(idx):
-                return idx
-        raise ValueError(
-            f"no valid state found in ConfigSpace"
-            f"({', '.join(self.space.names)}) shape={self.space.shape} "
-            f"after {tries} uniform samples — the validity predicate may "
-            f"reject every state (or the valid region is vanishingly small; "
-            f"pass an explicit init)")
+        return random_valid_state(self.space, self.rng, tries)
 
     def reheat(self) -> None:
         """Signal a workload/offering change: raise the temperature AND
@@ -174,6 +163,12 @@ class Annealer:
         return [self.step() for _ in range(n_jobs)]
 
     # -- diagnostics used by the paper's figures --
+    @property
+    def measure_count(self) -> int:
+        """Real objective evaluations taken so far (incumbent refreshes
+        included) — the denominator of any measurement-savings claim."""
+        return len(self.evaluations)
+
     def best(self) -> tuple[tuple[int, ...], float]:
         """Lowest measured objective over ALL evaluations — incumbent
         initial/refresh measurements included, not just proposals."""

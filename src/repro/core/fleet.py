@@ -46,12 +46,12 @@ import numpy as np
 from .annealing import _fleet_nd_jit
 from .change_detect import BatchedPageHinkley
 from .costmodel import Evaluator
-from .landscape import tabulate
 from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
 from .procurement import ControllerMixin, Decision
 from .schedules import AdaptiveReheat, Schedule
 from .state import ConfigSpace, cluster_config_from
+from .surrogate import ExhaustiveSource, ObjectiveSource
 from ..workloads.simulator import MultiTenantStream, TenantWorkload
 
 
@@ -95,7 +95,10 @@ class FleetDecision(Decision):
     ``n`` still orders records correctly.  ``explored`` keeps the
     single-tenant meaning — the tenant's chain accepted an uphill move
     during the round — not a property of the arbitrated proposal (which,
-    as an argmin over visited states, is never uphill).
+    as an argmin over visited states, is never uphill).  The inherited
+    ``true_measures`` / ``surrogate_queries`` counters are fleet-wide
+    cumulative totals (table-building measurements included), so benches
+    can difference them to report measurement savings per round.
     """
 
     tenant: str
@@ -129,6 +132,7 @@ class FleetController(ControllerMixin):
         tau_hot: float | None = None,
         detectors: bool = True,
         seed: int = 0,
+        objective_source: ObjectiveSource | None = None,
     ):
         if not tenants:
             raise ValueError("at least one tenant required")
@@ -148,6 +152,10 @@ class FleetController(ControllerMixin):
         self.objective = objective
         self.budget_usd_hr = float(budget_usd_hr)
         self.steps_per_round = int(steps_per_round)
+        self.objective_source = (ExhaustiveSource()
+                                 if objective_source is None
+                                 else objective_source)
+        self._init_decision_log()   # before any counted table building
         self._key = jax.random.key(seed)
         self._enc = space.encoded()
         self._shape = self._enc.shape
@@ -215,7 +223,6 @@ class FleetController(ControllerMixin):
         self._reheat_pending = [False] * len(tenants)
         self._prev_cfgs = [None] * len(tenants)
         self._round = 0
-        self._init_decision_log()
         self.violation_history: list[float] = []
         self._mirror_reservations()
 
@@ -224,7 +231,15 @@ class FleetController(ControllerMixin):
     # ------------------------------------------------------------------
 
     def _table_for(self, blend: Mapping[str, float]) -> np.ndarray:
-        """Flat (size,) blended base-objective table; cached per blend."""
+        """Flat (size,) blended base-objective table; cached per blend.
+
+        The table comes from the injected :class:`ObjectiveSource`: the
+        default :class:`ExhaustiveSource` evaluates every valid state
+        (the historical behavior — fine for simulators), while a
+        :class:`repro.core.surrogate.SurrogateSource` probes a sparse
+        sample and interpolates — the mode that lets the fleet drive
+        :class:`MeasuredEvaluator` workloads, where each probe is real
+        cluster time."""
         names, weights = self.normalize_blend(blend)
         key = tuple(sorted(zip(names, weights)))
         if key not in self._tables:
@@ -232,12 +247,14 @@ class FleetController(ControllerMixin):
 
             def fn(decoded: dict[str, Any]) -> float:
                 cfg = cluster_config_from(decoded)
+                self._n_direct_measures += len(names)
                 return float(sum(
                     w * base(self.evaluator.measure(cfg, name, 0))
                     for name, w in zip(names, weights)))
 
-            table = tabulate(self.space, fn,
-                             valid_mask=self._enc.valid_mask)
+            table = np.asarray(self.objective_source.table(
+                self.space, fn, valid_mask=self._enc.valid_mask),
+                np.float64)
             self._tables[key] = table.reshape(-1)
         return self._tables[key]
 
@@ -503,8 +520,10 @@ class FleetController(ControllerMixin):
             m = dataclasses.replace(
                 self.evaluator.measure(cfg, jobs[t.name], r),
                 migration_s=mig_s, migration_usd=mig_usd)
+            self._n_direct_measures += 1
             self._prev_cfgs[i] = cfg
             pen_y = float(pen_tables[i, s])
+            counts = self.evaluation_counts()
             d = FleetDecision(
                 n=r, job=jobs[t.name], config=cfg, measurement=m,
                 y=pen_y, accepted=bool(s != prev[i]),
@@ -512,6 +531,8 @@ class FleetController(ControllerMixin):
                 tau=float(taus[i, -1]), reheated=reheats_fired[i],
                 tenant=t.name, round=r, action=actions[i],
                 violation=viol_i,
+                true_measures=counts["true_measures"],
+                surrogate_queries=counts["surrogate_queries"],
             )
             decisions.append(d)
             self.decisions.append(d)

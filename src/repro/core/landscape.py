@@ -97,17 +97,24 @@ def tabulate_dynamic(
     n_steps: int,
     invalid: float = np.inf,
     max_size: int = 200_000,
+    valid_mask: np.ndarray | None = None,
 ) -> np.ndarray:
     """Time-indexed tables ``Y[t, idx] = fn(space.decode(idx), t)`` — the
     N-dim counterpart of the Fig. 5 changing landscape.  Shape
-    ``(n_steps,) + space.shape``."""
+    ``(n_steps,) + space.shape``.  As with :func:`tabulate`, pass a
+    precomputed ``valid_mask`` (e.g. ``space.encoded().valid_mask``) so
+    the validity predicate is not re-run per (t, idx)."""
     if space.size() * n_steps > max_size:
         raise ValueError(
             f"dynamic table too large: {space.size()} x {n_steps}")
     Y = np.full((n_steps,) + space.shape, invalid, np.float64)
-    valid = [idx for idx in
-             itertools.product(*(range(n) for n in space.shape))
-             if space.contains(idx)]
+    if valid_mask is not None:
+        valid = [tuple(int(i) for i in row)
+                 for row in np.argwhere(np.asarray(valid_mask))]
+    else:
+        valid = [idx for idx in
+                 itertools.product(*(range(n) for n in space.shape))
+                 if space.contains(idx)]
     decoded = {idx: space.decode(idx) for idx in valid}
     for t in range(n_steps):
         for idx in valid:

@@ -26,12 +26,21 @@ from .objective import Measurement, Objective
 from .pricing import ServiceCatalog
 from .schedules import AdaptiveReheat, Schedule
 from .state import ClusterConfig, ConfigSpace, cluster_config_from
+from .surrogate import ObjectiveSource
 from .tabu import TabuMemory
 
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    """One controller decision: which config ran job n, and why."""
+    """One controller decision: which config ran job n, and why.
+
+    ``true_measures`` / ``surrogate_queries`` are the controller's
+    *cumulative* evaluation counts at log time (real evaluator runs —
+    table building included — vs surrogate-model queries), so any log
+    slice reports its measurement savings by differencing the endpoints.
+    They are keyword-only so subclasses can keep required positional
+    fields.
+    """
 
     n: int
     job: str
@@ -42,6 +51,8 @@ class Decision:
     explored: bool
     tau: float
     reheated: bool
+    true_measures: int = dataclasses.field(default=0, kw_only=True)
+    surrogate_queries: int = dataclasses.field(default=0, kw_only=True)
 
 
 class ControllerMixin:
@@ -58,6 +69,22 @@ class ControllerMixin:
 
     def _init_decision_log(self) -> None:
         self.decisions = []
+        self._n_direct_measures = 0
+
+    def evaluation_counts(self) -> dict[str, int]:
+        """Cumulative (true measures, surrogate queries).
+
+        ``true_measures`` counts ``evaluator.measure`` runs — per-job
+        measurements AND the ones made while building objective tables
+        (the table-building closures count themselves, so a blend of k
+        job types tallies k per tabulated state).  ``surrogate_queries``
+        counts the objective source's model evaluations."""
+        src = getattr(self, "objective_source", None)
+        return {
+            "true_measures": self._n_direct_measures,
+            "surrogate_queries":
+                src.surrogate_queries if src is not None else 0,
+        }
 
     @staticmethod
     def normalize_blend(
@@ -114,6 +141,7 @@ class ProcurementController(ControllerMixin):
     evaluate_blend: bool = False
     seed: int = 0
     init: tuple[int, ...] | None = None
+    objective_source: "ObjectiveSource | None" = None
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -140,6 +168,7 @@ class ProcurementController(ControllerMixin):
             y = 0.0
             for w, name in zip(weights, names):
                 m = self.evaluator.measure(cfg, name, n)
+                self._n_direct_measures += 1
                 measures.append(m)
                 y += w * self.objective(m)
             # migration billed once per reconfiguration, not per type
@@ -147,6 +176,7 @@ class ProcurementController(ControllerMixin):
                 y += mig_s + self.objective.lambda_cost * mig_usd
         else:
             job = names[int(self._rng.choice(len(names), p=weights))]
+            self._n_direct_measures += 1
             m = Measurement(
                 **{**dataclasses.asdict(self.evaluator.measure(cfg, job, n)),
                    "migration_s": mig_s, "migration_usd": mig_usd})
@@ -165,11 +195,14 @@ class ProcurementController(ControllerMixin):
         reheated = self._detect_reheat(
             self.detector, step.y_proposed, self.annealer.reheat)
         m = self._last_measures[0] if self._last_measures else Measurement(0, 0)
+        counts = self.evaluation_counts()
         d = Decision(
             n=step.n, job=self._last_job,
             config=cluster_config_from(self.space.decode(step.state)),
             measurement=m, y=step.y_current, accepted=step.accepted,
             explored=step.explored, tau=step.tau, reheated=reheated,
+            true_measures=counts["true_measures"],
+            surrogate_queries=counts["surrogate_queries"],
         )
         self.decisions.append(d)
         return d
@@ -207,7 +240,8 @@ class ProcurementController(ControllerMixin):
         best_idx, best_y = offline_plan(
             self.space, self._plan_objective,
             n_chains=n_chains, n_steps=n_steps, tau=tau,
-            seed=self.seed if seed is None else seed)
+            seed=self.seed if seed is None else seed,
+            objective_source=self.objective_source)
         self.annealer.state = tuple(best_idx)
         self.annealer.y = None
         return cluster_config_from(self.space.decode(best_idx)), best_y
@@ -217,6 +251,7 @@ class ProcurementController(ControllerMixin):
         a pure function of the configuration, suitable for tabulation."""
         cfg = cluster_config_from(decoded)
         names, weights = self._blend_weights()
+        self._n_direct_measures += len(names)
         return float(sum(
             w * self.objective(self.evaluator.measure(cfg, name, 0))
             for w, name in zip(weights, names)))
@@ -237,9 +272,16 @@ def offline_plan(
     n_steps: int = 200,
     tau: float = 1.0,
     seed: int = 0,
+    objective_source: ObjectiveSource | None = None,
 ) -> tuple[tuple[int, ...], float]:
-    """Batched offline sweep: tabulate ``objective_fn`` over the space and
-    run an ``anneal_fleet`` (one jitted call) from random valid starts.
+    """Batched offline sweep: materialize ``objective_fn`` over the space
+    and run an ``anneal_fleet`` (one jitted call) from random valid starts.
+
+    ``objective_source`` decides how the table is built — ``None`` keeps
+    the historical exhaustive :func:`tabulate` (one real evaluation per
+    valid state); a :class:`repro.core.surrogate.SurrogateSource` probes
+    sparsely and interpolates, which is the difference between a simulator
+    sweep and real cluster time when ``objective_fn`` executes jobs.
 
     Returns (best visited index vector, its tabulated objective).  Visited
     states are always valid (invalid proposals are rejection-masked), so
@@ -249,7 +291,11 @@ def offline_plan(
     import jax.numpy as jnp
 
     enc = space.encoded()
-    table = tabulate(space, objective_fn, valid_mask=enc.valid_mask)
+    if objective_source is None:
+        table = tabulate(space, objective_fn, valid_mask=enc.valid_mask)
+    else:
+        table = np.asarray(objective_source.table(
+            space, objective_fn, valid_mask=enc.valid_mask), np.float64)
     y = jnp.asarray(table, jnp.float32)
     out = anneal_fleet(jax.random.key(seed), enc, y, n_steps, float(tau),
                        n_chains=n_chains)

@@ -181,6 +181,25 @@ class EncodedSpace:
         return n
 
 
+def random_valid_state(
+    space: ConfigSpace, rng: np.random.Generator, tries: int = 10_000
+) -> tuple[int, ...]:
+    """Uniform rejection sample from the valid region (paper sec. 3:
+    "Starting with a random configuration for x_0").  The single
+    implementation behind :class:`repro.core.annealing.Annealer` and the
+    surrogate subsystem's samplers."""
+    for _ in range(tries):
+        idx = tuple(int(rng.integers(n)) for n in space.shape)
+        if space.contains(idx):
+            return idx
+    raise ValueError(
+        f"no valid state found in ConfigSpace"
+        f"({', '.join(space.names)}) shape={space.shape} "
+        f"after {tries} uniform samples — the validity predicate may "
+        f"reject every state (or the valid region is vanishingly small; "
+        f"pass an explicit init)")
+
+
 # ---------------------------------------------------------------------------
 # Concrete cluster configuration (decoded view used by evaluators)
 # ---------------------------------------------------------------------------

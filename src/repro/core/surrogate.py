@@ -1,0 +1,661 @@
+"""Surrogate objective: anneal on spaces too large to tabulate.
+
+The compiled engines (:func:`repro.core.annealing.anneal_chain_nd` /
+:func:`anneal_fleet`) consume *tables*, and :func:`repro.core.landscape.
+tabulate` hard-caps the product at 200k states — evaluating
+``fn(decode(idx))`` over a million-state procurement space is exactly what
+it exists to refuse.  But the paper's online algorithm never needed the
+full table: it only ever measures the configurations it visits.  This
+module closes the gap the way AutoTune (Chang et al.) and "Lifting the
+Fog of Uncertainties" (Zhang et al.) make microservice/cloud config
+spaces tractable — learn a cheap predictive model from sparse online
+measurements and let the optimizer move on the model, spending the real
+evaluation budget only where the model is promising or uncertain.
+
+Pieces:
+
+* :class:`MeasurementStore` — (state, objective, timestamp) observations
+  with recency decay and latest-wins-per-state semantics, so a drifting
+  landscape (paper sec. 4.3) overwrites stale measurements instead of
+  averaging against them.
+
+* :class:`SpaceEncoding` + :class:`SurrogateModel` — batched pure-JAX
+  inverse-distance / RBF interpolation over the mixed ordinal-categorical
+  encoding: ordinal axes become [0, 1]-scaled coordinates, categorical
+  axes one-hot / sqrt(2), so ONE Euclidean squared-distance matrix
+  carries both metrics (a categorical mismatch costs exactly as much as
+  traversing a full ordinal axis).  The (Q, M) distance matrix is a
+  Pallas kernel (:mod:`repro.kernels.surrogate_distance`) with a jnp
+  reference; :meth:`SurrogateModel.predict` returns estimates AND an
+  uncertainty channel (distance to the nearest measurement, scaled to
+  objective units).
+
+* :class:`ObjectiveSource` — the injectable "where do objective tables
+  come from" seam for the controllers: :class:`ExhaustiveSource` wraps
+  :func:`tabulate` (the historical behavior, one real evaluation per
+  valid state), :class:`SurrogateSource` probes a sparse sample and
+  interpolates the rest — which frees the fleet path to drive
+  :class:`repro.core.costmodel.MeasuredEvaluator` workloads, where every
+  avoided evaluation is real cluster time.
+
+* :class:`SurrogateAnnealer` — the measure-refit-anneal loop.  Each round
+  anneals a fleet of compiled chains on the surrogate restricted to a
+  moving *window* (a sub-:class:`ConfigSpace` around the incumbent, so
+  no materialized array ever scales with the full product), with the
+  uncertainty channel folded into acceptance through the engine's
+  ``extra_costs`` channel as an exploration bonus; it then spends the
+  real budget on the most promising and most uncertain visited states
+  and feeds the measurements back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .landscape import tabulate
+from .state import ConfigSpace, Dimension, EncodedSpace, random_valid_state
+
+
+# ---------------------------------------------------------------------------
+# Feature embedding of the mixed ordinal-categorical index space.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceEncoding:
+    """Index vectors -> real features whose squared Euclidean distance is
+    the mixed metric: ordinal axes contribute ((i - j) / (n - 1))^2,
+    categorical axes contribute 1 on mismatch (one-hot / sqrt(2)).
+
+    Built from space *metadata* only — no validity enumeration — so it
+    works on spaces far beyond the 200k-state tabulation cap.
+    """
+
+    shape: tuple[int, ...]
+    categorical: tuple[bool, ...]
+
+    @classmethod
+    def from_space(cls, space: ConfigSpace | EncodedSpace) -> "SpaceEncoding":
+        if isinstance(space, ConfigSpace):
+            return cls(space.shape,
+                       tuple(d.kind == "categorical" for d in space.dimensions))
+        return cls(space.shape, space.categorical)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def feature_dim(self) -> int:
+        return sum(n if c else 1
+                   for n, c in zip(self.shape, self.categorical))
+
+    def features(self, states: np.ndarray | Sequence[Sequence[int]]
+                 ) -> np.ndarray:
+        """(N, ndim) index vectors -> (N, feature_dim) fp32 features."""
+        states = np.asarray(states, np.int64).reshape(-1, self.ndim)
+        cols = []
+        for d, (n, cat) in enumerate(zip(self.shape, self.categorical)):
+            idx = states[:, d]
+            if cat:
+                oh = np.zeros((len(states), n), np.float32)
+                oh[np.arange(len(states)), idx] = 1.0 / np.sqrt(2.0)
+                cols.append(oh)
+            else:
+                cols.append((idx / max(n - 1, 1)).astype(np.float32)[:, None])
+        return np.concatenate(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sparse online observations.
+# ---------------------------------------------------------------------------
+
+
+class MeasurementStore:
+    """(encoded state, objective, timestamp) observations.
+
+    Latest-wins per state: re-measuring a configuration replaces its entry
+    (the landscape may have drifted).  ``half_life`` sets the recency
+    decay used by :meth:`weights` — ``None`` means no decay (static
+    landscapes).  ``capacity`` bounds memory; the stalest entries are
+    evicted first (entries are kept in refresh order, so eviction is
+    deterministic).
+    """
+
+    def __init__(self, ndim: int, half_life: float | None = None,
+                 capacity: int = 8192):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if half_life is not None and half_life <= 0:
+            raise ValueError("half_life must be > 0 (or None)")
+        self.ndim = int(ndim)
+        self.half_life = half_life
+        self.capacity = int(capacity)
+        self._data: dict[tuple[int, ...], tuple[float, float]] = {}
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def add(self, state: Sequence[int], y: float, t: float) -> None:
+        key = tuple(int(i) for i in state)
+        if len(key) != self.ndim:
+            raise ValueError(f"state rank {len(key)} != ndim {self.ndim}")
+        # delete-then-insert keeps dict order == refresh order, which makes
+        # capacity eviction (pop the front) evict the stalest entry
+        self._data.pop(key, None)
+        self._data[key] = (float(y), float(t))
+        while len(self._data) > self.capacity:
+            self._data.pop(next(iter(self._data)))
+
+    def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(states (M, ndim) int32, ys (M,) f64, ts (M,) f64), refresh order."""
+        if not self._data:
+            z = np.zeros(0)
+            return np.zeros((0, self.ndim), np.int32), z, z.copy()
+        states = np.asarray(list(self._data), np.int32)
+        vals = np.asarray(list(self._data.values()), np.float64)
+        return states, vals[:, 0].copy(), vals[:, 1].copy()
+
+    def weights(self, now: float) -> np.ndarray:
+        """(M,) recency weights: 2^(-(now - t) / half_life), 1 if no decay."""
+        _, _, ts = self.arrays()
+        if self.half_life is None:
+            return np.ones(len(ts))
+        return np.exp2(-np.maximum(now - ts, 0.0) / self.half_life)
+
+    def __contains__(self, state: Sequence[int]) -> bool:
+        return tuple(int(i) for i in state) in self._data
+
+    def timestamp(self, state: Sequence[int]) -> float:
+        """When the state was last measured (KeyError if never)."""
+        return self._data[tuple(int(i) for i in state)][1]
+
+    def best(
+        self, now: float | None = None, max_age: float | None = None
+    ) -> tuple[tuple[int, ...], float]:
+        """The state with the lowest (latest) measured objective.
+
+        With ``max_age`` set, only measurements taken within the last
+        ``max_age`` time units of ``now`` compete — on a drifting
+        landscape an old low reading is a claim about a surface that no
+        longer exists.  Falls back to the unrestricted argmin when every
+        entry is stale (better a suspect answer than none)."""
+        if not self._data:
+            raise ValueError("empty MeasurementStore")
+        items = list(self._data.items())
+        if max_age is not None:
+            if now is None:
+                raise ValueError("max_age requires now")
+            fresh = [kv for kv in items if now - kv[1][1] <= max_age]
+            items = fresh or items
+        key, (y, _) = min(items, key=lambda kv: kv[1][0])
+        return key, y
+
+
+# ---------------------------------------------------------------------------
+# The interpolator.
+# ---------------------------------------------------------------------------
+
+
+@functools.cache
+def _interp_jit(kind: str):
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.surrogate_distance import pairwise_sqdist
+
+    @jax.jit
+    def run(xq, xm, y, w_rec, length_scale, idw_power, eps):
+        d2 = pairwise_sqdist(xq, xm)                       # (Q, M)
+        if kind == "rbf":
+            k = jnp.exp(-d2 / (2.0 * length_scale**2))
+        else:                                              # "idw" (Shepard)
+            k = 1.0 / (d2 ** (idw_power / 2.0) + eps)
+        k = k * w_rec[None, :]
+        wsum = k.sum(axis=1)
+        # recency-weighted global mean as the far-field fallback
+        fallback = (y * w_rec).sum() / jnp.maximum(w_rec.sum(), 1e-12)
+        mean = jnp.where(wsum > 1e-12,
+                         (k @ y) / jnp.maximum(wsum, 1e-12), fallback)
+        dmin = jnp.sqrt(d2.min(axis=1))
+        return mean, dmin
+
+    return run
+
+
+@dataclasses.dataclass
+class SurrogateModel:
+    """Batched interpolator with an uncertainty channel.
+
+    ``kind="idw"`` (default) is Shepard inverse-distance weighting —
+    parameter-free across spaces and exact at measured states; ``"rbf"``
+    is a Gaussian kernel of width ``length_scale`` (normalized feature
+    units, where a full ordinal axis spans 1.0).  Predictions are
+    recency-weighted by the store, so stale measurements of a drifted
+    landscape fade rather than anchor the estimate.
+
+    The uncertainty channel is the distance to the nearest measurement,
+    scaled by the observed objective spread: zero exactly at measured
+    states, growing toward unexplored regions, in objective units so it
+    can ride the compiled chain's additive ``extra_costs`` channel.
+    """
+
+    encoding: SpaceEncoding
+    kind: str = "idw"
+    length_scale: float = 0.25
+    idw_power: float = 2.0
+    eps: float = 1e-9
+    chunk: int = 8192
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("idw", "rbf"):
+            raise ValueError(f"unknown surrogate kind {self.kind!r}")
+
+    def predict(
+        self,
+        states: np.ndarray | Sequence[Sequence[int]],
+        store: MeasurementStore,
+        now: float | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(Q, ndim) query index vectors -> (estimates (Q,), uncertainty
+        (Q,)), both float64.  Requires at least one measurement."""
+        if len(store) == 0:
+            raise ValueError("cannot predict from an empty MeasurementStore")
+        import jax.numpy as jnp
+
+        obs, ys, ts = store.arrays()
+        rec = store.weights(float(ts.max()) if now is None else float(now))
+        spread = float(ys.max() - ys.min())
+        y_scale = spread if spread > 0 else max(1.0, abs(float(ys.mean())))
+
+        xm = jnp.asarray(self.encoding.features(obs))
+        y_d = jnp.asarray(ys, jnp.float32)
+        rec_d = jnp.asarray(rec, jnp.float32)
+        run = _interp_jit(self.kind)
+
+        states = np.asarray(states, np.int64).reshape(-1, self.encoding.ndim)
+        means, dmins = [], []
+        for lo in range(0, len(states), self.chunk):
+            xq = jnp.asarray(self.encoding.features(states[lo:lo + self.chunk]))
+            m, d = run(xq, xm, y_d, rec_d, self.length_scale,
+                       self.idw_power, self.eps)
+            means.append(np.asarray(m, np.float64))
+            dmins.append(np.asarray(d, np.float64))
+        mean = np.concatenate(means)
+        unc = y_scale * np.concatenate(dmins)
+        return mean, unc
+
+
+# ---------------------------------------------------------------------------
+# ObjectiveSource: the injectable table provider for the controllers.
+# ---------------------------------------------------------------------------
+
+
+class ObjectiveSource:
+    """Where controller objective tables come from.
+
+    ``table(space, fn, valid_mask)`` returns an array of shape
+    ``space.shape``; implementations track ``true_measures`` (calls of the
+    real ``fn``) and ``surrogate_queries`` (model evaluations) for
+    standalone use.  The controllers count evaluator runs themselves
+    (their ``fn`` closures may take several measurements per call), so
+    their decision logs read ``surrogate_queries`` from here but keep
+    their own ``true_measures``.
+    """
+
+    def __init__(self) -> None:
+        self.true_measures = 0
+        self.surrogate_queries = 0
+
+    def counts(self) -> dict[str, int]:
+        return {"true_measures": self.true_measures,
+                "surrogate_queries": self.surrogate_queries}
+
+    def table(
+        self,
+        space: ConfigSpace,
+        fn: Callable[[dict[str, Any]], float],
+        valid_mask: np.ndarray | None = None,
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+
+class ExhaustiveSource(ObjectiveSource):
+    """The historical behavior: one real evaluation per valid state."""
+
+    def __init__(self, max_size: int = 200_000):
+        super().__init__()
+        self.max_size = int(max_size)
+
+    def table(self, space, fn, valid_mask=None):
+        Y = tabulate(space, fn, max_size=self.max_size,
+                     valid_mask=valid_mask)
+        if valid_mask is not None:
+            self.true_measures += int(np.asarray(valid_mask).sum())
+        elif space.is_valid is None:
+            self.true_measures += space.size()
+        else:
+            self.true_measures += int(np.isfinite(Y).sum())
+        return Y
+
+
+class SurrogateSource(ObjectiveSource):
+    """Probe ``n_probe`` valid states, interpolate the rest.
+
+    The table is still materialized over the full product (the compiled
+    fleet needs a (T, size) array), but the *real* evaluation count drops
+    from one-per-valid-state to ``n_probe`` — the difference between a
+    simulator sweep and a day of cluster time under a
+    :class:`repro.core.costmodel.MeasuredEvaluator`.
+    """
+
+    def __init__(
+        self,
+        n_probe: int = 256,
+        model: SurrogateModel | None = None,
+        half_life: float | None = None,
+        max_size: int = 2_000_000,
+        seed: int = 0,
+    ):
+        super().__init__()
+        if n_probe < 1:
+            raise ValueError("n_probe must be >= 1")
+        self.n_probe = int(n_probe)
+        self.model = model
+        self.half_life = half_life
+        self.max_size = int(max_size)
+        self._rng = np.random.default_rng(seed)
+
+    def _probe_states(self, space: ConfigSpace,
+                      valid_mask: np.ndarray | None) -> np.ndarray:
+        if valid_mask is not None:
+            flat = np.flatnonzero(np.asarray(valid_mask).reshape(-1))
+            if flat.size == 0:
+                raise ValueError("space has no valid states")
+            picks = self._rng.choice(
+                flat, size=min(self.n_probe, flat.size), replace=False)
+            return np.stack(
+                np.unravel_index(np.sort(picks), space.shape), axis=-1)
+        # dict keys preserve insertion order; repeated draws may collide,
+        # so very constrained spaces can yield fewer than n_probe probes
+        out: dict[tuple[int, ...], None] = {}
+        for _ in range(20 * self.n_probe):
+            out.setdefault(random_valid_state(space, self._rng), None)
+            if len(out) == self.n_probe:
+                break
+        return np.asarray(list(out), np.int64)
+
+    def table(self, space, fn, valid_mask=None):
+        if space.size() > self.max_size:
+            raise ValueError(
+                f"space too large to materialize: {space.size()}")
+        probes = self._probe_states(space, valid_mask)
+        store = MeasurementStore(len(space.shape), half_life=self.half_life,
+                                 capacity=max(len(probes), 1))
+        for s in probes:
+            store.add(s, float(fn(space.decode([int(i) for i in s]))), 0.0)
+            self.true_measures += 1
+        model = self.model or SurrogateModel(SpaceEncoding.from_space(space))
+        grid = np.indices(space.shape).reshape(len(space.shape), -1).T
+        mean, _ = model.predict(grid, store)
+        self.surrogate_queries += len(grid)
+        Y = mean.reshape(space.shape)
+        if valid_mask is not None:
+            Y = np.where(np.asarray(valid_mask), Y, np.inf)
+        return Y
+
+
+# ---------------------------------------------------------------------------
+# Windowed sub-spaces: nothing materialized scales with the full product.
+# ---------------------------------------------------------------------------
+
+
+def window_space(
+    space: ConfigSpace,
+    center: Sequence[int],
+    half_width: int = 6,
+) -> tuple[ConfigSpace, np.ndarray]:
+    """A sub-ConfigSpace around ``center``: ordinal axes keep a contiguous
+    ``2 * half_width + 1`` slice (clipped at the boundary without
+    shrinking, so window shapes — and jit traces — are stable as the
+    window moves), categorical axes keep every value.  The validity
+    predicate carries over unchanged (it sees decoded values, which are
+    the same values).  Returns (sub_space, per-axis index offsets)."""
+    if half_width < 1:
+        raise ValueError("half_width must be >= 1")
+    dims, offs = [], []
+    for dim, c in zip(space.dimensions, center):
+        n = len(dim)
+        w = 2 * half_width + 1
+        if dim.kind == "categorical" or n <= w:
+            lo = 0
+            vals = dim.values
+        else:
+            lo = int(np.clip(int(c) - half_width, 0, n - w))
+            vals = dim.values[lo:lo + w]
+        offs.append(lo)
+        dims.append(Dimension(dim.name, tuple(vals), dim.kind))
+    return (ConfigSpace(tuple(dims), space.is_valid),
+            np.asarray(offs, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# The measure-refit-anneal loop.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateRound:
+    """Audit record of one measure-refit-anneal round."""
+
+    n: int
+    incumbent: tuple[int, ...]
+    best_y: float                # best (latest) measured objective so far
+    window_size: int             # states interpolated this round
+    true_measures: int           # cumulative real evaluations
+    surrogate_queries: int       # cumulative model evaluations
+    measured: tuple[tuple[tuple[int, ...], float], ...]  # this round's
+
+
+class SurrogateAnnealer:
+    """Online annealing on spaces too large to tabulate.
+
+    Each :meth:`round`:
+
+    1. slice a window sub-space around the incumbent
+       (:func:`window_space`) and interpolate the surrogate objective and
+       its uncertainty over every window state;
+    2. run ``n_chains`` compiled chains for ``steps_per_round``
+       transitions on the surrogate table in ONE jitted
+       :func:`repro.core.annealing.anneal_fleet` call, with
+       ``-kappa * uncertainty`` threaded through ``extra_costs`` so the
+       acceptance rule itself prefers unexplored states (optimism in the
+       face of uncertainty);
+    3. spend ``measures_per_round`` real evaluations on the visited
+       states ranked by surrogate lower-confidence-bound, reserving an
+       ``explore_frac`` share for the most *uncertain* visited states;
+    4. feed the measurements back and move the incumbent to the best
+       measured state.
+
+    The first round starts with a *global* bootstrap design:
+    ``n_bootstrap`` uniform valid states measured across the full space,
+    so the incumbent jumps straight to the best sampled basin instead of
+    walking there one window at a time (the standard initial design of
+    sparse-measurement tuners).
+
+    Everything that is materialized — window table, uncertainty row,
+    chain traces — scales with the window, never the full product, so a
+    million-state :class:`ConfigSpace` costs the same per round as a
+    thousand-state one.  Deterministic under a fixed ``seed``.
+    """
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        evaluate: Callable[[dict[str, Any]], float],
+        model: SurrogateModel | None = None,
+        store: MeasurementStore | None = None,
+        half_width: int = 6,
+        n_chains: int = 16,
+        steps_per_round: int = 64,
+        tau: float = 1.0,
+        kappa: float = 1.0,
+        measures_per_round: int = 8,
+        explore_frac: float = 0.25,
+        n_bootstrap: int | None = None,
+        init: Sequence[int] | None = None,
+        seed: int = 0,
+    ):
+        import jax
+
+        if measures_per_round < 1:
+            raise ValueError("measures_per_round must be >= 1")
+        self.space = space
+        self.evaluate = evaluate
+        self.model = model or SurrogateModel(SpaceEncoding.from_space(space))
+        self.store = store or MeasurementStore(len(space.dimensions))
+        self.half_width = int(half_width)
+        self.n_chains = int(n_chains)
+        self.steps_per_round = int(steps_per_round)
+        self.tau = float(tau)
+        self.kappa = float(kappa)
+        self.measures_per_round = int(measures_per_round)
+        self.explore_frac = float(explore_frac)
+        self.n_bootstrap = (max(self.measures_per_round, 8)
+                            if n_bootstrap is None else int(n_bootstrap))
+        if self.n_bootstrap < 1:
+            raise ValueError("n_bootstrap must be >= 1")
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.key(seed)
+        self.true_measures = 0
+        self.surrogate_queries = 0
+        self.rounds: list[SurrogateRound] = []
+        self._n = 0
+        self._enc_cache: dict[tuple[int, ...], Any] = {}
+        if init is None:
+            init = self._random_valid_state()
+        if not space.contains(init):
+            raise ValueError(f"initial state {tuple(init)} not valid")
+        self.incumbent: tuple[int, ...] = tuple(int(i) for i in init)
+
+    def _random_valid_state(self, tries: int = 10_000) -> tuple[int, ...]:
+        return random_valid_state(self.space, self._rng, tries)
+
+    def _measure(self, state: Sequence[int], t: float
+                 ) -> tuple[tuple[int, ...], float]:
+        key = tuple(int(i) for i in state)
+        y = float(self.evaluate(self.space.decode(key)))
+        self.store.add(key, y, t)
+        self.true_measures += 1
+        return key, y
+
+    def _window_enc(self, sub: ConfigSpace, offs: np.ndarray):
+        key = tuple(int(o) for o in offs)
+        enc = self._enc_cache.get(key)
+        if enc is None:
+            # window sizes are capped by half_width, far below the
+            # tabulation ceiling; raise it so huge-but-windowed spaces
+            # with wide categorical axes still encode
+            enc = sub.encoded(max_size=10_000_000)
+            self._enc_cache[key] = enc
+        return enc
+
+    def round(self) -> SurrogateRound:
+        """One measure-refit-anneal round; returns its audit record."""
+        import jax
+
+        from .annealing import anneal_fleet, random_valid_states
+
+        t = float(self._n)
+        measured: list[tuple[tuple[int, ...], float]] = []
+        if len(self.store) == 0:
+            # global bootstrap design: incumbent + uniform valid states
+            # over the FULL space, then recenter on the best sample
+            measured.append(self._measure(self.incumbent, t))
+            for _ in range(self.n_bootstrap - 1):
+                measured.append(self._measure(self._random_valid_state(), t))
+            self.incumbent = self.store.best()[0]
+        elif (self.store.half_life is not None and self.incumbent in self.store
+              and t - self.store.timestamp(self.incumbent)
+              >= self.store.half_life):
+            # drift mode: the incumbent's reading is stale — refresh it
+            # before trusting it as the window center (the online
+            # Annealer's staleness rule: re-measuring the incumbent is
+            # what lets the loop adapt after a landscape change)
+            measured.append(self._measure(self.incumbent, t))
+            self.incumbent = self._best(t)[0]
+
+        sub, offs = window_space(self.space, self.incumbent, self.half_width)
+        enc = self._window_enc(sub, offs)
+        W = sub.size()
+        grid = np.indices(sub.shape).reshape(len(sub.shape), -1).T  # (W, nd)
+        mean, unc = self.model.predict(grid + offs, self.store, now=t)
+        self.surrogate_queries += W
+
+        # chain 0 starts at the incumbent (always inside its own window);
+        # the rest start uniform over the window's valid region
+        key_r = jax.random.fold_in(self._key, self._n)
+        k_init, k_run = jax.random.split(key_r)
+        inits = np.array(
+            random_valid_states(k_init, enc, self.n_chains), np.int32)
+        inits[0] = np.asarray(self.incumbent, np.int64) - offs
+        bonus = np.broadcast_to((-self.kappa * unc).astype(np.float32),
+                                (self.n_chains, W))
+        out = anneal_fleet(
+            k_run, enc, mean.reshape(sub.shape).astype(np.float32),
+            self.steps_per_round, self.tau, inits=inits,
+            n_chains=self.n_chains, extra_costs=bonus)
+
+        # candidate pool: every state any chain visited (step-0 included)
+        visited = np.concatenate(
+            [inits[:, None, :], np.asarray(out["states"])],
+            axis=1).reshape(-1, enc.ndim)
+        visited = np.unique(visited, axis=0)
+        vflat = np.ravel_multi_index(tuple(visited.T), sub.shape)
+        lcb = mean[vflat] - self.kappa * unc[vflat]
+
+        n_exp = min(int(round(self.explore_frac * self.measures_per_round)),
+                    self.measures_per_round - 1)
+        by_lcb = np.argsort(lcb, kind="stable")
+        by_unc = np.argsort(-unc[vflat], kind="stable")
+        chosen: list[int] = []
+        for pos in list(by_lcb[:self.measures_per_round - n_exp]) + list(by_unc):
+            if pos not in chosen:
+                chosen.append(int(pos))
+            if len(chosen) == self.measures_per_round:
+                break
+        for pos in chosen:
+            measured.append(self._measure(visited[pos] + offs, t))
+
+        self.incumbent, best_y = self._best(t)
+        rec = SurrogateRound(
+            n=self._n, incumbent=self.incumbent, best_y=best_y,
+            window_size=W, true_measures=self.true_measures,
+            surrogate_queries=self.surrogate_queries,
+            measured=tuple(measured))
+        self.rounds.append(rec)
+        self._n += 1
+        return rec
+
+    def run(self, n_rounds: int) -> list[SurrogateRound]:
+        return [self.round() for _ in range(n_rounds)]
+
+    def _best(self, now: float) -> tuple[tuple[int, ...], float]:
+        """Best measured state; on drifting landscapes (store.half_life
+        set) only readings younger than 4 half-lives compete — beyond
+        that a measurement has decayed to < 7% credibility."""
+        hl = self.store.half_life
+        return self.store.best(now=now,
+                               max_age=None if hl is None else 4.0 * hl)
+
+    def best(self) -> tuple[tuple[int, ...], float]:
+        """Best measured (state, objective) — measurements, not estimates."""
+        return self._best(float(self._n))
+
+    def counts(self) -> dict[str, int]:
+        return {"true_measures": self.true_measures,
+                "surrogate_queries": self.surrogate_queries}

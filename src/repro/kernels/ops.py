@@ -19,6 +19,7 @@ from . import quantize as _q
 from . import ref
 from . import rglru_scan as _rg
 from . import rwkv6_wkv as _wkv
+from . import surrogate_distance as _sd
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "window", "softcap"))
@@ -93,6 +94,12 @@ def wkv6(r, k, v, logw, u, chunk: int = 64):
                     v.transpose(0, 2, 1, 3), logw.transpose(0, 2, 1, 3),
                     u, chunk=chunk)
     return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_m"))
+def pairwise_sqdist(xq, xm, block_q: int = 256, block_m: int = 256):
+    """xq (Q, F), xm (M, F) -> (Q, M) squared distances (surrogate metric)."""
+    return _sd.pairwise_sqdist(xq, xm, block_q=block_q, block_m=block_m)
 
 
 @jax.jit

@@ -83,3 +83,12 @@ def wkv6_ref(r, k, v, logw, u):
 def quantize_int8_ref(x):
     from repro.optim.compression import quantize_int8 as q
     return q(x)
+
+
+def pairwise_sqdist_ref(xq, xm):
+    """xq (Q, F), xm (M, F) -> (Q, M) squared Euclidean distances."""
+    xq = xq.astype(jnp.float32)
+    xm = xm.astype(jnp.float32)
+    qq = jnp.sum(xq * xq, axis=1, keepdims=True)
+    mm = jnp.sum(xm * xm, axis=1, keepdims=True)
+    return jnp.maximum(qq + mm.T - 2.0 * (xq @ xm.T), 0.0)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: pairwise squared-distance matrix for the surrogate.
+
+The surrogate interpolator's hot spot is ``D[i, j] = ||q_i - m_j||^2``
+between Q windowed query states and M stored measurements, both already
+embedded in the mixed ordinal-categorical feature space
+(:class:`repro.core.surrogate.SpaceEncoding`: ordinal axes are [0, 1]
+scaled coordinates, categorical axes one-hot / sqrt(2), so ONE Euclidean
+distance carries both metrics).  Expanding
+
+    D = ||q||^2 + ||m||^2 - 2 q m^T
+
+turns the inner loop into a tiled matmul (MXU) plus two row-norm passes;
+the grid tiles (Q, M) so each (block_q, block_m) output tile is computed
+in a single VMEM pass over its operand rows.  The fp32 feature matrices
+are read once per tile row/column — the window is re-interpolated every
+surrogate round, so this runs at controller frequency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Queries far outside the data cloud must dominate every kernel weight;
+# padding rows sit at this coordinate so their distances are huge without
+# needing a separate mask input.
+_PAD_SENTINEL = 1e4
+
+
+def _sqdist_kernel(q_ref, m_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)            # (block_q, F)
+    m = m_ref[...].astype(jnp.float32)            # (block_m, F)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)    # (block_q, 1)
+    mm = jnp.sum(m * m, axis=1, keepdims=True)    # (block_m, 1)
+    g = jax.lax.dot_general(
+        q, m, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (block_q, block_m)
+    out_ref[...] = jnp.maximum(qq + mm.T - 2.0 * g, 0.0)
+
+
+def pairwise_sqdist(xq, xm, *, block_q: int = 256, block_m: int = 256,
+                    interpret: bool | None = None):
+    """xq (Q, F), xm (M, F) fp32 -> (Q, M) squared Euclidean distances.
+
+    Q, M and F are padded up to tile multiples (F to the 128-lane width);
+    padded feature columns are zero (distance-neutral) and padded rows sit
+    at a far sentinel so downstream min-distance reductions ignore them
+    after the slice back to (Q, M).
+    """
+    Q, F = xq.shape
+    M, F2 = xm.shape
+    if F != F2:
+        raise ValueError(f"feature dims differ: {F} vs {F2}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    bq = min(block_q, max(Q, 8))
+    bm = min(block_m, max(M, 8))
+    Qp = -(-Q // bq) * bq
+    Mp = -(-M // bm) * bm
+    Fp = -(-F // 128) * 128
+
+    def pad(x, rows):
+        r, f = x.shape
+        out = jnp.full((rows, Fp), 0.0, jnp.float32)
+        out = out.at[r:, 0].set(_PAD_SENTINEL)
+        return out.at[:r, :f].set(x.astype(jnp.float32))
+
+    d2 = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(Qp // bq, Mp // bm),
+        in_specs=[
+            pl.BlockSpec((bq, Fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, Fp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Mp), jnp.float32),
+        interpret=interpret,
+    )(pad(xq, Qp), pad(xm, Mp))
+    return d2[:Q, :M]
