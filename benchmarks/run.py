@@ -9,8 +9,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import blended_workloads, dnn_annealing, fleet_arbitration, \
-    kernel_bench, paper_figures, roofline_table, surrogate_scale
+from . import blended_workloads, container_sizing, dnn_annealing, \
+    fleet_arbitration, kernel_bench, paper_figures, roofline_table, \
+    surrogate_scale
 from .common import write_json
 
 SUITES = {
@@ -21,6 +22,7 @@ SUITES = {
     "roofline_table": roofline_table.run_all,
     "kernel_bench": kernel_bench.run_all,
     "surrogate_scale": surrogate_scale.run_all,
+    "container_sizing": container_sizing.run_all,
 }
 
 

@@ -76,6 +76,15 @@ from .schedules import (
     Schedule,
     schedule_to_array,
 )
+from .sizing import (
+    MicroserviceEvaluator,
+    SizingController,
+    SizingDecision,
+    SizingSpace,
+    evaluate_sizing_batch,
+    full_grid,
+    microservice_config_fn,
+)
 from .state import (
     ClusterConfig,
     ConfigSpace,
@@ -92,6 +101,7 @@ from .surrogate import (
     SurrogateModel,
     SurrogateRound,
     SurrogateSource,
+    expected_improvement,
     window_space,
 )
 from .tabu import TabuMemory
@@ -123,6 +133,9 @@ __all__ = [
     "cluster_config_from",
     "ExhaustiveSource", "MeasurementStore", "ObjectiveSource",
     "SpaceEncoding", "SurrogateAnnealer", "SurrogateModel", "SurrogateRound",
-    "SurrogateSource", "window_space",
+    "SurrogateSource", "expected_improvement", "window_space",
+    "MicroserviceEvaluator", "SizingController", "SizingDecision",
+    "SizingSpace", "evaluate_sizing_batch", "full_grid",
+    "microservice_config_fn",
     "TabuMemory",
 ]

@@ -48,6 +48,25 @@ class Evaluator:
     ) -> Measurement:
         raise NotImplementedError
 
+    def measure_decoded(
+        self, decoded: Mapping[str, Any], job: str, n: int,
+        config: ClusterConfig | None = None,
+    ) -> Measurement:
+        """Measure from the decoded ConfigSpace mapping.
+
+        The default derives a :class:`ClusterConfig` (or takes the one
+        the caller already built) and defers to :meth:`measure`.
+        Evaluators whose objective depends on axes a ClusterConfig
+        cannot carry — per-tier container sizings
+        (:class:`repro.core.sizing.MicroserviceEvaluator`) — override
+        this; the FleetController routes every measurement through it.
+        """
+        from .state import cluster_config_from
+
+        if config is None:
+            config = cluster_config_from(decoded)
+        return self.measure(config, job, n)
+
     def migration(
         self, old: ClusterConfig | None, new: ClusterConfig,
         catalog: ServiceCatalog,

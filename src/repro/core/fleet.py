@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +50,7 @@ from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
 from .procurement import ControllerMixin, Decision
 from .schedules import AdaptiveReheat, Schedule
-from .state import ConfigSpace, cluster_config_from
+from .state import ClusterConfig, ConfigSpace, cluster_config_from
 from .surrogate import ExhaustiveSource, ObjectiveSource
 from ..workloads.simulator import MultiTenantStream, TenantWorkload
 
@@ -117,6 +117,14 @@ class FleetController(ControllerMixin):
     ``budget_usd_hr`` caps the fleet's aggregate spend *rate* (sum over
     tenants of their configuration's on-demand $/hr); per-family core
     capacities come from the catalog (:meth:`ServiceCatalog.capacity`).
+
+    ``config_fn`` maps a decoded state to the :class:`ClusterConfig` the
+    capacity ledger accounts (default :func:`cluster_config_from`) —
+    microservice container tenants pass
+    :func:`repro.core.sizing.microservice_config_fn` so their per-tier
+    sizings settle into a total-core footprint on the hosting family,
+    and their measurements route through
+    :meth:`Evaluator.measure_decoded`.
     """
 
     def __init__(
@@ -133,6 +141,7 @@ class FleetController(ControllerMixin):
         detectors: bool = True,
         seed: int = 0,
         objective_source: ObjectiveSource | None = None,
+        config_fn: "Callable[[Mapping[str, Any]], ClusterConfig] | None" = None,
     ):
         if not tenants:
             raise ValueError("at least one tenant required")
@@ -155,6 +164,12 @@ class FleetController(ControllerMixin):
         self.objective_source = (ExhaustiveSource()
                                  if objective_source is None
                                  else objective_source)
+        # config_fn maps a decoded state to the ClusterConfig the capacity
+        # ledger accounts — the seam that lets non-VM tenants (microservice
+        # container deployments, repro.core.sizing) report their core
+        # footprint without forcing their axes into ClusterConfig fields
+        self._config_of = (cluster_config_from if config_fn is None
+                           else config_fn)
         self._init_decision_log()   # before any counted table building
         self._key = jax.random.key(seed)
         self._enc = space.encoded()
@@ -180,7 +195,7 @@ class FleetController(ControllerMixin):
         self._tables_jnp = None     # (T, S) device copy; rebuilt on change
         for s in range(S):
             idx = np.unravel_index(s, self._shape)
-            cfg = cluster_config_from(space.decode([int(i) for i in idx]))
+            cfg = self._config_of(space.decode([int(i) for i in idx]))
             cores = float(cfg.total_cores)
             self._cores_by_family[fam_idx[cfg.instance_type], s] = cores
             self._spend_rate[s] = (
@@ -246,10 +261,11 @@ class FleetController(ControllerMixin):
             base = self.objective.base
 
             def fn(decoded: dict[str, Any]) -> float:
-                cfg = cluster_config_from(decoded)
+                cfg = self._config_of(decoded)
                 self._n_direct_measures += len(names)
                 return float(sum(
-                    w * base(self.evaluator.measure(cfg, name, 0))
+                    w * base(self.evaluator.measure_decoded(
+                        decoded, name, 0, cfg))
                     for name, w in zip(names, weights)))
 
             table = np.asarray(self.objective_source.table(
@@ -484,19 +500,10 @@ class FleetController(ControllerMixin):
         # exploration: did the chain ACCEPT an uphill move this round?
         # (the single-tenant Step.explored semantics — the arbitrated
         # proposal itself is an argmin over visited states, so it can
-        # never be uphill of the incumbent.)  The incumbent y before step
-        # k is the last accepted measurement before k (y0 if none):
-        # forward-fill the accepted indices and gather.
+        # never be uphill of the incumbent.)
         accepts = np.asarray(out["accepts"])                  # (T, steps)
-        kk = np.arange(steps)[None, :]
-        last_acc = np.maximum.accumulate(np.where(accepts, kk, -1), axis=1)
-        prev_acc = np.concatenate(
-            [np.full((T, 1), -1), last_acc[:, :-1]], axis=1)
-        y0 = pen_tables[np.arange(T), flat[:, 0]][:, None]
-        inc_before = np.where(
-            prev_acc >= 0,
-            np.take_along_axis(ys, np.maximum(prev_acc, 0), axis=1), y0)
-        explored_chain = (accepts & (ys > inc_before)).any(axis=1)
+        y0 = pen_tables[np.arange(T), flat[:, 0]]
+        explored_chain = self.explored_flags(ys, accepts, y0)
 
         prev = self._incumbents.copy()
         final, actions = self._arbitrate(proposals, pen_tables)
@@ -514,11 +521,12 @@ class FleetController(ControllerMixin):
             viol_i = max(0.0, final_v
                          - self._overshoot(*self._others_usage(i, final)))
             idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
-            cfg = cluster_config_from(self.space.decode(idx))
+            decoded = self.space.decode(idx)
+            cfg = self._config_of(decoded)
             mig_s, mig_usd = self.evaluator.migration(
                 self._prev_cfgs[i], cfg, self.catalog)
             m = dataclasses.replace(
-                self.evaluator.measure(cfg, jobs[t.name], r),
+                self.evaluator.measure_decoded(decoded, jobs[t.name], r, cfg),
                 migration_s=mig_s, migration_usd=mig_usd)
             self._n_direct_measures += 1
             self._prev_cfgs[i] = cfg
@@ -580,7 +588,7 @@ class FleetController(ControllerMixin):
             s = int(self._incumbents[i])
             idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
             out[t.name] = {
-                "config": cluster_config_from(self.space.decode(idx)),
+                "config": self._config_of(self.space.decode(idx)),
                 "usd_per_hr": float(self._spend_rate[s]),
                 "y": float(self._tenant_tables[i][s]),
             }

@@ -57,8 +57,11 @@ class Objective:
             t += m.migration_s
             c += m.migration_usd
         y = t + self.lambda_cost * c
-        if self.slo_s is not None and m.exec_time_s > self.slo_s:
-            y += self.slo_penalty * (m.exec_time_s - self.slo_s)
+        # the deadline tests the same t that enters Y: with migration
+        # folded in, a reconfiguration that blows the deadline must be
+        # penalized even when the bare execution time would have met it
+        if self.slo_s is not None and t > self.slo_s:
+            y += self.slo_penalty * (t - self.slo_s)
         return float(y)
 
 

@@ -107,8 +107,23 @@ class ServiceCatalog:
         return self._reserved.get(name, 0.0)
 
     def remaining(self, name: str) -> float:
-        """Unreserved capacity of family ``name`` (+inf when uncapped)."""
+        """Unreserved capacity of family ``name`` (+inf when uncapped).
+        Negative after a :meth:`set_capacity` shrink below the reserved
+        amount — live allocations exceed what the provider now offers,
+        and controllers must repair (preempt) to restore feasibility."""
         return self.capacity(name) - self.reserved(name)
+
+    def set_capacity(self, name: str, n_cores: float) -> None:
+        """Live capacity update — a spot revocation (shrink) or restock
+        (grow) taking effect mid-run.  Unlike :meth:`with_capacities`
+        this mutates THIS catalog, preserving the reservation ledger:
+        reservations may transiently exceed the new capacity, which
+        surfaces as negative :meth:`remaining` until the controllers
+        sharing the catalog preempt their way back under it."""
+        self[name]  # KeyError on unknown families
+        if n_cores < 0:
+            raise ValueError("n_cores must be >= 0")
+        self._capacity[name] = float(n_cores)
 
     def reserve(self, name: str, n_cores: float) -> None:
         """Claim ``n_cores`` from family ``name``; CapacityError if it

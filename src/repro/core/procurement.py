@@ -100,6 +100,33 @@ class ControllerMixin:
         return names, weights / weights.sum()
 
     @staticmethod
+    def explored_flags(
+        ys: np.ndarray, accepts: np.ndarray, y0: np.ndarray
+    ) -> np.ndarray:
+        """Per-chain "accepted an uphill move" flags from one compiled
+        round's traces — the single-tenant ``Step.explored`` semantics
+        reconstructed from :func:`repro.core.annealing.anneal_fleet`
+        outputs.
+
+        ``ys``/``accepts`` are (C, steps) measured objectives and
+        acceptance flags; ``y0`` (C,) is each chain's step-0 incumbent
+        objective.  The incumbent's objective before step k is the last
+        accepted measurement before k (y0 if none): forward-fill the
+        accepted indices and gather; a step both accepted and above that
+        incumbent explored.
+        """
+        C, steps = ys.shape
+        kk = np.arange(steps)[None, :]
+        last_acc = np.maximum.accumulate(np.where(accepts, kk, -1), axis=1)
+        prev_acc = np.concatenate(
+            [np.full((C, 1), -1), last_acc[:, :-1]], axis=1)
+        inc_before = np.where(
+            prev_acc >= 0,
+            np.take_along_axis(ys, np.maximum(prev_acc, 0), axis=1),
+            np.asarray(y0, np.float64).reshape(-1, 1))
+        return (accepts & (ys > inc_before)).any(axis=1)
+
+    @staticmethod
     def _detect_reheat(
         detector: PageHinkley | None,
         y: float,
@@ -165,15 +192,18 @@ class ProcurementController(ControllerMixin):
         names, weights = self._blend_weights()
         measures: list[Measurement] = []
         if self.evaluate_blend:
+            # migration is folded into EVERY type's measurement: the
+            # weights sum to one, so Y still bills it exactly once — and
+            # the Objective's SLO hinge tests each type's
+            # migration-inclusive time, same as the non-blended path
             y = 0.0
             for w, name in zip(weights, names):
-                m = self.evaluator.measure(cfg, name, n)
+                m = dataclasses.replace(
+                    self.evaluator.measure(cfg, name, n),
+                    migration_s=mig_s, migration_usd=mig_usd)
                 self._n_direct_measures += 1
                 measures.append(m)
                 y += w * self.objective(m)
-            # migration billed once per reconfiguration, not per type
-            if self.objective.include_migration and (mig_s or mig_usd):
-                y += mig_s + self.objective.lambda_cost * mig_usd
         else:
             job = names[int(self._rng.choice(len(names), p=weights))]
             self._n_direct_measures += 1

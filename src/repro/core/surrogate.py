@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -444,6 +445,28 @@ def window_space(
 
 
 # ---------------------------------------------------------------------------
+# Acquisition scores: how the real-measurement budget is ranked.
+# ---------------------------------------------------------------------------
+
+
+def expected_improvement(
+    mean: np.ndarray, unc: np.ndarray, y_best: float
+) -> np.ndarray:
+    """EI under a Gaussian belief (minimization): ``s (z Phi(z) + phi(z))``
+    with ``z = (y_best - mean) / s`` and ``s`` the uncertainty channel
+    read as a standard deviation.  Exactly-measured states (``s = 0``)
+    get their deterministic improvement ``max(y_best - mean, 0)`` — no
+    exploration credit for what is already known."""
+    mean = np.asarray(mean, np.float64)
+    s = np.maximum(np.asarray(unc, np.float64), 1e-12)
+    z = (y_best - mean) / s
+    cdf = 0.5 * (1.0 + np.asarray([math.erf(v / math.sqrt(2.0))
+                                   for v in np.ravel(z)]).reshape(z.shape))
+    pdf = np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+    return s * (z * cdf + pdf)
+
+
+# ---------------------------------------------------------------------------
 # The measure-refit-anneal loop.
 # ---------------------------------------------------------------------------
 
@@ -476,7 +499,10 @@ class SurrogateAnnealer:
        acceptance rule itself prefers unexplored states (optimism in the
        face of uncertainty);
     3. spend ``measures_per_round`` real evaluations on the visited
-       states ranked by surrogate lower-confidence-bound, reserving an
+       states ranked by the chosen ``acquisition`` — ``"lcb"`` (default:
+       surrogate lower confidence bound, ``mean - kappa *
+       uncertainty``) or ``"ei"`` (expected improvement over the best
+       measurement, :func:`expected_improvement`) — reserving an
        ``explore_frac`` share for the most *uncertain* visited states;
     4. feed the measurements back and move the incumbent to the best
        measured state.
@@ -509,11 +535,16 @@ class SurrogateAnnealer:
         n_bootstrap: int | None = None,
         init: Sequence[int] | None = None,
         seed: int = 0,
+        acquisition: str = "lcb",
     ):
         import jax
 
         if measures_per_round < 1:
             raise ValueError("measures_per_round must be >= 1")
+        if acquisition not in ("lcb", "ei"):
+            raise ValueError(f"unknown acquisition {acquisition!r} "
+                             f"(expected 'lcb' or 'ei')")
+        self.acquisition = acquisition
         self.space = space
         self.evaluate = evaluate
         self.model = model or SurrogateModel(SpaceEncoding.from_space(space))
@@ -616,14 +647,19 @@ class SurrogateAnnealer:
             axis=1).reshape(-1, enc.ndim)
         visited = np.unique(visited, axis=0)
         vflat = np.ravel_multi_index(tuple(visited.T), sub.shape)
-        lcb = mean[vflat] - self.kappa * unc[vflat]
+        if self.acquisition == "ei":
+            # lower score = measured earlier, so negate the improvement
+            acq = -expected_improvement(
+                mean[vflat], unc[vflat], self._best(t)[1])
+        else:
+            acq = mean[vflat] - self.kappa * unc[vflat]
 
         n_exp = min(int(round(self.explore_frac * self.measures_per_round)),
                     self.measures_per_round - 1)
-        by_lcb = np.argsort(lcb, kind="stable")
+        by_acq = np.argsort(acq, kind="stable")
         by_unc = np.argsort(-unc[vflat], kind="stable")
         chosen: list[int] = []
-        for pos in list(by_lcb[:self.measures_per_round - n_exp]) + list(by_unc):
+        for pos in list(by_acq[:self.measures_per_round - n_exp]) + list(by_unc):
             if pos not in chosen:
                 chosen.append(int(pos))
             if len(chosen) == self.measures_per_round:

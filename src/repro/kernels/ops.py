@@ -19,6 +19,7 @@ from . import quantize as _q
 from . import ref
 from . import rglru_scan as _rg
 from . import rwkv6_wkv as _wkv
+from . import sizing_latency as _sl
 from . import surrogate_distance as _sd
 
 
@@ -94,6 +95,15 @@ def wkv6(r, k, v, logw, u, chunk: int = 64):
                     v.transpose(0, 2, 1, 3), logw.transpose(0, 2, 1, 3),
                     u, chunk=chunk)
     return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("c_max", "sat_s", "block_b"))
+def sizing_latency(lam, mu, repl, visit_w, adj, c_max: int,
+                   sat_s: float = 1e4, block_b: int = 32):
+    """(B, K) tier rates/replicas + (K, K) adjacency -> (sojourn, path),
+    both (B, K) fp32 (container-sizing M/M/c + critical-path evaluator)."""
+    return _sl.sizing_latency(lam, mu, repl, visit_w, adj, c_max=c_max,
+                              sat_s=sat_s, block_b=block_b)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_m"))

@@ -92,3 +92,38 @@ def pairwise_sqdist_ref(xq, xm):
     qq = jnp.sum(xq * xq, axis=1, keepdims=True)
     mm = jnp.sum(xm * xm, axis=1, keepdims=True)
     return jnp.maximum(qq + mm.T - 2.0 * (xq @ xm.T), 0.0)
+
+
+def sizing_latency_ref(lam, mu, repl, visit_w, adj, *, c_max: int,
+                       sat_s: float = 1e4):
+    """M/M/c sojourns + DAG critical path; mirrors
+    :func:`repro.kernels.sizing_latency.sizing_latency`.
+
+    lam/mu/repl/visit_w (B, K) -> (sojourn (B, K), path (B, K)), fp32.
+    Erlang C through the in-[0, 1] Erlang-B recurrence; unstable cells
+    (lam >= repl * mu) saturate to ``sat_s``; ``path[:, v]`` is the
+    heaviest visit-weighted path of the sub-DAG rooted at v.
+    """
+    lam = lam.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    c = repl.astype(jnp.float32)
+    w = visit_w.astype(jnp.float32)
+    a = lam / mu
+    b = jnp.ones_like(a)
+    b_c = jnp.zeros_like(a)
+    for k in range(1, int(c_max) + 1):
+        b = a * b / (float(k) + a * b)
+        b_c = jnp.where(c == float(k), b, b_c)
+    rho = a / jnp.maximum(c, 1.0)
+    p_wait = b_c / jnp.maximum(1.0 - rho * (1.0 - b_c), 1e-12)
+    slack = c * mu - lam
+    soj = jnp.where(slack > 1e-9,
+                    p_wait / jnp.maximum(slack, 1e-12) + 1.0 / mu,
+                    jnp.float32(sat_s))
+    node = w * soj
+    edges = jnp.asarray(adj, bool)
+    latency = node
+    for _ in range(lam.shape[1]):
+        masked = jnp.where(edges[None, :, :], latency[:, None, :], -1e30)
+        latency = node + jnp.maximum(jnp.max(masked, axis=2), 0.0)
+    return soj, latency

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: M/M/c tier sojourns + DAG critical-path latency.
+
+The container-sizing evaluator's hot spot is scoring B candidate sizings
+of a K-tier microservice DAG in one shot: for every (candidate, tier)
+cell, an Erlang-C M/M/c sojourn (queue wait + service) from the tier's
+arrival rate, per-replica service rate and replica count; then, per row,
+the visit-weighted *critical path* over the DAG — the heaviest
+entry-to-leaf path where each node costs ``visits x sojourn`` and
+parallel fan-out composes by max (sequential chains by sum).  Jackson's
+independence approximation makes the per-tier queues separable, so the
+whole thing is (B, K) elementwise work plus a depth-bounded masked-max
+relaxation — VPU-shaped, one VMEM pass per row block.
+
+Erlang C is computed through the Erlang-B blocking recurrence
+
+    B_0 = 1,   B_k = a B_{k-1} / (k + a B_{k-1}),
+    C(c, a) = B_c / (1 - rho (1 - B_c)),   rho = a / c,
+
+which stays in [0, 1] throughout — no a^c / c! overflow — and costs one
+fused multiply-divide per replica step up to the static ``c_max``.
+Unstable cells (lambda >= c mu) saturate to ``sat_s`` seconds, a finite
+cliff the annealing acceptance rule can walk off of.
+
+The critical path is a ``depth``-step relaxation of
+
+    L[v] = w[v] * T[v] + max(0, max_{(v,u) in E} L[u])
+
+over the (K, K) adjacency matrix; ``depth = K`` makes it exact for any
+DAG on K topologically-ordered tiers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Masked-out adjacency entries take this value inside the max-relaxation;
+# any real path latency dominates it, and rows with no children fall back
+# to 0 through the outer maximum.
+_NEG = -1e30
+
+
+def _sizing_kernel(lam_ref, mu_ref, repl_ref, w_ref, adj_ref,
+                   soj_ref, path_ref, *, c_max: int, depth: int,
+                   sat_s: float):
+    lam = lam_ref[...].astype(jnp.float32)        # (block_b, Kp)
+    mu = mu_ref[...].astype(jnp.float32)
+    c = repl_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    adj = adj_ref[...] != 0                        # (Kp, Kp)
+
+    a = lam / mu                                   # offered load (Erlangs)
+
+    def erlang_step(k, carry):
+        b, b_at_c = carry
+        kf = k.astype(jnp.float32)
+        b = a * b / (kf + a * b)
+        b_at_c = jnp.where(kf == c, b, b_at_c)
+        return b, b_at_c
+
+    _, b_c = jax.lax.fori_loop(
+        1, c_max + 1, erlang_step,
+        (jnp.ones_like(a), jnp.zeros_like(a)))
+    rho = a / jnp.maximum(c, 1.0)
+    p_wait = b_c / jnp.maximum(1.0 - rho * (1.0 - b_c), 1e-12)
+    slack = c * mu - lam                           # spare service capacity
+    t = jnp.where(slack > 1e-9,
+                  p_wait / jnp.maximum(slack, 1e-12) + 1.0 / mu,
+                  sat_s)
+    soj_ref[...] = t
+
+    node = w * t                                   # visit-weighted cost
+
+    def relax(_, latency):
+        # child[b, v] = max_u adj[v, u] ? latency[b, u]
+        masked = jnp.where(adj[None, :, :], latency[:, None, :], _NEG)
+        child = jnp.max(masked, axis=2)
+        return node + jnp.maximum(child, 0.0)
+
+    path_ref[...] = jax.lax.fori_loop(0, depth, relax, node)
+
+
+def sizing_latency(lam, mu, repl, visit_w, adj, *, c_max: int,
+                   sat_s: float = 1e4, block_b: int = 32,
+                   interpret: bool | None = None):
+    """lam/mu/repl/visit_w (B, K) fp32, adj (K, K) bool -> (sojourn (B, K),
+    path (B, K)), both fp32.
+
+    ``lam`` is the tier arrival rate, ``mu`` the per-replica service rate
+    (must be > 0), ``repl`` the integer replica count as float (1 <= repl
+    <= c_max), ``visit_w`` the per-row node weights (a request class's
+    visit ratios), ``adj[v, u]`` True when tier v calls tier u (tiers
+    topologically ordered).  ``path[:, v]`` is the weighted critical path
+    of the sub-DAG rooted at v — end-to-end latency when v is the entry
+    tier.  Rows are padded to ``block_b`` multiples and K to the 128-lane
+    width; padding is load-free (lam 0, mu 1, repl 1, weights 0, no
+    edges) so it never influences real cells.
+    """
+    B, K = lam.shape
+    for name, x in (("mu", mu), ("repl", repl), ("visit_w", visit_w)):
+        if x.shape != (B, K):
+            raise ValueError(f"{name} shape {x.shape} != {(B, K)}")
+    if adj.shape != (K, K):
+        raise ValueError(f"adj shape {adj.shape} != {(K, K)}")
+    if c_max < 1:
+        raise ValueError("c_max must be >= 1")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    bb = min(block_b, max(B, 8))
+    Bp = -(-B // bb) * bb
+    Kp = -(-K // 128) * 128
+
+    def pad(x, fill):
+        out = jnp.full((Bp, Kp), fill, jnp.float32)
+        return out.at[:B, :K].set(x.astype(jnp.float32))
+
+    adj_p = jnp.zeros((Kp, Kp), jnp.int32).at[:K, :K].set(
+        adj.astype(jnp.int32))
+
+    kernel = lambda *refs: _sizing_kernel(
+        *refs, c_max=int(c_max), depth=int(K), sat_s=float(sat_s))
+    soj, path = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),   # lam
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),   # mu
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),   # repl
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),   # visit_w
+            pl.BlockSpec((Kp, Kp), lambda i: (0, 0)),   # adj (shared)
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, Kp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pad(lam, 0.0), pad(mu, 1.0), pad(repl, 1.0), pad(visit_w, 0.0),
+      adj_p)
+    return soj[:B, :K], path[:B, :K]

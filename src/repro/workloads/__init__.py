@@ -1,3 +1,13 @@
+from .microservice import (
+    DEFAULT_SIZES,
+    ContainerSize,
+    DriftingMix,
+    MicroserviceDAG,
+    RequestClass,
+    ServiceTier,
+    as_mix_schedule,
+    mmc_sojourn,
+)
 from .simulator import (
     Arrival,
     JobStream,
@@ -9,4 +19,7 @@ from .simulator import (
 )
 
 __all__ = ["Arrival", "JobStream", "MultiTenantStream", "PoissonArrivals",
-           "QueueSimulator", "TenantWorkload", "blended_stream"]
+           "QueueSimulator", "TenantWorkload", "blended_stream",
+           "DEFAULT_SIZES", "ContainerSize", "DriftingMix",
+           "MicroserviceDAG", "RequestClass", "ServiceTier",
+           "as_mix_schedule", "mmc_sojourn"]

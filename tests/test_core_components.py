@@ -111,6 +111,53 @@ def test_objective_migration_accounting():
     assert np.isclose(y, (5 + 3) + 2.0 * (1 + 0.5))
 
 
+def test_blended_controller_slo_sees_migration_inclusive_time():
+    """Regression (ISSUE 4 review): the blended evaluation path folds the
+    reconfiguration into every type's measurement (weights sum to one, so
+    Y bills it once) — and the SLO hinge therefore tests the
+    migration-inclusive time, same as the non-blended path."""
+    from repro.core import (
+        EC2_CATALOG_ADJUSTED, ProcurementController, make_ec2_space)
+    from repro.core.costmodel import SimulatedEvaluator
+    from repro.core.state import cluster_config_from
+
+    catalog = EC2_CATALOG_ADJUSTED
+    space = make_ec2_space(catalog, core_counts=(8, 16))
+    ev = SimulatedEvaluator(catalog)
+    blend = {"wordcount": 1.0, "kmeans": 1.0}
+    obj = Objective(lambda_cost=0.0, include_migration=True,
+                    slo_s=1.0, slo_penalty=7.0)
+    ctrl = ProcurementController(
+        space=space, catalog=catalog, evaluator=ev, objective=obj,
+        blend=blend, evaluate_blend=True, seed=0)
+    decoded = space.decode((0, 0))
+    y = ctrl._evaluate(decoded, 0)      # first config: migration fires
+
+    cfg = cluster_config_from(decoded)
+    mig_s, mig_usd = ev.migration(None, cfg, catalog)
+    assert mig_s > 0
+    expect = 0.0
+    for name in blend:                  # equal weights, normalized to 1/2
+        t = ev.measure(cfg, name, 0).exec_time_s + mig_s
+        expect += 0.5 * (t + 7.0 * max(0.0, t - 1.0))
+    assert np.isclose(y, expect)
+
+
+def test_objective_slo_tests_migration_inclusive_time():
+    """Regression (ISSUE 4): with include_migration=True the deadline must
+    test the same t that enters Y — a reconfiguration that blows the SLO
+    is a violation even when the bare execution time meets it."""
+    obj = Objective(lambda_cost=0.0, slo_s=10.0, slo_penalty=5.0,
+                    include_migration=True)
+    # 8s execution + 4s migration = 12s > 10s deadline -> 2s violation
+    y = obj(Measurement(8.0, 0.0, migration_s=4.0))
+    assert np.isclose(y, 12.0 + 5.0 * 2.0)
+    # without migration folding, the same measurement meets the deadline
+    y_bare = Objective(lambda_cost=0.0, slo_s=10.0, slo_penalty=5.0)(
+        Measurement(8.0, 0.0, migration_s=4.0))
+    assert np.isclose(y_bare, 8.0)
+
+
 @given(w=st.lists(st.floats(0.1, 10), min_size=2, max_size=5))
 def test_blend_weights_normalized(w):
     blend = blend_from_weights({f"j{i}": wi for i, wi in enumerate(w)})

@@ -336,6 +336,62 @@ def test_preemption_targets_offenders_not_innocents():
             or fc.allocations()[name]["config"].n_workers <= 8
 
 
+def test_spot_revocation_mid_run_preempts_only_offenders():
+    """ISSUE 4 satellite / ROADMAP follow-on: shrinking
+    ``ServiceCatalog.capacity`` mid-run (spot revocation) must drive the
+    preemption path on the NEXT round — and only tenants with a nonzero
+    marginal contribution to the breach may be preempted; tenants in the
+    untouched family keep their allocations."""
+    cat = ServiceCatalog(
+        {f: EC2_CATALOG[f] for f in ("general", "compute")},
+        capacities={"compute": 200.0, "general": 1000.0})
+    space = make_ec2_space(cat, core_counts=(4, 8, 16, 32))
+    on_compute = space.encode({"instance_type": "compute", "n_workers": 32})
+    on_general = space.encode({"instance_type": "general", "n_workers": 8})
+    tenants = [
+        TenantSpec("c-hi", {"wordcount": 1.0}, priority=5.0,
+                   init=on_compute),
+        TenantSpec("c-lo", {"wordcount": 1.0}, priority=0.5,
+                   init=on_compute),
+        TenantSpec("innocent", {"wordcount": 1.0}, priority=1.0,
+                   init=on_general),
+    ]
+    fc = FleetController(space, cat, SimulatedEvaluator(cat), tenants,
+                         objective=PenalizedObjective(
+                             Objective(lambda_cost=200.0), weight=25.0),
+                         steps_per_round=4, detectors=False, seed=5)
+    # the explicit inits are live and feasible (64/200 compute cores);
+    # the revocation fires BEFORE the next control round, so the
+    # offenders are exactly the pinned compute tenants
+    assert fc.aggregate_usage()["violation"] == 0.0
+    cat.set_capacity("compute", 20.0)
+    assert cat.remaining("compute") < 0      # ledger now over the new cap
+    ds = fc.round()
+    by = {d.tenant: d for d in ds}
+    # the untouched family's tenant contributes nothing to the breach
+    # and must not be churned by the repair pass
+    assert by["innocent"].action != "preempt"
+    assert by["innocent"].violation == 0.0
+    # at least one compute offender was forcibly moved, and the round
+    # ends back inside the shrunken capacity
+    assert any(by[n].action == "preempt" for n in ("c-hi", "c-lo"))
+    assert fc.violation_history[-1] == 0.0
+    assert fc.aggregate_usage()["cores"]["compute"] <= 20.0 + 1e-9
+    # the low-priority offender is displaced before the high-priority one
+    if by["c-hi"].action == "preempt":
+        assert by["c-lo"].action == "preempt"
+
+
+def test_set_capacity_validates():
+    cat = _catalog(cap=50.0)
+    with pytest.raises(ValueError):
+        cat.set_capacity("general", -1.0)
+    with pytest.raises(KeyError):
+        cat.set_capacity("nope", 10.0)
+    cat.set_capacity("general", 10.0)
+    assert cat.capacity("general") == 10.0
+
+
 def test_fleet_preserves_foreign_reservations():
     """An operator's manual hold on the shared catalog must survive the
     controller's per-round ledger mirroring (and constrain remaining())."""

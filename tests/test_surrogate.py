@@ -214,6 +214,53 @@ def test_surrogate_annealer_converges_within_tolerance():
         r.true_measures for r in sa.rounds)
 
 
+def test_surrogate_annealer_ei_converges_on_960_state_validation_space():
+    """ISSUE 4 satellite: the expected-improvement acquisition converges
+    on the 960-state EC2 blended validation space (the surrogate_scale
+    bench's non-smoke problem) within the same gap/budget envelope as
+    LCB — 5% of the exhaustive optimum at <= 10% of the evaluations."""
+    from repro.core import Objective, cluster_config_from, make_ec2_space
+
+    catalog = EC2_CATALOG_ADJUSTED
+    space = make_ec2_space(catalog, core_counts=tuple(range(4, 244, 1)))
+    assert space.size() == 960
+    ev = SimulatedEvaluator(catalog)
+    obj = Objective(lambda_cost=200.0)
+    blend = {"wordcount": 0.5, "kmeans": 0.3, "pagerank": 0.2}
+
+    def fn(decoded):
+        cfg = cluster_config_from(decoded)
+        return float(sum(w * obj(ev.measure(cfg, name, 0))
+                         for name, w in blend.items()))
+
+    y_star = float(tabulate(space, fn).min())
+    sa = SurrogateAnnealer(space, fn, acquisition="ei", half_width=6,
+                           n_chains=16, steps_per_round=48,
+                           measures_per_round=6, n_bootstrap=8, seed=0)
+    sa.run(14)
+    _, y_best = sa.best()
+    assert sa.true_measures <= 0.10 * space.size()
+    assert (y_best - y_star) / abs(y_star) <= 0.05
+
+
+def test_surrogate_annealer_rejects_unknown_acquisition():
+    with pytest.raises(ValueError, match="acquisition"):
+        SurrogateAnnealer(_smooth_space(20), _smooth_fn,
+                          acquisition="ucb")
+
+
+def test_expected_improvement_prefers_low_mean_and_high_uncertainty():
+    from repro.core import expected_improvement
+
+    ei = expected_improvement(
+        np.asarray([5.0, 1.0, 5.0, 9.0]),
+        np.asarray([0.0, 0.0, 2.0, 2.0]), y_best=4.0)
+    assert ei[0] == pytest.approx(0.0, abs=1e-9)   # known, no improvement
+    assert ei[1] == pytest.approx(3.0, rel=1e-6)   # known 3.0 improvement
+    assert ei[2] > ei[0]                           # uncertainty earns credit
+    assert ei[2] > ei[3]                           # but a bad mean costs
+
+
 def test_surrogate_annealer_deterministic_under_fixed_seed():
     space = _smooth_space(60)
     runs = []
