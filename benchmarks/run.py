@@ -10,8 +10,8 @@ import argparse
 import sys
 
 from . import blended_workloads, container_sizing, dnn_annealing, \
-    fleet_arbitration, kernel_bench, paper_figures, roofline_table, \
-    surrogate_scale
+    fleet_arbitration, kernel_bench, paper_figures, pipeline_overlap, \
+    roofline_table, surrogate_scale
 from .common import write_json
 
 SUITES = {
@@ -23,6 +23,7 @@ SUITES = {
     "kernel_bench": kernel_bench.run_all,
     "surrogate_scale": surrogate_scale.run_all,
     "container_sizing": container_sizing.run_all,
+    "pipeline_overlap": pipeline_overlap.run_all,
 }
 
 

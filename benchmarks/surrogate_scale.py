@@ -126,6 +126,101 @@ def _run_annealer(sa: SurrogateAnnealer, n_rounds: int) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Drift: the MeasurementStore half_life exercised end to end.
+# ---------------------------------------------------------------------------
+
+
+def drift_problem(smoke: bool):
+    """A tabulable EC2 space whose workload blend flips mid-run: the
+    pre-drift optimum (a small cheap cluster for a wordcount-heavy blend)
+    becomes badly suboptimal once the blend turns kmeans-heavy.  Returns
+    (space, fn, set_phase, tables) — ``fn`` reads the mutable phase, and
+    ``tables`` holds the exhaustive ground truth for both phases."""
+    cores = tuple(range(4, 244, 4 if smoke else 2))
+    catalog = EC2_CATALOG_ADJUSTED
+    space = make_ec2_space(catalog, core_counts=cores)
+    ev = SimulatedEvaluator(catalog)
+    obj = Objective(lambda_cost=LAMBDA)
+    blends = ({"wordcount": 0.8, "kmeans": 0.1, "pagerank": 0.1},
+              {"wordcount": 0.1, "kmeans": 0.7, "pagerank": 0.2})
+    phase = [0]
+
+    def fn(decoded):
+        cfg = cluster_config_from(decoded)
+        return float(sum(w * obj(ev.measure(cfg, name, 0))
+                         for name, w in blends[phase[0]].items()))
+
+    def set_phase(p: int) -> None:
+        phase[0] = p
+
+    tables = []
+    for p in range(2):
+        set_phase(p)
+        tables.append(tabulate(space, fn))
+    set_phase(0)
+    return space, fn, set_phase, tables
+
+
+def drift_recovery(b: Bench, smoke: bool) -> dict:
+    """The PR 3 follow-on: MeasurementStore drift (``half_life``) end to
+    end.  The objective flips at a known round; the loop must (1) notice
+    that the incumbent's low pre-drift reading has gone stale and
+    re-measure it (``stale_refreshes``), and (2) re-converge to the
+    post-drift optimum — using only recency-decayed measurements, no
+    explicit drift signal."""
+    from repro.core import MeasurementStore
+
+    space, fn, set_phase, (table0, table1) = drift_problem(smoke)
+    half_life = 4.0
+    # acquisition="ei": an exactly-measured incumbent has zero expected
+    # improvement, so acquisition alone NEVER re-measures it — after the
+    # drift its low pre-flip reading would pin the loop forever.  What
+    # saves it is precisely the store's half_life staleness rule (the
+    # branch this bench exists to exercise): the incumbent's reading ages
+    # past one half-life, gets force-refreshed, and the fresh (bad)
+    # measurement lets best() move on.
+    sa = SurrogateAnnealer(
+        space, fn,
+        store=MeasurementStore(len(space.dimensions), half_life=half_life),
+        half_width=6, n_chains=16, steps_per_round=48,
+        measures_per_round=8, n_bootstrap=16, seed=0, acquisition="ei")
+    pre_rounds = 8 if smoke else 12
+    post_rounds = 16 if smoke else 24
+    traj = _run_annealer(sa, pre_rounds)
+    y0_star = float(table0.min())
+    _, y_pre = sa.best()
+    gap_pre = (y_pre - y0_star) / abs(y0_star)
+
+    set_phase(1)                      # the landscape drifts NOW
+    refreshes_before = sa.stale_refreshes
+    traj += _run_annealer(sa, post_rounds)
+    refreshes = sa.stale_refreshes - refreshes_before
+    y1_star = float(table1.min())
+    _, y_post = sa.best()
+    gap_post = (y_post - y1_star) / abs(y1_star)
+
+    result = {
+        "half_life": half_life,
+        "pre_rounds": pre_rounds, "post_rounds": post_rounds,
+        "phase0_optimum": y0_star, "phase0_best": y_pre,
+        "phase0_gap_pct": 100.0 * gap_pre,
+        "phase1_optimum": y1_star, "phase1_best": y_post,
+        "phase1_gap_pct": 100.0 * gap_post,
+        "stale_incumbent_refreshes": refreshes,
+        "true_measures": sa.true_measures,
+        "trajectory": traj,
+    }
+    b.check(f"drift: pre-drift convergence within 10% of the phase-0 "
+            f"optimum (gap {100 * gap_pre:.2f}%)", gap_pre <= 0.10)
+    b.check(f"drift: stale incumbents were re-measured after the flip "
+            f"({refreshes} half_life-driven refreshes)", refreshes >= 1)
+    b.check(f"drift: re-converged within 10% of the post-drift optimum "
+            f"(gap {100 * gap_post:.2f}%) without any explicit drift "
+            f"signal", gap_post <= 0.10)
+    return result
+
+
+# ---------------------------------------------------------------------------
 # The bench.
 # ---------------------------------------------------------------------------
 
@@ -209,6 +304,9 @@ def surrogate_scale(smoke: bool = False) -> dict:
             f"the space)",
             improvement > 0.0 and sa_big.true_measures < 1000)
 
+    # -- drift: half_life staleness end to end (PR 3 follow-on) --
+    result["drift"] = drift_recovery(b, smoke)
+
     write_json("surrogate_scale.json", result)
     with open(TOP_LEVEL_ARTIFACT, "w") as f:
         json.dump({
@@ -218,6 +316,10 @@ def surrogate_scale(smoke: bool = False) -> dict:
             "scale_trajectory": big_traj,
             "validation_gap_pct": result["validation"]["gap_pct"],
             "scale_states": big.size(),
+            "drift_trajectory": result["drift"]["trajectory"],
+            "drift_gap_pct": result["drift"]["phase1_gap_pct"],
+            "drift_stale_refreshes":
+                result["drift"]["stale_incumbent_refreshes"],
         }, f, indent=2)
     print(f"perf trajectory -> {TOP_LEVEL_ARTIFACT}")
     return b.finish()

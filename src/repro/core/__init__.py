@@ -3,6 +3,7 @@
 # to this package.
 from .annealing import (
     Annealer,
+    ChainSnapshot,
     Step,
     acceptance_probability,
     anneal_chain,
@@ -15,6 +16,17 @@ from .annealing import (
     random_valid_states,
 )
 from .change_detect import BatchedPageHinkley, PageHinkley, WindowedZScore
+from .evalpipe import (
+    EvalDispatcher,
+    EvalRequest,
+    EvalResult,
+    PipelineStats,
+    ResolvedStep,
+    SpeculativePipeline,
+    StorePredictor,
+    map_pool,
+    measure_requests,
+)
 from .fleet import FleetController, FleetDecision, TenantSpec
 from .costmodel import (
     Evaluator,
@@ -107,11 +119,15 @@ from .surrogate import (
 from .tabu import TabuMemory
 
 __all__ = [
-    "Annealer", "Step", "acceptance_probability", "anneal_chain",
+    "Annealer", "ChainSnapshot", "Step", "acceptance_probability",
+    "anneal_chain",
     "anneal_chain_dynamic", "anneal_chain_nd", "anneal_fleet",
     "first_hit_time", "jobs_to_min_vs_tau", "jobs_to_min_vs_tau_fleet",
     "random_valid_states",
     "BatchedPageHinkley", "PageHinkley", "WindowedZScore",
+    "EvalDispatcher", "EvalRequest", "EvalResult", "PipelineStats",
+    "ResolvedStep", "SpeculativePipeline", "StorePredictor",
+    "map_pool", "measure_requests",
     "FleetController", "FleetDecision", "TenantSpec",
     "Evaluator", "MeasuredEvaluator", "RooflineEvaluator",
     "SimulatedEvaluator", "StepCosts", "objective_of",

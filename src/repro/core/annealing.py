@@ -26,6 +26,7 @@ i.e. always accepted when the objective does not increase.  Two engines:
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
 import math
@@ -60,6 +61,22 @@ class Step:
     y_current: float          # Y of the incumbent *after* the step
     tau: float
     state: tuple[int, ...]    # incumbent after the step
+
+
+@dataclasses.dataclass
+class ChainSnapshot:
+    """Replayable checkpoint of an online :class:`Annealer` at a transition
+    index: the incumbent, its stored (possibly unmeasured) objective, and
+    the full bit-generator state.  Restoring one rewinds the *walk* — the
+    speculative evaluation pipeline (:mod:`repro.core.evalpipe`) runs the
+    chain ahead of landed measurements and rolls back to the last resolved
+    transition on a misprediction, which is what keeps a pipelined run's
+    realized RNG stream identical to the serial loop's."""
+
+    n: int
+    state: tuple[int, ...]
+    y: float | None
+    rng_state: dict[str, Any]
 
 
 class Annealer:
@@ -122,28 +139,67 @@ class Annealer:
         self.schedule.reheat(self.n)
         self.y = None
 
-    def step(self, job: int | None = None) -> Step:
-        """Process one arriving job: propose, evaluate, accept/reject."""
-        n = self.n if job is None else job
-        tau = self.schedule(n)
+    # -- snapshot / replay (speculative pipelining support) --
+    def snapshot(self) -> ChainSnapshot:
+        """Checkpoint the walk at the current transition index.  History and
+        past measurements are not part of the snapshot — they record what
+        really ran and survive a :meth:`restore`."""
+        return ChainSnapshot(
+            n=self.n, state=tuple(self.state), y=self.y,
+            rng_state=copy.deepcopy(self.rng.bit_generator.state))
 
-        if self.y is None:  # first job, or incumbent invalidated (reheat):
-            # this job runs under the incumbent to refresh its objective
-            self.y = float(self.evaluate(self.space.decode(self.state), n))
-            self.evaluations.append((self.state, self.y))
+    def restore(self, snap: ChainSnapshot) -> None:
+        """Rewind the walk (incumbent, stored objective, RNG) to ``snap``.
+        ``history`` and ``evaluations`` are left intact: measurements taken
+        past the snapshot were real evaluator runs and stay counted."""
+        self.state = tuple(snap.state)
+        self.y = snap.y
+        self.n = snap.n
+        self.rng.bit_generator.state = copy.deepcopy(snap.rng_state)
 
-        proposal = self.nbhd.propose(self.state, self.rng)
+    def draw_transition(
+        self,
+        propose_hook: Callable[[tuple[int, ...]], Any] | None = None,
+        state: Sequence[int] | None = None,
+    ) -> tuple[tuple[int, ...], float, Any]:
+        """Draw the next (proposal, acceptance uniform) pair in exactly the
+        RNG order of :meth:`step`.  ``propose_hook`` runs between the
+        proposal draw and the uniform draw — the slot where :meth:`step`'s
+        evaluation sits, so a caller whose evaluation consumes this RNG
+        (e.g. the procurement controller's blend-draw) keeps a pipelined
+        run's stream identical to the serial loop's.  ``state`` overrides
+        the incumbent the proposal is drawn around (the speculative
+        pipeline proposes from its lookahead frontier, not the committed
+        incumbent).  Returns ``(proposal, u, hook_result)``."""
+        x = tuple(self.state if state is None else state)
+        proposal = self.nbhd.propose(x, self.rng)
         if self.tabu is not None:
             proposal = self.tabu.filter(
-                self.state, proposal,
-                lambda: self.nbhd.propose(self.state, self.rng),
+                x, proposal,
+                lambda: self.nbhd.propose(x, self.rng),
             )
-        y_new = float(self.evaluate(self.space.decode(proposal), n))
-        self.evaluations.append((proposal, y_new))
+        hooked = propose_hook(proposal) if propose_hook is not None else None
+        u = float(self.rng.random())
+        return proposal, u, hooked
 
+    def record_evaluation(self, state: Sequence[int], y: float) -> None:
+        """Count one real measurement.  The speculative pipeline records
+        every landed measurement through here exactly once — resolved
+        transitions AND mis-speculated (discarded) proposals, which were
+        still real evaluator runs and still inform :meth:`best`."""
+        self.evaluations.append((tuple(int(i) for i in state), float(y)))
+
+    def apply_transition(
+        self, proposal: tuple[int, ...], u: float, y_new: float,
+        *, n: int, tau: float,
+    ) -> Step:
+        """Commit one transition given a landed measurement ``y_new`` and
+        the acceptance uniform ``u`` drawn by :meth:`draw_transition`.
+        Shared by the inline :meth:`step` and the speculative pipeline, so
+        both resolve acceptance with identical semantics."""
         dy = y_new - self.y
         p = acceptance_probability(dy, tau)
-        accepted = bool(self.rng.random() < p)
+        accepted = bool(u < p)
         explored = accepted and dy > 0
 
         if accepted:
@@ -158,6 +214,21 @@ class Annealer:
         self.history.append(rec)
         self.n += 1
         return rec
+
+    def step(self, job: int | None = None) -> Step:
+        """Process one arriving job: propose, evaluate, accept/reject."""
+        n = self.n if job is None else job
+        tau = self.schedule(n)
+
+        if self.y is None:  # first job, or incumbent invalidated (reheat):
+            # this job runs under the incumbent to refresh its objective
+            self.y = float(self.evaluate(self.space.decode(self.state), n))
+            self.record_evaluation(self.state, self.y)
+
+        proposal, u, y_new = self.draw_transition(
+            lambda z: float(self.evaluate(self.space.decode(z), n)))
+        self.record_evaluation(proposal, y_new)
+        return self.apply_transition(proposal, u, y_new, n=n, tau=tau)
 
     def run(self, n_jobs: int) -> list[Step]:
         return [self.step() for _ in range(n_jobs)]

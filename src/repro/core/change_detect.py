@@ -100,6 +100,29 @@ class BatchedPageHinkley:
         for arr in (self._mean, self._m2, self._up, self._down):
             arr[mask] = 0.0
 
+    def add_streams(self, k: int = 1) -> None:
+        """Grow by ``k`` fresh streams (tenant arrivals): new streams start
+        with empty statistics, existing streams keep theirs."""
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        self.n_streams += k
+        self._n = np.concatenate([self._n, np.zeros(k, np.int64)])
+        for name in ("_mean", "_m2", "_up", "_down"):
+            setattr(self, name,
+                    np.concatenate([getattr(self, name), np.zeros(k)]))
+
+    def remove_stream(self, i: int) -> None:
+        """Drop stream ``i`` (tenant departure); the others keep their
+        statistics and indices shift down past ``i``."""
+        if not (0 <= i < self.n_streams):
+            raise IndexError(f"stream {i} out of range [0, {self.n_streams})")
+        if self.n_streams == 1:
+            raise ValueError("cannot remove the last stream")
+        self.n_streams -= 1
+        self._n = np.delete(self._n, i)
+        for name in ("_mean", "_m2", "_up", "_down"):
+            setattr(self, name, np.delete(getattr(self, name), i))
+
     def update(self, ys: np.ndarray) -> np.ndarray:
         """Feed one observation per stream; returns (B,) bool fired flags
         (fired streams reset, exactly like the scalar detector)."""

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -43,10 +43,34 @@ from .state import ClusterConfig
 class Evaluator:
     """Maps (config, job_name, job_index) -> Measurement."""
 
+    #: True for evaluators whose :meth:`measure` spends *wall-clock* time
+    #: (really executes jobs).  The evaluation runtime
+    #: (:mod:`repro.core.evalpipe`) overlaps these with a bounded worker
+    #: pool; simulated/tabulated evaluators instead get ONE vectorized
+    #: :meth:`measure_many` call.  Wall-clock evaluators must therefore
+    #: tolerate concurrent :meth:`measure` calls.
+    wall_clock: bool = False
+
     def measure(
         self, config: ClusterConfig, job: str, n: int
     ) -> Measurement:
         raise NotImplementedError
+
+    def measure_many(
+        self,
+        requests: "Sequence[tuple[Mapping[str, Any], str, int]]",
+    ) -> "list[Measurement]":
+        """Measure a batch of ``(decoded_config, job, n)`` requests.
+
+        The asynchronous seam of the evaluation runtime: the default is a
+        synchronous loop over :meth:`measure_decoded` (exactly the
+        historical per-item behavior, in request order), so every evaluator
+        supports batching; vectorizable evaluators may override with one
+        batched call.  Wall-clock evaluators normally never see this —
+        :class:`repro.core.evalpipe.EvalDispatcher` fans their requests out
+        over a thread pool instead.
+        """
+        return [self.measure_decoded(d, job, n) for d, job, n in requests]
 
     def measure_decoded(
         self, decoded: Mapping[str, Any], job: str, n: int,
@@ -112,7 +136,14 @@ class MeasuredEvaluator(Evaluator):
 
     ``runner(config, job, n) -> None`` must execute the job synchronously
     (e.g. call a jitted train_step ``k`` times and block on the result).
+
+    ``wall_clock`` marks it for the evaluation runtime's worker pool: when
+    the speculative pipeline dispatches several measurements concurrently,
+    ``runner`` may be called from multiple threads — runners that cannot
+    tolerate that should be driven with ``eval_workers=1``.
     """
+
+    wall_clock = True
 
     catalog: ServiceCatalog
     runner: Callable[[ClusterConfig, str, int], Any]

@@ -142,6 +142,7 @@ class FleetController(ControllerMixin):
         seed: int = 0,
         objective_source: ObjectiveSource | None = None,
         config_fn: "Callable[[Mapping[str, Any]], ClusterConfig] | None" = None,
+        eval_workers: int | None = None,
     ):
         if not tenants:
             raise ValueError("at least one tenant required")
@@ -161,6 +162,10 @@ class FleetController(ControllerMixin):
         self.objective = objective
         self.budget_usd_hr = float(budget_usd_hr)
         self.steps_per_round = int(steps_per_round)
+        # measurement-phase concurrency (None: pool for wall-clock
+        # evaluators, one batched measure_many call otherwise — see
+        # repro.core.evalpipe.measure_requests)
+        self.eval_workers = eval_workers
         self.objective_source = (ExhaustiveSource()
                                  if objective_source is None
                                  else objective_source)
@@ -226,12 +231,10 @@ class FleetController(ControllerMixin):
             self._table_for(self._stream.blend_of(t.name))
             for t in tenants
         ]
+        self._tau = float(tau)
+        self._tau_hot = (8.0 * tau if tau_hot is None else float(tau_hot))
         self._schedules: list[Schedule] = [
-            AdaptiveReheat(
-                tau_base=tau,
-                tau_hot=8.0 * tau if tau_hot is None else tau_hot,
-                relax=0.9)
-            for _ in tenants
+            self._make_schedule() for _ in tenants
         ]
         self._detector = (BatchedPageHinkley(len(tenants)) if detectors
                           else None)
@@ -262,7 +265,7 @@ class FleetController(ControllerMixin):
 
             def fn(decoded: dict[str, Any]) -> float:
                 cfg = self._config_of(decoded)
-                self._n_direct_measures += len(names)
+                self._count_measures(len(names))
                 return float(sum(
                     w * base(self.evaluator.measure_decoded(
                         decoded, name, 0, cfg))
@@ -511,8 +514,28 @@ class FleetController(ControllerMixin):
         self.violation_history.append(self._violation(final))
         self._mirror_reservations()
 
+        # the round's measurement phase goes through the evaluation
+        # runtime's shared dispatch seam: ONE vectorized measure_many call
+        # for simulated/tabulated evaluators, a bounded worker pool for
+        # wall-clock ones — instead of a serial per-tenant loop
+        decodeds, cfgs, migs = [], [], []
+        for i in range(T):
+            idx = tuple(int(v) for v in
+                        np.unravel_index(int(final[i]), self._shape))
+            decoded = self.space.decode(idx)
+            cfg = self._config_of(decoded)
+            decodeds.append(decoded)
+            cfgs.append(cfg)
+            migs.append(self.evaluator.migration(
+                self._prev_cfgs[i], cfg, self.catalog))
+        measured = self._measure_batch(
+            [(decodeds[i], jobs[t.name], r, cfgs[i])
+             for i, t in enumerate(self.tenants)],
+            eval_workers=self.eval_workers)
+
         decisions = []
         final_v = self._violation(final)
+        counts = self.evaluation_counts()
         for i, t in enumerate(self.tenants):
             s = int(final[i])
             # the tenant's marginal contribution (unweighted cores + $/hr)
@@ -520,18 +543,12 @@ class FleetController(ControllerMixin):
             # the round ends feasible
             viol_i = max(0.0, final_v
                          - self._overshoot(*self._others_usage(i, final)))
-            idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
-            decoded = self.space.decode(idx)
-            cfg = self._config_of(decoded)
-            mig_s, mig_usd = self.evaluator.migration(
-                self._prev_cfgs[i], cfg, self.catalog)
+            cfg = cfgs[i]
+            mig_s, mig_usd = migs[i]
             m = dataclasses.replace(
-                self.evaluator.measure_decoded(decoded, jobs[t.name], r, cfg),
-                migration_s=mig_s, migration_usd=mig_usd)
-            self._n_direct_measures += 1
+                measured[i], migration_s=mig_s, migration_usd=mig_usd)
             self._prev_cfgs[i] = cfg
             pen_y = float(pen_tables[i, s])
-            counts = self.evaluation_counts()
             d = FleetDecision(
                 n=r, job=jobs[t.name], config=cfg, measurement=m,
                 y=pen_y, accepted=bool(s != prev[i]),
@@ -552,6 +569,68 @@ class FleetController(ControllerMixin):
         for _ in range(n_rounds):
             out.extend(self.round())
         return out
+
+    # ------------------------------------------------------------------
+    # tenant churn (arrival / departure between rounds)
+    # ------------------------------------------------------------------
+
+    def _make_schedule(self) -> Schedule:
+        return AdaptiveReheat(
+            tau_base=self._tau, tau_hot=self._tau_hot, relax=0.9)
+
+    def add_tenant(self, spec: TenantSpec) -> None:
+        """Admit a new tenant between rounds.
+
+        The tenant starts at its ``init`` (or the global cheapest valid
+        state), gets a fresh schedule/detector stream, and its blended
+        objective table is built (cached per blend, so a returning blend
+        costs a dict lookup).  ``spec.change_at`` counts *global* control
+        rounds, same as founding tenants.  The reservation mirror is
+        refreshed immediately, so the newcomer's footprint is visible to
+        ``catalog.remaining`` before the next round."""
+        if any(t.name == spec.name for t in self.tenants):
+            raise ValueError(f"duplicate tenant name: {spec.name!r}")
+        if spec.init is not None and not self.space.contains(spec.init):
+            raise ValueError(
+                f"tenant {spec.name!r}: init {spec.init} not valid")
+        self._stream.add_tenant(TenantWorkload(
+            spec.name, spec.blend, spec.blend_after, spec.change_at))
+        self.tenants = self.tenants + (spec,)
+        start = (self._fallback if spec.init is None
+                 else int(np.ravel_multi_index(spec.init, self._shape)))
+        self._incumbents = np.append(self._incumbents, start)
+        self._tenant_tables.append(
+            self._table_for(self._stream.blend_of(spec.name)))
+        self._schedules.append(self._make_schedule())
+        if self._detector is not None:
+            self._detector.add_streams(1)
+        self._reheat_pending.append(False)
+        self._prev_cfgs.append(None)
+        self._tables_jnp = None
+        self._mirror_reservations()
+
+    def remove_tenant(self, name: str) -> None:
+        """Retire tenant ``name`` between rounds, releasing its share of
+        the reservation ledger — the departing tenant's capacity is
+        claimable by the remaining (or newly added) tenants from the very
+        next round."""
+        idx = [i for i, t in enumerate(self.tenants) if t.name == name]
+        if not idx:
+            raise KeyError(f"unknown tenant {name!r}")
+        if len(self.tenants) == 1:
+            raise ValueError("cannot remove the last tenant")
+        i = idx[0]
+        self._stream.remove_tenant(name)
+        self.tenants = self.tenants[:i] + self.tenants[i + 1:]
+        self._incumbents = np.delete(self._incumbents, i)
+        del self._tenant_tables[i]
+        del self._schedules[i]
+        if self._detector is not None:
+            self._detector.remove_stream(i)
+        del self._reheat_pending[i]
+        del self._prev_cfgs[i]
+        self._tables_jnp = None
+        self._mirror_reservations()
 
     # ------------------------------------------------------------------
     # accounting / diagnostics

@@ -13,6 +13,7 @@ detector, and the tabu memory, and exposes a decision log for audit.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -20,13 +21,20 @@ import numpy as np
 from .annealing import Annealer, Step, anneal_fleet
 from .change_detect import PageHinkley
 from .costmodel import Evaluator
+from .evalpipe import (
+    EvalDispatcher,
+    EvalRequest,
+    EvalResult,
+    SpeculativePipeline,
+    measure_requests,
+)
 from .landscape import tabulate
 from .neighborhood import Neighborhood, StepNeighborhood
 from .objective import Measurement, Objective
 from .pricing import ServiceCatalog
 from .schedules import AdaptiveReheat, Schedule
 from .state import ClusterConfig, ConfigSpace, cluster_config_from
-from .surrogate import ObjectiveSource
+from .surrogate import MeasurementStore, ObjectiveSource
 from .tabu import TabuMemory
 
 
@@ -56,13 +64,18 @@ class Decision:
 
 
 class ControllerMixin:
-    """Decision-log, blend and detector/reheat plumbing shared by the two
-    controllers (single-tenant :class:`ProcurementController` here,
-    multi-tenant :class:`repro.core.fleet.FleetController`).
+    """Decision-log, measurement-dispatch and detector/reheat plumbing
+    shared by every controller policy (single-tenant
+    :class:`ProcurementController` here, multi-tenant
+    :class:`repro.core.fleet.FleetController`, container
+    :class:`repro.core.sizing.SizingController`).
 
-    Both controllers log :class:`Decision`-compatible records into
+    All controllers log :class:`Decision`-compatible records into
     ``self.decisions``, so audit tooling (``spend()``, CSV export of
-    decision fields) works unchanged across them.
+    decision fields) works unchanged across them — and all route their
+    real measurements through the evaluation runtime
+    (:mod:`repro.core.evalpipe`), so counting is exactly-once even when
+    measurements run concurrently on worker threads.
     """
 
     decisions: list[Decision]
@@ -70,6 +83,28 @@ class ControllerMixin:
     def _init_decision_log(self) -> None:
         self.decisions = []
         self._n_direct_measures = 0
+        self._count_lock = threading.Lock()
+
+    def _count_measures(self, k: int = 1) -> None:
+        """Count ``k`` real evaluator runs, thread-safely: the evaluation
+        runtime may land measurements from a worker pool, and a lost
+        update here would silently inflate the claimed savings."""
+        with self._count_lock:
+            self._n_direct_measures += k
+
+    def _measure_batch(
+        self,
+        items: Sequence[tuple],
+        eval_workers: int | None = None,
+    ) -> list[Measurement]:
+        """The shared measurement phase: measure ``(decoded, job, n[,
+        config])`` items through :func:`repro.core.evalpipe.
+        measure_requests` — a bounded worker pool for wall-clock
+        evaluators, ONE vectorized ``measure_many`` call otherwise —
+        and count each exactly once."""
+        out = measure_requests(self.evaluator, items, eval_workers)
+        self._count_measures(len(out))
+        return out
 
     def evaluation_counts(self) -> dict[str, int]:
         """Cumulative (true measures, surrogate queries).
@@ -153,6 +188,16 @@ class ProcurementController(ControllerMixin):
     ``blend`` gives the workload composition: each arriving "job" is a draw
     from the blend (or, in `evaluate_blend=True` mode, every job type is
     evaluated and combined with the alpha weights as in paper sec. 3).
+
+    ``lookahead`` > 1 (or ``use_pipeline=True``) routes submits through the
+    speculative evaluation pipeline (:class:`repro.core.evalpipe.
+    SpeculativePipeline`): the chain speculates ``lookahead`` transitions
+    ahead, their measurements run concurrently (``eval_workers`` threads
+    for wall-clock evaluators), and mis-speculated measurements are
+    recycled into ``recycle_store``.  The realized decision trace is
+    identical to the inline loop under the same seed (see the pipeline
+    docs; tabu memories only guarantee this at ``lookahead=1``).  Call
+    :meth:`close` when done to land in-flight speculation.
     """
 
     space: ConfigSpace
@@ -169,6 +214,10 @@ class ProcurementController(ControllerMixin):
     seed: int = 0
     init: tuple[int, ...] | None = None
     objective_source: "ObjectiveSource | None" = None
+    lookahead: int = 1
+    eval_workers: int | None = None
+    use_pipeline: bool | None = None
+    recycle_store: "MeasurementStore | None" = None
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -180,6 +229,38 @@ class ProcurementController(ControllerMixin):
             self.space, nbhd, self._evaluate, schedule=self.schedule,
             seed=self._rng, tabu=self.tabu, init=self.init,
         )
+        pipelined = (self.use_pipeline if self.use_pipeline is not None
+                     else self.lookahead > 1 or (self.eval_workers or 0) > 1)
+        self._pipeline: SpeculativePipeline | None = None
+        if pipelined:
+            wall = getattr(self.evaluator, "wall_clock", False)
+            workers = self.eval_workers
+            if workers is None:
+                # headroom beyond the lookahead: after a misprediction
+                # flush, already-running stale measurements keep their
+                # workers until they land — the re-speculated head must
+                # still find a free slot or every flush costs two job
+                # latencies instead of one
+                workers = 2 * self.lookahead if wall else 1
+            dispatcher = EvalDispatcher(
+                self._measure_request,
+                mode="pool" if (wall or workers > 1) else "batched",
+                max_workers=max(int(workers), 1))
+            # migration billing is path-dependent (_build_request advances
+            # _prev_cfg along the speculative path); on_resolve/on_flush
+            # keep it in lockstep with the *resolved* walk, so a flush
+            # rewinds it exactly as it rewinds the RNG
+            self._committed_prev_cfg: ClusterConfig | None = None
+            self._pipeline = SpeculativePipeline(
+                self.annealer, self._measure_request, self._build_request,
+                lookahead=self.lookahead, dispatcher=dispatcher,
+                store=self.recycle_store,
+                on_resolve=self._commit_prev_cfg,
+                on_flush=self._rewind_prev_cfg)
+            # expose the pipeline's store (created internally when the
+            # caller did not pass one): recycled speculative measurements
+            # are a real, reusable measurement corpus
+            self.recycle_store = self._pipeline.store
 
     def _blend_weights(self) -> tuple[list[str], np.ndarray]:
         return self.normalize_blend(self.blend)
@@ -201,12 +282,12 @@ class ProcurementController(ControllerMixin):
                 m = dataclasses.replace(
                     self.evaluator.measure(cfg, name, n),
                     migration_s=mig_s, migration_usd=mig_usd)
-                self._n_direct_measures += 1
+                self._count_measures(1)
                 measures.append(m)
                 y += w * self.objective(m)
         else:
             job = names[int(self._rng.choice(len(names), p=weights))]
-            self._n_direct_measures += 1
+            self._count_measures(1)
             m = Measurement(
                 **{**dataclasses.asdict(self.evaluator.measure(cfg, job, n)),
                    "migration_s": mig_s, "migration_usd": mig_usd})
@@ -217,13 +298,81 @@ class ProcurementController(ControllerMixin):
         self._last_measures = measures
         return y
 
+    # -- the pipeline seam: build at speculation time, measure anywhere --
+    def _build_request(
+        self, state: tuple[int, ...], n: int, kind: str
+    ) -> EvalRequest:
+        """Speculation-time request construction (main thread, chain RNG
+        order): the blend draw and migration billing — the two
+        path-dependent pieces of :meth:`_evaluate` — are resolved here, so
+        :meth:`_measure_request` can run on any worker thread."""
+        decoded = self.space.decode(state)
+        cfg = cluster_config_from(decoded)
+        mig_s, mig_usd = self.evaluator.migration(
+            self._prev_cfg, cfg, self.catalog)
+        names, weights = self._blend_weights()
+        if self.evaluate_blend:
+            job = next(iter(self.blend))
+        else:
+            job = names[int(self._rng.choice(len(names), p=weights))]
+        self._prev_cfg = cfg
+        return EvalRequest(
+            state=tuple(int(i) for i in state), decoded=decoded, job=job,
+            n=n, kind=kind,
+            meta={"config": cfg, "mig_s": mig_s, "mig_usd": mig_usd,
+                  "names": tuple(names), "weights": tuple(weights)})
+
+    def _measure_request(self, req: EvalRequest) -> EvalResult:
+        """Measure one speculated request (worker-thread safe: reads only
+        the request; the measurement counter takes the mixin lock)."""
+        cfg = req.meta["config"]
+        mig_s, mig_usd = req.meta["mig_s"], req.meta["mig_usd"]
+        measures: list[Measurement] = []
+        if self.evaluate_blend:
+            y = 0.0
+            for w, name in zip(req.meta["weights"], req.meta["names"]):
+                m = dataclasses.replace(
+                    self.evaluator.measure(cfg, name, req.n),
+                    migration_s=mig_s, migration_usd=mig_usd)
+                measures.append(m)
+                y += w * self.objective(m)
+            self._count_measures(len(measures))
+        else:
+            m = Measurement(
+                **{**dataclasses.asdict(
+                    self.evaluator.measure(cfg, req.job, req.n)),
+                   "migration_s": mig_s, "migration_usd": mig_usd})
+            measures.append(m)
+            self._count_measures(1)
+            y = self.objective(m)
+        return EvalResult(y=float(y), measurement=measures[0],
+                          measurements=tuple(measures))
+
+    def _commit_prev_cfg(self, req: EvalRequest) -> None:
+        self._committed_prev_cfg = req.meta["config"]
+
+    def _rewind_prev_cfg(self) -> None:
+        self._prev_cfg = self._committed_prev_cfg
+
+    def _reheat(self) -> None:
+        self.annealer.reheat()
+        if self._pipeline is not None:
+            self._pipeline.flush()
+
     # -- public API --
     def submit(self, job: str | None = None) -> Decision:
         """Process one arriving job; returns the decision record."""
         self._last_job = job or next(iter(self.blend))
-        step: Step = self.annealer.step()
+        if self._pipeline is not None:
+            resolved = self._pipeline.step()
+            step = resolved.step
+            if not self.evaluate_blend:
+                self._last_job = resolved.request.job
+            self._last_measures = list(resolved.result.measurements)
+        else:
+            step = self.annealer.step()
         reheated = self._detect_reheat(
-            self.detector, step.y_proposed, self.annealer.reheat)
+            self.detector, step.y_proposed, self._reheat)
         m = self._last_measures[0] if self._last_measures else Measurement(0, 0)
         counts = self.evaluation_counts()
         d = Decision(
@@ -243,11 +392,30 @@ class ProcurementController(ControllerMixin):
     def reweight(self, blend: Mapping[str, float]) -> None:
         """Change the workload blend mid-stream (paper sec. 4.3); the next
         evaluations see the new composition.  Detection-driven re-heat is
-        automatic if a detector is attached; callers may also force one."""
+        automatic if a detector is attached; callers may also force one.
+        Pending speculation was drawn from the old blend, so the pipeline
+        flushes (recycling its in-flight measurements)."""
         self.blend = dict(blend)
+        if self._pipeline is not None:
+            self._pipeline.flush()
 
     def force_reheat(self) -> None:
-        self.annealer.reheat()
+        self._reheat()
+
+    def close(self) -> None:
+        """Land every in-flight speculative measurement (recording each
+        exactly once) and shut the evaluation pipeline down.  No-op for
+        inline (non-pipelined) controllers."""
+        if self._pipeline is not None:
+            self._pipeline.close()
+
+    def pipeline_stats(self) -> "dict[str, Any] | None":
+        """Speculation telemetry (resolved / mispredictions / flushes /
+        recycled / hit rate), or None when running inline."""
+        if self._pipeline is None:
+            return None
+        s = self._pipeline.stats
+        return {**dataclasses.asdict(s), "hit_rate": s.hit_rate()}
 
     # -- offline planning (batched sweep -> online warm start) --
     def plan(
@@ -274,6 +442,8 @@ class ProcurementController(ControllerMixin):
             objective_source=self.objective_source)
         self.annealer.state = tuple(best_idx)
         self.annealer.y = None
+        if self._pipeline is not None:   # speculation predates the warm start
+            self._pipeline.flush()
         return cluster_config_from(self.space.decode(best_idx)), best_y
 
     def _plan_objective(self, decoded: dict[str, Any]) -> float:
@@ -281,7 +451,7 @@ class ProcurementController(ControllerMixin):
         a pure function of the configuration, suitable for tabulation."""
         cfg = cluster_config_from(decoded)
         names, weights = self._blend_weights()
-        self._n_direct_measures += len(names)
+        self._count_measures(len(names))
         return float(sum(
             w * self.objective(self.evaluator.measure(cfg, name, 0))
             for w, name in zip(weights, names)))

@@ -324,11 +324,16 @@ class SizingController(ControllerMixin):
         seed: int = 0,
         init: Sequence[int] | None = None,
         family: str = "container",
+        measure_topk: int = 1,
+        eval_workers: int | None = None,
+        recycle_store: "Any | None" = None,
     ):
         import jax
 
         if steps_per_round < 1 or n_chains < 1:
             raise ValueError("steps_per_round and n_chains must be >= 1")
+        if measure_topk < 1:
+            raise ValueError("measure_topk must be >= 1")
         self.spec = spec
         self.space = spec.space
         self.family = family
@@ -340,6 +345,9 @@ class SizingController(ControllerMixin):
                 f"space has {self.space.size()} states — beyond the "
                 f"{TABULATE_CAP} tabulation cap; inject a SurrogateSource "
                 f"(probe and interpolate) to size this DAG")
+        self.measure_topk = int(measure_topk)
+        self.eval_workers = eval_workers
+        self.recycle_store = recycle_store
         self._init_decision_log()
         self._enc = self.space.encoded(max_size=max(
             self.space.size(), TABULATE_CAP))
@@ -385,11 +393,11 @@ class SizingController(ControllerMixin):
             if self.objective_source is None:
                 res = evaluate_sizing_batch(
                     self.spec, full_grid(self.space), rates)
-                self._n_direct_measures += self.space.size()
+                self._count_measures(self.space.size())
                 self._tables[key] = res["y"]
             else:
                 def fn(decoded: dict[str, Any]) -> float:
-                    self._n_direct_measures += 1
+                    self._count_measures(1)
                     return float(
                         self.spec.host_objective(decoded, rates)["y"])
 
@@ -439,10 +447,6 @@ class SizingController(ControllerMixin):
             [inits[:, None, :], np.asarray(out["states"])],
             axis=1).reshape(-1, self._enc.ndim)
         flat = np.ravel_multi_index(tuple(visited.T), self._shape)
-        best = int(flat[table[flat].argmin()])
-        prev = self.incumbent
-        self.incumbent = tuple(
-            int(v) for v in np.unravel_index(best, self._shape))
 
         # exploration: any chain accepted an uphill move this round
         ys = np.asarray(out["ys"])                        # (n_chains, steps)
@@ -450,11 +454,35 @@ class SizingController(ControllerMixin):
         y0 = table[np.ravel_multi_index(tuple(inits.T), self._shape)]
         explored = bool(self.explored_flags(ys, accepts, y0).any())
 
-        # ground-truth re-measurement of the chosen sizing (this is the
-        # "run the next jobs under the new deployment" step)
+        # speculative ground-truth phase: the compiled fleet's visited
+        # states ARE the engine-enumerated lookahead — measure the
+        # ``measure_topk`` most promising (by table estimate) on the numpy
+        # host model, commit to the *measured* argmin, and recycle every
+        # measurement (mis-speculated candidates included) into the store.
+        # topk=1 is the historical inline behavior: re-measure the single
+        # best visited sizing.
+        order = np.argsort(table[flat], kind="stable")
+        cand: list[int] = []
+        seen: set[int] = set()
+        for j in order:
+            f = int(flat[j])
+            if f not in seen:
+                seen.add(f)
+                cand.append(f)
+            if len(cand) == self.measure_topk:
+                break
+        cand_idx = [tuple(int(v) for v in np.unravel_index(f, self._shape))
+                    for f in cand]
+        results = self._measure_candidates(cand_idx, rates)
+        self._count_measures(len(results))
+        if self.recycle_store is not None:
+            for st, rr in zip(cand_idx, results):
+                self.recycle_store.add(st, float(rr["y"]), float(r))
+        k_best = int(np.argmin([rr["y"] for rr in results]))
+        prev = self.incumbent
+        self.incumbent = cand_idx[k_best]
         decoded = self.space.decode(self.incumbent)
-        res = self.spec.host_objective(decoded, rates)
-        self._n_direct_measures += 1
+        res = results[k_best]
         y = float(res["y"])
         if self._detector is not None and self._detector.update(y):
             self._reheat_pending = True
@@ -481,6 +509,32 @@ class SizingController(ControllerMixin):
 
     def run(self, n_rounds: int) -> list[SizingDecision]:
         return [self.round() for _ in range(n_rounds)]
+
+    def _measure_candidates(
+        self, states: Sequence[tuple[int, ...]],
+        rates: Mapping[str, float],
+    ) -> "list[dict[str, Any]]":
+        """Ground-truth host-model measurement of K candidate sizings, in
+        candidate order.  With ``eval_workers`` > 1 the measurements run on
+        the evaluation runtime's bounded pool (the host model is pure
+        numpy and thread-safe); otherwise a plain ordered loop — the two
+        paths return identical results."""
+        if self.eval_workers and self.eval_workers > 1 and len(states) > 1:
+            from .evalpipe import EvalRequest, EvalResult, map_pool
+
+            def measure(req: EvalRequest) -> EvalResult:
+                res = self.spec.host_objective(req.decoded, rates)
+                return EvalResult(y=float(res["y"]), extra=res)
+
+            results = map_pool(
+                measure,
+                [EvalRequest(state=tuple(s), decoded=self.space.decode(s),
+                             job="mix", n=self._round, kind="round")
+                 for s in states],
+                max_workers=self.eval_workers)
+            return [dict(r.extra) for r in results]
+        return [self.spec.host_objective(self.space.decode(s), rates)
+                for s in states]
 
     def force_reheat(self) -> None:
         self._reheat_pending = True

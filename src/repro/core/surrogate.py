@@ -536,6 +536,7 @@ class SurrogateAnnealer:
         init: Sequence[int] | None = None,
         seed: int = 0,
         acquisition: str = "lcb",
+        eval_workers: int | None = None,
     ):
         import jax
 
@@ -547,8 +548,12 @@ class SurrogateAnnealer:
         self.acquisition = acquisition
         self.space = space
         self.evaluate = evaluate
-        self.model = model or SurrogateModel(SpaceEncoding.from_space(space))
-        self.store = store or MeasurementStore(len(space.dimensions))
+        self.model = (SurrogateModel(SpaceEncoding.from_space(space))
+                      if model is None else model)
+        # `store or default` would discard a caller's EMPTY store (len 0
+        # is falsy) — and with it the half_life drift configuration
+        self.store = (MeasurementStore(len(space.dimensions))
+                      if store is None else store)
         self.half_width = int(half_width)
         self.n_chains = int(n_chains)
         self.steps_per_round = int(steps_per_round)
@@ -560,10 +565,17 @@ class SurrogateAnnealer:
                             if n_bootstrap is None else int(n_bootstrap))
         if self.n_bootstrap < 1:
             raise ValueError("n_bootstrap must be >= 1")
+        # > 1: the round's real measurements (bootstrap design and ranked
+        # acquisition picks) run on the evaluation runtime's bounded
+        # worker pool (repro.core.evalpipe) — for wall-clock `evaluate`
+        # callables, which must then be thread-safe.  The store is fed in
+        # rank order either way, so the outcome matches the serial loop.
+        self.eval_workers = eval_workers
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.key(seed)
         self.true_measures = 0
         self.surrogate_queries = 0
+        self.stale_refreshes = 0     # drift mode: stale incumbents re-measured
         self.rounds: list[SurrogateRound] = []
         self._n = 0
         self._enc_cache: dict[tuple[int, ...], Any] = {}
@@ -583,6 +595,37 @@ class SurrogateAnnealer:
         self.store.add(key, y, t)
         self.true_measures += 1
         return key, y
+
+    def _measure_states(
+        self, states: Sequence[Sequence[int]], t: float
+    ) -> list[tuple[tuple[int, ...], float]]:
+        """Measure a ranked batch of states — the speculative probes of
+        this controller.  With ``eval_workers`` > 1 they dispatch
+        concurrently on the evaluation runtime's pool (submission follows
+        the caller's rank order, so the acquisition/uncertainty priority
+        decides what is measured first); the store is always fed in rank
+        order on the main thread, with counting exactly once per probe,
+        so pooled and serial runs produce identical stores."""
+        if not states:
+            return []
+        if self.eval_workers and self.eval_workers > 1 and len(states) > 1:
+            from .evalpipe import EvalRequest, EvalResult, map_pool
+
+            keys = [tuple(int(i) for i in s) for s in states]
+            results = map_pool(
+                lambda req: EvalResult(
+                    y=float(self.evaluate(dict(req.decoded)))),
+                [EvalRequest(state=k, decoded=self.space.decode(k),
+                             job="probe", n=self._n, kind="probe")
+                 for k in keys],
+                max_workers=self.eval_workers)
+            out = []
+            for k, r in zip(keys, results):
+                self.store.add(k, float(r.y), t)
+                self.true_measures += 1
+                out.append((k, float(r.y)))
+            return out
+        return [self._measure(s, t) for s in states]
 
     def _window_enc(self, sub: ConfigSpace, offs: np.ndarray):
         key = tuple(int(o) for o in offs)
@@ -606,9 +649,11 @@ class SurrogateAnnealer:
         if len(self.store) == 0:
             # global bootstrap design: incumbent + uniform valid states
             # over the FULL space, then recenter on the best sample
-            measured.append(self._measure(self.incumbent, t))
-            for _ in range(self.n_bootstrap - 1):
-                measured.append(self._measure(self._random_valid_state(), t))
+            # (dispatched as one concurrent batch when eval_workers > 1)
+            measured.extend(self._measure_states(
+                [self.incumbent] + [self._random_valid_state()
+                                    for _ in range(self.n_bootstrap - 1)],
+                t))
             self.incumbent = self.store.best()[0]
         elif (self.store.half_life is not None and self.incumbent in self.store
               and t - self.store.timestamp(self.incumbent)
@@ -617,6 +662,7 @@ class SurrogateAnnealer:
             # before trusting it as the window center (the online
             # Annealer's staleness rule: re-measuring the incumbent is
             # what lets the loop adapt after a landscape change)
+            self.stale_refreshes += 1
             measured.append(self._measure(self.incumbent, t))
             self.incumbent = self._best(t)[0]
 
@@ -664,8 +710,8 @@ class SurrogateAnnealer:
                 chosen.append(int(pos))
             if len(chosen) == self.measures_per_round:
                 break
-        for pos in chosen:
-            measured.append(self._measure(visited[pos] + offs, t))
+        measured.extend(self._measure_states(
+            [visited[pos] + offs for pos in chosen], t))
 
         self.incumbent, best_y = self._best(t)
         rec = SurrogateRound(

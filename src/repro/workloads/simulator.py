@@ -101,12 +101,37 @@ class MultiTenantStream:
         if not tenants:
             raise ValueError("at least one tenant required")
         self.tenants = tuple(tenants)
+        self._seed = seed
+        self._next_offset = len(tenants)   # never reused, even after churn
         self._streams = {
             t.name: JobStream(t.blend, seed=seed + i)
             for i, t in enumerate(tenants)
         }
         self._blends = {t.name: dict(t.blend) for t in tenants}
         self.round = 0
+
+    def add_tenant(self, tenant: TenantWorkload) -> None:
+        """Admit a tenant mid-run.  Its stream gets a never-before-used
+        seed offset, so arrivals and departures leave every other tenant's
+        job sequence untouched.  ``change_at`` counts *global* rounds (the
+        shared control clock), not rounds since arrival."""
+        if tenant.name in self._streams:
+            raise ValueError(f"duplicate tenant name: {tenant.name!r}")
+        self.tenants = self.tenants + (tenant,)
+        self._streams[tenant.name] = JobStream(
+            tenant.blend, seed=self._seed + self._next_offset)
+        self._next_offset += 1
+        self._blends[tenant.name] = dict(tenant.blend)
+
+    def remove_tenant(self, name: str) -> None:
+        """Retire tenant ``name``; the other streams are unaffected."""
+        if name not in self._streams:
+            raise KeyError(f"unknown tenant {name!r}")
+        if len(self.tenants) == 1:
+            raise ValueError("at least one tenant required")
+        self.tenants = tuple(t for t in self.tenants if t.name != name)
+        del self._streams[name]
+        del self._blends[name]
 
     @property
     def tenant_names(self) -> tuple[str, ...]:

@@ -1,0 +1,360 @@
+"""The speculative evaluation runtime: dispatcher modes, chain
+snapshot/replay, lookahead=1 decision parity for all four controllers,
+exactly-once measurement accounting, and misprediction recycling."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EC2_CATALOG,
+    EC2_CATALOG_ADJUSTED,
+    Annealer,
+    EvalDispatcher,
+    EvalRequest,
+    EvalResult,
+    FleetController,
+    MeasurementStore,
+    Objective,
+    PenalizedObjective,
+    ProcurementController,
+    ServiceCatalog,
+    StepNeighborhood,
+    SurrogateAnnealer,
+    TenantSpec,
+    make_ec2_space,
+    measure_requests,
+)
+from repro.core.costmodel import SimulatedEvaluator
+from repro.core.landscape import BLEND_BEFORE
+from repro.core.sizing import SizingController, SizingSpace
+from repro.core.state import ConfigSpace, Dimension
+from repro.workloads.microservice import (
+    ContainerSize,
+    MicroserviceDAG,
+    RequestClass,
+    ServiceTier,
+)
+
+CORES = tuple(range(4, 68, 8))
+
+
+@dataclasses.dataclass
+class CountingEvaluator(SimulatedEvaluator):
+    """Simulated measurements with a thread-safe call counter — the
+    ground truth for exactly-once accounting."""
+
+    wall_clock = True     # route through the worker pool
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.calls = 0
+        self._call_lock = threading.Lock()
+
+    def measure(self, config, job, n):
+        with self._call_lock:
+            self.calls += 1
+        return super().measure(config, job, n)
+
+
+def _controller(evaluator=None, **kw):
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED, core_counts=CORES)
+    return ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED,
+        evaluator=evaluator or SimulatedEvaluator(EC2_CATALOG_ADJUSTED),
+        objective=Objective(lambda_cost=1.0), blend=dict(BLEND_BEFORE),
+        schedule=1.0, seed=0, **kw)
+
+
+def _trace(decisions):
+    """Decision sequence without the cumulative counters (the pipelined
+    run also counts recycled speculative measurements)."""
+    return [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored,
+             d.tau, d.reheated, d.measurement) for d in decisions]
+
+
+# ---------------------------------------------------------------------------
+# EvalDispatcher
+# ---------------------------------------------------------------------------
+
+
+def _req(i):
+    return EvalRequest(state=(i,), decoded={"x": i}, job="j", n=i)
+
+
+def test_dispatcher_batched_is_one_ordered_call():
+    calls = []
+
+    def many(reqs):
+        calls.append(len(reqs))
+        return [EvalResult(y=float(r.n)) for r in reqs]
+
+    d = EvalDispatcher(lambda r: EvalResult(y=-1.0), mode="batched",
+                       measure_many=many)
+    futs = d.submit_many([_req(i) for i in range(5)])
+    assert calls == [5]
+    assert [f.result().y for f in futs] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert d.landed == 5 and d.dispatched == 5
+
+
+def test_dispatcher_pool_preserves_request_order():
+    d = EvalDispatcher(lambda r: EvalResult(y=float(r.n) * 2),
+                       mode="pool", max_workers=4)
+    futs = d.submit_many([_req(i) for i in range(8)])
+    assert [f.result().y for f in futs] == [2.0 * i for i in range(8)]
+    d.close()
+    assert d.landed == 8
+
+
+def test_dispatcher_validates():
+    with pytest.raises(ValueError):
+        EvalDispatcher(lambda r: None, mode="wat")
+    with pytest.raises(ValueError):
+        EvalDispatcher(lambda r: None, mode="pool", max_workers=0)
+    bad = EvalDispatcher(lambda r: None, mode="batched",
+                         measure_many=lambda reqs: [])
+    with pytest.raises(ValueError):
+        bad.submit_many([_req(0)])
+
+
+def test_measure_requests_pool_matches_batched():
+    cat = EC2_CATALOG_ADJUSTED
+    space = make_ec2_space(cat, core_counts=CORES)
+    items = [(space.decode((i % 4, i % len(CORES))), "wordcount", i)
+             for i in range(6)]
+    serial = measure_requests(SimulatedEvaluator(cat), items)
+    pooled = measure_requests(SimulatedEvaluator(cat), items,
+                              eval_workers=4)
+    assert serial == pooled
+
+
+# ---------------------------------------------------------------------------
+# Chain snapshot / replay
+# ---------------------------------------------------------------------------
+
+
+def test_annealer_snapshot_replay_reproduces_the_walk():
+    space = ConfigSpace((Dimension("a", tuple(range(8))),
+                         Dimension("b", tuple(range(6)))))
+    table = {(i, j): (i - 3) ** 2 + (j - 2) ** 2
+             for i in range(8) for j in range(6)}
+
+    def ev(decoded, n):
+        return float(table[(decoded["a"], decoded["b"])])
+
+    ann = Annealer(space, StepNeighborhood(space), ev, schedule=0.7, seed=3)
+    ann.run(5)
+    snap = ann.snapshot()
+    first = [(s.proposed, s.accepted, s.state) for s in ann.run(10)]
+    ann.restore(snap)
+    replay = [(s.proposed, s.accepted, s.state) for s in ann.run(10)]
+    assert first == replay
+    # history keeps both passes (they really ran); walk state matches
+    assert len(ann.history) == 25
+
+
+# ---------------------------------------------------------------------------
+# Lookahead=1 decision parity: pipeline vs inline, all four controllers
+# ---------------------------------------------------------------------------
+
+
+def test_procurement_k1_parity_including_measurements():
+    a = _controller(use_pipeline=False)
+    b = _controller(use_pipeline=True, lookahead=1)
+    da, db = a.run(40), b.run(40)
+    b.close()
+    assert _trace(da) == _trace(db)
+    # K=1 never mis-speculates state identity: counters agree too
+    assert a.evaluation_counts() == b.evaluation_counts()
+
+
+def test_procurement_k1_parity_evaluate_blend_and_detector():
+    from repro.core.change_detect import PageHinkley
+
+    a = _controller(evaluate_blend=True, detector=PageHinkley(min_obs=5))
+    b = _controller(evaluate_blend=True, detector=PageHinkley(min_obs=5),
+                    use_pipeline=True, lookahead=1)
+    da, db = a.run(40), b.run(40)
+    b.close()
+    assert _trace(da) == _trace(db)
+
+
+def test_procurement_k8_trace_parity_rng_rewind():
+    """The rng-rewind-on-misprediction invariant: even at lookahead 8 the
+    realized accept/reject walk is the serial chain's (migration billing
+    follows the speculative execution order, so compare the walk)."""
+    a = _controller()
+    c = _controller(use_pipeline=True, lookahead=8)
+    da, dc = a.run(50), c.run(50)
+    c.close()
+    wa = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in da]
+    wc = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in dc]
+    assert wa == wc
+    stats = c.pipeline_stats()
+    assert stats["resolved"] == 50
+
+
+def _fleet(eval_workers=None, n_tenants=4, cap=80.0, seed=0):
+    fams = ("general", "compute", "memory", "storage")
+    cat = ServiceCatalog({f: EC2_CATALOG[f] for f in fams},
+                         capacities={f: cap for f in fams})
+    space = make_ec2_space(cat, core_counts=CORES)
+    tenants = [TenantSpec(f"t{i}", {"wordcount": 1.0, "kmeans": 1.0},
+                          priority=1.0 + 0.25 * i)
+               for i in range(n_tenants)]
+    return FleetController(
+        space, cat, SimulatedEvaluator(cat), tenants,
+        objective=PenalizedObjective(Objective(lambda_cost=200.0),
+                                     weight=25.0),
+        steps_per_round=16, seed=seed, eval_workers=eval_workers)
+
+
+def test_fleet_k1_parity_pool_vs_batched():
+    def tr(ds):
+        return [(d.tenant, d.round, d.action, d.accepted, round(d.y, 12),
+                 d.config, d.measurement, round(d.violation, 12)) for d in ds]
+
+    assert tr(_fleet().run(4)) == tr(_fleet(eval_workers=4).run(4))
+
+
+def _sizing_spec():
+    tiers = (ServiceTier("gw", base_rate=60.0),
+             ServiceTier("auth", base_rate=80.0))
+    classes = (RequestClass("browse", "gw", {"gw": 1, "auth": 1},
+                            slo_s=0.35),)
+    dag = MicroserviceDAG(tiers, (("gw", "auth"),), classes)
+    return SizingSpace(dag,
+                       sizes=(ContainerSize("s", 1, 2.0),
+                              ContainerSize("l", 4, 8.0)),
+                       replica_counts=(1, 2, 3), lambda_cost=0.5,
+                       slo_penalty=50.0)
+
+
+def test_sizing_k1_parity_pool_vs_serial():
+    spec = _sizing_spec()
+    mix = {"browse": 40.0}
+
+    def tr(ds):
+        return [(d.n, d.accepted, round(d.y, 12),
+                 tuple(sorted(d.sizing.items())), d.reheated,
+                 d.true_measures) for d in ds]
+
+    a = SizingController(spec, mix, seed=0)
+    b = SizingController(spec, mix, seed=0, eval_workers=4)
+    assert tr(a.run(5)) == tr(b.run(5))
+
+
+def test_sizing_topk_measures_and_recycles():
+    spec = _sizing_spec()
+    mix = {"browse": 40.0}
+    store = MeasurementStore(len(spec.space.dimensions))
+    k1 = SizingController(spec, mix, seed=0)
+    topk = SizingController(spec, mix, seed=0, measure_topk=4,
+                            eval_workers=4, recycle_store=store)
+    d1, dk = k1.run(5), topk.run(5)
+    # the measured argmin can only improve on the table argmin
+    assert dk[-1].y <= d1[-1].y + 1e-9
+    assert len(store) >= 4          # speculative candidates recycled
+    # 4 ground-truth measures per round instead of 1 (plus one shared
+    # whole-grid tabulation)
+    extra = (topk.evaluation_counts()["true_measures"]
+             - k1.evaluation_counts()["true_measures"])
+    assert extra == 5 * 3
+
+
+def test_surrogate_annealer_pool_parity():
+    spec = _sizing_spec()
+
+    def fn(decoded):
+        return float(spec.host_objective(decoded, {"browse": 40.0})["y"])
+
+    def run(workers):
+        sa = SurrogateAnnealer(spec.space, fn, half_width=3, n_chains=4,
+                               steps_per_round=16, measures_per_round=6,
+                               seed=0, eval_workers=workers)
+        recs = sa.run(3)
+        return ([(r.incumbent, round(r.best_y, 12), r.measured)
+                 for r in recs], sa.counts())
+
+    assert run(None) == run(4)
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once accounting of speculative measurements (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_measurements_counted_exactly_once():
+    """Mis-speculated (later-discarded) measurements are real evaluator
+    runs: they must appear in ``true_measures`` and in the annealer's
+    evaluation log exactly once — neither dropped nor double-counted."""
+    ev = CountingEvaluator(EC2_CATALOG_ADJUSTED)
+    c = _controller(evaluator=ev, lookahead=8)
+    c.run(40)
+    c.close()     # lands every in-flight speculation
+    stats = c.pipeline_stats()
+    assert stats["mispredictions"] > 0          # speculation really failed
+    assert stats["recycled_landed"] > 0         # and was recycled, not lost
+    counts = c.evaluation_counts()
+    assert counts["true_measures"] == ev.calls
+    assert c.annealer.measure_count == ev.calls
+    assert len(c.annealer.evaluations) == ev.calls
+    # every landed measurement reached the recycling store exactly once
+    # (latest-wins per state, so the store can only be smaller)
+    assert 0 < len(c.recycle_store) <= ev.calls
+    # cancelled speculations never ran: dispatched = landed + cancelled
+    disp = c._pipeline.dispatcher
+    assert disp.dispatched == disp.landed + stats["cancelled"]
+
+
+def test_pipeline_close_leaves_chain_serially_continuable():
+    """After close(), the chain RNG sits at the last resolved transition:
+    continuing inline must match an uninterrupted serial run."""
+    a = _controller()
+    b = _controller(use_pipeline=True, lookahead=8)
+    da = a.run(30)
+    db = b.run(20)
+    b.close()
+    b._pipeline = None            # continue inline on the same chain
+    db += b.run(10)
+    wa = [(d.n, d.config, d.accepted) for d in da]
+    wb = [(d.n, d.config, d.accepted) for d in db]
+    assert wa == wb
+
+
+def test_pipeline_reheat_flushes_and_matches_serial():
+    """A forced reheat mid-stream invalidates pending speculation; the
+    pipelined walk still matches the serial one."""
+    a = _controller()
+    b = _controller(use_pipeline=True, lookahead=6)
+    da, db = [], []
+    for k in range(3):
+        da += a.run(10)
+        db += b.run(10)
+        a.force_reheat()
+        b.force_reheat()
+    b.close()
+    assert [(d.n, d.config, d.accepted, d.y) for d in da] == \
+           [(d.n, d.config, d.accepted, d.y) for d in db]
+
+
+def test_flush_rewinds_migration_prev_cfg_with_the_rng():
+    """Migration billing is path-dependent (_build_request advances
+    _prev_cfg along the speculative path): a flush must rewind it to the
+    last RESOLVED evaluation's config, exactly like the RNG — otherwise
+    the first post-flush measurement bills migration from a config that
+    never ran in the realized walk."""
+    a = _controller()
+    b = _controller(use_pipeline=True, lookahead=8)
+    for k in range(3):
+        a.run(12)
+        b.run(12)
+        a.force_reheat()     # serial reheat
+        b.force_reheat()     # pipelined reheat -> flush
+        assert b._prev_cfg == a._prev_cfg
+    b.close()
+    assert b._prev_cfg == a._prev_cfg

@@ -445,3 +445,79 @@ def test_fleet_controller_validation():
         TenantSpec("t", {"wordcount": 1.0}, priority=0.0)
     with pytest.raises(ValueError):
         FleetController(space, catalog, ev, [t], steps_per_round=0)
+
+
+# ---------------------------------------------------------------------------
+# Tenant churn: arrivals/departures between rounds (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_departing_tenants_capacity_is_reusable_next_round():
+    ctrl = _controller(n_tenants=4, cap=80.0)
+    ctrl.run(3)
+    assert ctrl.violation_history[-1] == 0.0
+    gone = ctrl.allocations()["t1"]
+    fam = gone["config"].instance_type
+    remaining_before = ctrl.catalog.remaining(fam)
+
+    ctrl.remove_tenant("t1")
+    # the departing tenant's reservation-ledger share is released at once
+    assert (ctrl.catalog.remaining(fam)
+            == pytest.approx(remaining_before + gone["config"].total_cores))
+    usage = ctrl.aggregate_usage()["cores"]
+    for f in ctrl.catalog.names():
+        assert ctrl.catalog.reserved(f) == pytest.approx(usage[f])
+    assert "t1" not in ctrl.allocations()
+
+    # ...and a newcomer can claim it from the very next round
+    ctrl.add_tenant(TenantSpec("fresh", {"pagerank": 1.0}, priority=3.0))
+    decisions = ctrl.round()
+    assert sorted(d.tenant for d in decisions) == ["fresh", "t0", "t2", "t3"]
+    assert ctrl.violation_history[-1] == 0.0
+    assert ctrl.allocations()["fresh"]["config"].total_cores > 0
+
+
+def test_add_tenant_validates_and_keeps_others_streams():
+    ctrl = _controller(n_tenants=3)
+    with pytest.raises(ValueError):
+        ctrl.add_tenant(TenantSpec("t0", {"wordcount": 1.0}))
+    with pytest.raises(KeyError):
+        ctrl.remove_tenant("nope")
+    # removing all but one, the last removal refuses
+    ctrl.remove_tenant("t2")
+    ctrl.remove_tenant("t1")
+    with pytest.raises(ValueError):
+        ctrl.remove_tenant("t0")
+    # a churned fleet still rounds fine with one tenant
+    assert len(ctrl.round()) == 1
+
+
+def test_churn_leaves_surviving_tenants_job_sequences_untouched():
+    a = _controller(n_tenants=3, seed=7)
+    b = _controller(n_tenants=3, seed=7)
+    jobs_a = [[d.job for d in a.round() if d.tenant == "t2"]
+              for _ in range(2)]
+    b.round()
+    b.remove_tenant("t0")
+    b.add_tenant(TenantSpec("late", {"kmeans": 1.0}))
+    jobs_b0 = [d.job for d in b.decisions if d.tenant == "t2" and d.round == 0]
+    jobs_b1 = [d.job for d in b.round() if d.tenant == "t2"]
+    assert [jobs_b0, jobs_b1] == jobs_a
+
+
+def test_batched_detector_churn():
+    from repro.core import BatchedPageHinkley
+
+    det = BatchedPageHinkley(3, min_obs=2)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        det.update(rng.normal(size=3))
+    det.add_streams(2)
+    assert det.n_streams == 5
+    assert det.update(np.zeros(5)).shape == (5,)
+    det.remove_stream(0)
+    assert det.n_streams == 4
+    with pytest.raises(IndexError):
+        det.remove_stream(7)
+    with pytest.raises(ValueError):
+        det.add_streams(0)

@@ -434,3 +434,17 @@ def test_tabulate_dynamic_valid_mask_passthrough():
     np.testing.assert_allclose(got, want)
     assert (~enc.valid_mask).any()
     assert np.isinf(got[:, ~enc.valid_mask]).all()
+
+
+def test_annealer_keeps_a_caller_supplied_empty_store():
+    """Regression: ``store or default`` discarded a caller's EMPTY store
+    (len 0 is falsy) — silently dropping its half_life drift
+    configuration and capacity bound."""
+    space = ConfigSpace((Dimension("x", tuple(range(12))),))
+    store = MeasurementStore(1, half_life=3.0, capacity=17)
+    sa = SurrogateAnnealer(space, lambda cfg: float(cfg["x"]), store=store,
+                           half_width=3, n_chains=2, steps_per_round=4,
+                           measures_per_round=2, seed=0)
+    assert sa.store is store
+    sa.run(1)
+    assert sa.store is store and len(store) > 0
