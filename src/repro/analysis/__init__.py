@@ -1,0 +1,22 @@
+"""Static and dynamic analysis for the repro codebase.
+
+Three analyzers, one CI entry point (``python -m repro.analysis.run``):
+
+* :mod:`repro.analysis.jaxlint` — AST lint for JAX hazards (host-library
+  calls and host coercions inside jit-reachable code, mutable defaults on
+  jitted functions, unpaired Pallas kernels, host scalars fed into jnp
+  ops), with a checked-in waiver baseline
+  (``src/repro/analysis/jaxlint_baseline.txt``).
+* :mod:`repro.analysis.sanitize` — runtime sanitizer (``REPRO_SANITIZE=1``)
+  wrapping the jitted entry points to count compilations and device->host
+  transfers per controller round and assert steady-state zero-retrace.
+* :mod:`repro.analysis.racecheck` — lockset (Eraser-style) dynamic race
+  detector over the evaluation runtime's shared state.
+
+The analyzers observe the core through :mod:`repro.core.instrumentation`;
+core never imports this package.
+"""
+
+from __future__ import annotations
+
+__all__ = ["jaxlint", "racecheck", "sanitize"]

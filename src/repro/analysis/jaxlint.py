@@ -1,0 +1,692 @@
+"""AST-based lint for JAX hazards in ``src/repro``.
+
+The compiled control loop is only as fast as its traces are stable: a
+``numpy``/``math``/``random`` call inside traced code silently constant-
+folds per trace (or breaks under ``vmap``), a ``float()``/``.item()``/
+``np.asarray()`` coercion forces a device sync, and a host scalar pushed
+through a ``jnp`` op bakes a fresh constant into every trace.  This
+module finds those patterns *statically*, so the tier-1 gate catches
+them before the sanitizer ever has to observe a retrace.
+
+Rules
+-----
+
+``host-call-in-jit``
+    A ``numpy`` / ``math`` / ``random`` (Python RNG) call inside a
+    function reachable from a ``jax.jit`` or ``pl.pallas_call`` root.
+``host-coercion-in-jit``
+    ``float(...)``, ``.item()`` or ``np.asarray(...)`` inside
+    jit-reachable code — a device->host sync if the operand is traced.
+``mutable-default-in-jit``
+    A jit-reachable function with a mutable default argument (the
+    default is captured once at trace time and shared across traces).
+``scalar-into-jnp``
+    A ``jnp`` op whose argument is itself a host coercion
+    (``float()`` / ``int()`` / ``.item()`` / ``np.asarray()``) inside
+    jit-reachable code — host ping-pong that re-embeds a constant and
+    forces a retrace when the value changes.
+``kernel-ref-pairing``
+    A Pallas kernel entry point in ``src/repro/kernels/`` without a
+    paired ``<name>_ref`` oracle in ``ref.py``, without a tolerance test
+    referencing it, or not exported through ``repro.kernels.__all__``
+    (directly or via its ``ops`` wrapper).
+
+Reachability is a package-local call graph: roots are functions
+decorated with ``jax.jit`` (directly or through ``functools.partial``),
+functions passed to a ``jax.jit(...)`` / ``pl.pallas_call(...)`` call,
+and the bodies of lambdas handed to ``pallas_call``; edges follow any
+name or module-attribute reference that resolves to a function defined
+in the linted tree (references count, not just calls, so conditional
+dispatch like ``fn = a if flag else b`` is followed).  ``self.method``
+and other dynamic attributes are not resolved; ``jax.custom_vjp``
+forward/backward pairs are deliberately not roots (they trace under
+``jax.grad`` of a jitted caller, but their hazards surface through the
+jitted wrappers this linter does root).
+
+Waivers live in ``jaxlint_baseline.txt`` next to this module: one
+finding key per line, ``rule:path:qualname:symbol = reason``.  A waiver
+without a reason and a waiver matching nothing both FAIL the lint — the
+baseline can only shrink or carry justified entries.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable
+
+HOST_MODULES = {"numpy", "math", "random", "numpy.random"}
+JNP_MODULES = {"jax.numpy", "numpy"}  # numpy only for the np.asarray rule
+COERCION_CALLS = {"float"}
+SCALAR_COERCIONS = {"float", "int"}
+
+
+# ---------------------------------------------------------------------------
+# Findings and the baseline.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str            # repo-relative posix path
+    qualname: str        # module-level qualified function name
+    symbol: str          # the offending symbol, e.g. "np.cumprod"
+    lineno: int
+    message: str
+    waived: str | None = None   # waiver reason when baselined
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.qualname}:{self.symbol}"
+
+    def __str__(self) -> str:
+        tag = f"  [waived: {self.waived}]" if self.waived else ""
+        return (f"{self.path}:{self.lineno}: {self.rule} in {self.qualname}:"
+                f" {self.message}{tag}")
+
+
+class BaselineError(ValueError):
+    """Malformed or stale waiver baseline."""
+
+
+def load_baseline(path: pathlib.Path) -> dict[str, str]:
+    """``key = reason`` lines; '#' comments and blank lines ignored."""
+    waivers: dict[str, str] = {}
+    if not path.exists():
+        return waivers
+    for i, raw in enumerate(path.read_text().splitlines(), 1):
+        line = raw.split("#", 1)[0].strip() if raw.lstrip().startswith("#") \
+            else raw.strip()
+        if not line:
+            continue
+        if "=" not in line:
+            raise BaselineError(
+                f"{path.name}:{i}: waiver without a reason: {line!r}")
+        key, reason = (s.strip() for s in line.split("=", 1))
+        if not reason:
+            raise BaselineError(
+                f"{path.name}:{i}: empty reason for {key!r}")
+        if key in waivers:
+            raise BaselineError(f"{path.name}:{i}: duplicate waiver {key!r}")
+        waivers[key] = reason
+    return waivers
+
+
+# ---------------------------------------------------------------------------
+# Per-module symbol tables.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FuncUnit:
+    """One function (at any nesting depth) as a lint unit.  Nested
+    function defs are separate units; scanning a unit skips their
+    subtrees."""
+
+    module: "ModuleInfo"
+    qualname: str
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    parent: "FuncUnit | None"
+    children: dict[str, "FuncUnit"] = dataclasses.field(default_factory=dict)
+
+    @property
+    def uid(self) -> str:
+        return f"{self.module.modname}:{self.qualname}"
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: pathlib.Path
+    relpath: str                 # posix, relative to the lint root's parent
+    modname: str                 # dotted module name, best effort
+    tree: ast.Module
+    # import alias -> real dotted module name ("np" -> "numpy")
+    module_aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    # imported name -> (module, attr) ("_fleet_nd_jit" ->
+    #   ("repro.core.annealing", "_fleet_nd_jit"))
+    imported: dict[str, tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+    functions: dict[str, FuncUnit] = dataclasses.field(default_factory=dict)
+
+
+def _module_name(root_pkg: str, rel: pathlib.Path) -> str:
+    parts = list(rel.with_suffix("").parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join([root_pkg] + parts) if parts else root_pkg
+
+
+def _resolve_relative(base_mod: str, is_pkg: bool, level: int,
+                      module: str | None) -> str:
+    parts = base_mod.split(".")
+    # a package's "." is itself; a module's "." is its parent package
+    strip = level - 1 if is_pkg else level
+    if strip:
+        parts = parts[:len(parts) - strip]
+    if module:
+        parts += module.split(".")
+    return ".".join(parts)
+
+
+def _index_module(path: pathlib.Path, relpath: str, modname: str,
+                  ) -> ModuleInfo:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    info = ModuleInfo(path=path, relpath=relpath, modname=modname, tree=tree)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                info.module_aliases[alias.asname or
+                                    alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            src = (_resolve_relative(modname, path.name == "__init__.py",
+                                     node.level, node.module)
+                   if node.level else (node.module or ""))
+            for alias in node.names:
+                name = alias.asname or alias.name
+                # "from . import decode_attention as _dec" imports a module
+                info.module_aliases.setdefault(name, f"{src}.{alias.name}")
+                info.imported[name] = (src, alias.name)
+
+    def collect(body: Iterable[ast.stmt], prefix: str,
+                parent: FuncUnit | None) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                unit = FuncUnit(module=info, qualname=qual, node=node,
+                                parent=parent)
+                info.functions[qual] = unit
+                if parent is not None:
+                    parent.children[node.name] = unit
+                collect(node.body, f"{qual}.", unit)
+            elif isinstance(node, ast.ClassDef):
+                collect(node.body, f"{prefix}{node.name}.", parent)
+            elif isinstance(node, (ast.If, ast.Try, ast.With)):
+                collect(node.body, prefix, parent)
+
+    collect(tree.body, "", None)
+    return info
+
+
+# ---------------------------------------------------------------------------
+# The linter.
+# ---------------------------------------------------------------------------
+
+
+class Linter:
+    def __init__(self, root: pathlib.Path, root_pkg: str | None = None):
+        """``root`` is a package directory (e.g. ``src/repro``); every
+        ``*.py`` under it is indexed."""
+        self.root = root.resolve()
+        self.root_pkg = root_pkg or self.root.name
+        self.modules: dict[str, ModuleInfo] = {}
+        for path in sorted(self.root.rglob("*.py")):
+            rel = path.relative_to(self.root)
+            modname = _module_name(self.root_pkg, rel)
+            relpath = (pathlib.Path(self.root.name) / rel).as_posix()
+            try:
+                self.modules[modname] = _index_module(path, relpath, modname)
+            except SyntaxError as e:          # pragma: no cover - repo parses
+                raise SyntaxError(f"{path}: {e}") from e
+        self._units: dict[str, FuncUnit] = {
+            u.uid: u
+            for m in self.modules.values() for u in m.functions.values()
+        }
+
+    # -- name resolution ----------------------------------------------------
+
+    def _module_by_name(self, dotted: str) -> ModuleInfo | None:
+        if dotted in self.modules:
+            return self.modules[dotted]
+        # tolerate references relative to the package root ("repro.core.x"
+        # when the root package indexed as "repro")
+        tail = dotted.split(".")
+        for i in range(1, len(tail)):
+            cand = ".".join([self.root_pkg] + tail[i:])
+            if cand in self.modules:
+                return self.modules[cand]
+        return None
+
+    def _resolve_name(self, unit: FuncUnit, name: str) -> FuncUnit | None:
+        """A bare name inside ``unit``: nested defs, enclosing scopes,
+        module-level defs, then imported functions."""
+        if name in unit.children:
+            return unit.children[name]
+        anc = unit.parent
+        while anc is not None:
+            if name in anc.children:
+                return anc.children[name]
+            anc = anc.parent
+        mod = unit.module
+        if name in mod.functions:
+            return mod.functions[name]
+        if name in mod.imported:
+            src, attr = mod.imported[name]
+            target = self._module_by_name(src)
+            if target is not None and attr in target.functions:
+                return target.functions[attr]
+        return None
+
+    def _resolve_attr(self, unit: FuncUnit, node: ast.Attribute,
+                      ) -> FuncUnit | None:
+        """``alias.fn`` where ``alias`` is an imported module."""
+        if not isinstance(node.value, ast.Name):
+            return None
+        dotted = unit.module.module_aliases.get(node.value.id)
+        if dotted is None:
+            return None
+        target = self._module_by_name(dotted)
+        if target is not None and node.attr in target.functions:
+            return target.functions[node.attr]
+        return None
+
+    def _alias_module(self, unit: FuncUnit, name: str) -> str | None:
+        """The real dotted module an alias refers to, if any."""
+        return unit.module.module_aliases.get(name)
+
+    # -- jit / pallas roots -------------------------------------------------
+
+    def _is_jit_expr(self, unit: FuncUnit, node: ast.expr) -> bool:
+        """``jax.jit`` / ``jit`` (imported from jax) / ``pl.pallas_call``."""
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name):
+            mod = self._alias_module(unit, node.value.id)
+            if mod == "jax" and node.attr == "jit":
+                return True
+            if mod in ("jax.experimental.pallas",) and \
+                    node.attr == "pallas_call":
+                return True
+            return False
+        if isinstance(node, ast.Name):
+            imp = unit.module.imported.get(node.id)
+            return imp in (("jax", "jit"),
+                           ("jax.experimental.pallas", "pallas_call"))
+        return False
+
+    def _is_partial(self, unit: FuncUnit, node: ast.expr) -> bool:
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name):
+            return (self._alias_module(unit, node.value.id) == "functools"
+                    and node.attr == "partial")
+        if isinstance(node, ast.Name):
+            return unit.module.imported.get(node.id) == ("functools",
+                                                         "partial")
+        return False
+
+    def _scan_unit_body(self, unit: FuncUnit):
+        """Yield every node of the unit's body, skipping nested defs."""
+        stack: list[ast.AST] = list(ast.iter_child_nodes(unit.node))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _module_unit(self, mod: ModuleInfo) -> FuncUnit:
+        """A pseudo-unit for module-level code (resolution context only)."""
+        return FuncUnit(module=mod, qualname="<module>",
+                        node=mod.tree,  # type: ignore[arg-type]
+                        parent=None)
+
+    def _roots(self) -> set[str]:
+        roots: set[str] = set()
+        for mod in self.modules.values():
+            for unit in mod.functions.values():
+                for dec in unit.node.decorator_list:
+                    if self._is_jit_expr(unit, dec):
+                        roots.add(unit.uid)
+                    elif isinstance(dec, ast.Call):
+                        if self._is_jit_expr(unit, dec.func):
+                            roots.add(unit.uid)
+                        elif self._is_partial(unit, dec.func) and dec.args \
+                                and self._is_jit_expr(unit, dec.args[0]):
+                            roots.add(unit.uid)
+            # jax.jit(f) / pl.pallas_call(kernel) used as expressions,
+            # inside any function or at module level
+            for unit in mod.functions.values():
+                for node in self._scan_unit_body(unit):
+                    roots.update(self._call_roots(unit, node))
+            top = self._module_unit(mod)
+            for stmt in mod.tree.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                for node in ast.walk(stmt):
+                    roots.update(self._call_roots(top, node))
+        return roots
+
+    def _scan_callable_expr(self, unit: FuncUnit, target: ast.expr,
+                            roots: set[str], *, follow_assign: bool = True,
+                            ) -> None:
+        """Root the function(s) a callable expression refers to: a plain
+        name, a module attribute, a lambda, a ``functools.partial(f, ...)``
+        — or a local name *assigned* one of those."""
+        if isinstance(target, ast.Name):
+            resolved = self._resolve_name(unit, target.id)
+            if resolved is not None:
+                roots.add(resolved.uid)
+            elif follow_assign:
+                for node in self._scan_unit_body(unit):
+                    if isinstance(node, ast.Assign) and any(
+                            isinstance(t, ast.Name) and t.id == target.id
+                            for t in node.targets):
+                        self._scan_callable_expr(unit, node.value, roots,
+                                                 follow_assign=False)
+        elif isinstance(target, ast.Attribute):
+            resolved = self._resolve_attr(unit, target)
+            if resolved is not None:
+                roots.add(resolved.uid)
+        elif isinstance(target, ast.Lambda):
+            # root every function the lambda body references
+            for sub in ast.walk(target.body):
+                if isinstance(sub, ast.Name):
+                    resolved = self._resolve_name(unit, sub.id)
+                    if resolved is not None:
+                        roots.add(resolved.uid)
+                elif isinstance(sub, ast.Attribute):
+                    resolved = self._resolve_attr(unit, sub)
+                    if resolved is not None:
+                        roots.add(resolved.uid)
+        elif isinstance(target, ast.Call) and target.args \
+                and self._is_partial(unit, target.func):
+            self._scan_callable_expr(unit, target.args[0], roots,
+                                     follow_assign=False)
+
+    def _call_roots(self, unit: FuncUnit, node: ast.AST) -> set[str]:
+        roots: set[str] = set()
+        if (isinstance(node, ast.Call)
+                and self._is_jit_expr(unit, node.func) and node.args):
+            self._scan_callable_expr(unit, node.args[0], roots)
+        return roots
+
+    def _edges(self, unit: FuncUnit) -> set[str]:
+        """Units referenced (by name or module attribute) from ``unit``."""
+        out: set[str] = set()
+        for node in self._scan_unit_body(unit):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                resolved = self._resolve_name(unit, node.id)
+                if resolved is not None:
+                    out.add(resolved.uid)
+            elif isinstance(node, ast.Attribute):
+                resolved = self._resolve_attr(unit, node)
+                if resolved is not None:
+                    out.add(resolved.uid)
+        return out
+
+    def reachable(self) -> set[str]:
+        seen = set()
+        work = list(self._roots())
+        while work:
+            uid = work.pop()
+            if uid in seen:
+                continue
+            seen.add(uid)
+            unit = self._units.get(uid)
+            if unit is not None:
+                work.extend(self._edges(unit) - seen)
+        return seen
+
+    # -- hazard rules -------------------------------------------------------
+
+    def _host_symbol(self, unit: FuncUnit, func: ast.expr) -> str | None:
+        """'np.cumprod' when ``func`` is a call into numpy/math/random."""
+        if isinstance(func, ast.Attribute):
+            parts = []
+            cur: ast.expr = func
+            while isinstance(cur, ast.Attribute):
+                parts.append(cur.attr)
+                cur = cur.value
+            if not isinstance(cur, ast.Name):
+                return None
+            mod = self._alias_module(unit, cur.id)
+            if mod is None:
+                return None
+            sub = ".".join([mod] + parts[:0:-1])   # e.g. numpy.random
+            if mod in HOST_MODULES or sub in HOST_MODULES:
+                return f"{cur.id}.{'.'.join(reversed(parts))}"
+        elif isinstance(func, ast.Name):
+            imp = unit.module.imported.get(func.id)
+            if imp is not None and imp[0] in HOST_MODULES:
+                return func.id
+        return None
+
+    def _is_np_asarray(self, unit: FuncUnit, func: ast.expr) -> bool:
+        return (isinstance(func, ast.Attribute)
+                and func.attr in ("asarray", "array", "ascontiguousarray")
+                and isinstance(func.value, ast.Name)
+                and self._alias_module(unit, func.value.id) == "numpy")
+
+    def _is_jnp_call(self, unit: FuncUnit, func: ast.expr) -> bool:
+        return (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Name)
+                and self._alias_module(unit, func.value.id) == "jax.numpy")
+
+    def _is_scalar_coercion(self, unit: FuncUnit, node: ast.expr) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in SCALAR_COERCIONS:
+            return True
+        if isinstance(f, ast.Attribute) and f.attr == "item":
+            return True
+        return self._is_np_asarray(unit, f)
+
+    def _unit_findings(self, unit: FuncUnit) -> list[Finding]:
+        out: list[Finding] = []
+        mod = unit.module
+
+        def add(rule: str, symbol: str, lineno: int, message: str) -> None:
+            out.append(Finding(rule=rule, path=mod.relpath,
+                               qualname=unit.qualname, symbol=symbol,
+                               lineno=lineno, message=message))
+
+        # mutable defaults on the unit itself
+        args = unit.node.args
+        for default in list(args.defaults) + [
+                d for d in args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call)
+                    and isinstance(default.func, ast.Name)
+                    and default.func.id in ("list", "dict", "set")):
+                add("mutable-default-in-jit", "default", default.lineno,
+                    "mutable default argument on a jit-reachable function "
+                    "is captured once and shared across traces")
+
+        for node in self._scan_unit_body(unit):
+            if not isinstance(node, ast.Call):
+                continue
+            sym = self._host_symbol(unit, node.func)
+            if sym is not None:
+                add("host-call-in-jit", sym, node.lineno,
+                    f"host-library call {sym}() inside jit-reachable code "
+                    "(constant-folds per trace; breaks under transforms)")
+            if self._is_np_asarray(unit, node.func):
+                f = node.func
+                assert isinstance(f, ast.Attribute)
+                sym2 = f"{f.value.id}.{f.attr}"  # type: ignore[attr-defined]
+                add("host-coercion-in-jit", sym2, node.lineno,
+                    f"{sym2}() inside jit-reachable code forces a "
+                    "device->host sync on traced operands")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in COERCION_CALLS:
+                add("host-coercion-in-jit", node.func.id, node.lineno,
+                    f"{node.func.id}() inside jit-reachable code forces a "
+                    "device->host sync on traced operands")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                add("host-coercion-in-jit", ".item", node.lineno,
+                    ".item() inside jit-reachable code forces a "
+                    "device->host sync")
+            if self._is_jnp_call(unit, node.func):
+                for arg in list(node.args) + [kw.value
+                                              for kw in node.keywords]:
+                    if self._is_scalar_coercion(unit, arg):
+                        f = node.func
+                        assert isinstance(f, ast.Attribute)
+                        add("scalar-into-jnp", f.attr, arg.lineno,
+                            f"host-coerced scalar fed into jnp.{f.attr}() "
+                            "re-embeds a constant (retraces when the value "
+                            "changes)")
+        return out
+
+    # -- kernel / reference pairing ----------------------------------------
+
+    def _kernel_pairing_findings(self, tests_dir: pathlib.Path | None,
+                                 ) -> list[Finding]:
+        kernels_pkg = f"{self.root_pkg}.kernels"
+        kmods = {n: m for n, m in self.modules.items()
+                 if n.startswith(kernels_pkg + ".")
+                 and n.split(".")[-1] not in ("ops", "ref", "__init__")}
+        if not kmods:
+            return []
+        ref = self.modules.get(f"{kernels_pkg}.ref")
+        init = self.modules.get(kernels_pkg)
+        out: list[Finding] = []
+
+        exported: set[str] = set()
+        if init is not None:
+            for node in ast.walk(init.tree):
+                if isinstance(node, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets):
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        exported = {e.value for e in node.value.elts
+                                    if isinstance(e, ast.Constant)}
+
+        # ops wrapper name -> kernel function names it references
+        ops = self.modules.get(f"{kernels_pkg}.ops")
+        wrapper_refs: dict[str, set[str]] = {}
+        if ops is not None:
+            for qual, unit in ops.functions.items():
+                refs = set()
+                for node in self._scan_unit_body(unit):
+                    if isinstance(node, ast.Attribute):
+                        resolved = self._resolve_attr(unit, node)
+                        if resolved is not None and \
+                                resolved.module.modname in kmods:
+                            refs.add(node.attr)
+                wrapper_refs[qual] = refs
+
+        test_names: set[str] = set()
+        if tests_dir is not None and tests_dir.is_dir():
+            for tpath in sorted(tests_dir.glob("test_*.py")):
+                try:
+                    ttree = ast.parse(tpath.read_text())
+                except SyntaxError:          # pragma: no cover
+                    continue
+                for node in ast.walk(ttree):
+                    if isinstance(node, ast.Name):
+                        test_names.add(node.id)
+                    elif isinstance(node, ast.Attribute):
+                        test_names.add(node.attr)
+
+        for modname, mod in sorted(kmods.items()):
+            has_pallas = any(
+                isinstance(n, ast.Call) and self._is_jit_expr(u, n.func)
+                for u in mod.functions.values()
+                for n in self._scan_unit_body(u))
+            if not has_pallas:
+                continue
+            public = [q for q, u in mod.functions.items()
+                      if "." not in q and not q.startswith("_")]
+            for fn in public:
+                lineno = mod.functions[fn].node.lineno
+                if ref is None or f"{fn}_ref" not in ref.functions:
+                    out.append(Finding(
+                        "kernel-ref-pairing", mod.relpath, fn, "ref",
+                        lineno,
+                        f"Pallas kernel {fn}() has no {fn}_ref oracle in "
+                        "kernels/ref.py"))
+                if tests_dir is not None and fn not in test_names \
+                        and f"{fn}_ref" not in test_names:
+                    out.append(Finding(
+                        "kernel-ref-pairing", mod.relpath, fn, "test",
+                        lineno,
+                        f"Pallas kernel {fn}() has no kernel-vs-reference "
+                        "tolerance test under tests/"))
+                wrapped = {w for w, refs in wrapper_refs.items() if fn in refs}
+                if exported is not None and fn not in exported \
+                        and not (wrapped & exported):
+                    out.append(Finding(
+                        "kernel-ref-pairing", mod.relpath, fn, "export",
+                        lineno,
+                        f"Pallas kernel {fn}() is not exported through "
+                        "repro.kernels.__all__ (directly or via its ops "
+                        "wrapper)"))
+        return out
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, tests_dir: pathlib.Path | None = None) -> list[Finding]:
+        findings: list[Finding] = []
+        for uid in sorted(self.reachable()):
+            unit = self._units.get(uid)
+            if unit is not None:
+                findings.extend(self._unit_findings(unit))
+        findings.extend(self._kernel_pairing_findings(tests_dir))
+        findings.sort(key=lambda f: (f.path, f.lineno, f.rule))
+        return findings
+
+
+def apply_baseline(findings: list[Finding], waivers: dict[str, str],
+                   ) -> tuple[list[Finding], list[str]]:
+    """Returns (findings with waived ones annotated, stale waiver keys)."""
+    used: set[str] = set()
+    out: list[Finding] = []
+    for f in findings:
+        reason = waivers.get(f.key)
+        if reason is not None:
+            used.add(f.key)
+            f = dataclasses.replace(f, waived=reason)
+        out.append(f)
+    stale = sorted(set(waivers) - used)
+    return out, stale
+
+
+def lint(root: pathlib.Path, baseline: pathlib.Path | None = None,
+         tests_dir: pathlib.Path | None = None,
+         ) -> tuple[list[Finding], list[str]]:
+    """Lint ``root`` (a package directory).  Returns (findings, stale
+    waiver keys); a finding with ``waived`` set does not fail the gate."""
+    linter = Linter(root)
+    findings = linter.run(tests_dir=tests_dir)
+    waivers = load_baseline(baseline) if baseline is not None else {}
+    return apply_baseline(findings, waivers)
+
+
+DEFAULT_BASELINE = pathlib.Path(__file__).with_name("jaxlint_baseline.txt")
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    here = pathlib.Path(__file__).resolve()
+    repo = here.parents[3]
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--root", type=pathlib.Path, default=repo / "src/repro")
+    p.add_argument("--baseline", type=pathlib.Path, default=DEFAULT_BASELINE)
+    p.add_argument("--tests", type=pathlib.Path, default=repo / "tests")
+    args = p.parse_args(argv)
+
+    try:
+        findings, stale = lint(args.root, args.baseline, args.tests)
+    except BaselineError as e:
+        print(f"jaxlint: baseline error: {e}")
+        return 2
+    live = [f for f in findings if f.waived is None]
+    for f in findings:
+        print(f"jaxlint: {f}")
+    for key in stale:
+        print(f"jaxlint: stale waiver (matches nothing): {key}")
+    n_waived = len(findings) - len(live)
+    print(f"jaxlint: {len(live)} finding(s), {n_waived} waived, "
+          f"{len(stale)} stale waiver(s)")
+    return 1 if live or stale else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,277 @@
+"""Lockset-based dynamic race detector for the evaluation runtime.
+
+The speculative pipeline's concurrency contract is asymmetric: the
+:class:`~repro.core.evalpipe.EvalDispatcher`'s ``landed`` counter and the
+:class:`~repro.core.procurement.ControllerMixin` measurement counter are
+written from worker threads **under a lock**, while the pipeline queue,
+the recycling list and the surrogate
+:class:`~repro.core.surrogate.MeasurementStore` are **unlocked by
+contract** — only the controller thread may touch them, with results
+handed back through futures.  Comments assert this; nothing checked it.
+
+This module checks it, Eraser-style (Savage et al., SOSP '97):
+
+* :class:`TrackedLock` wraps the runtime's real locks (installed by
+  patching ``ControllerMixin._init_decision_log`` and
+  ``EvalDispatcher.__init__``) and maintains a thread-local *held set*.
+* The ``race_access`` seams in :mod:`repro.core.instrumentation` report
+  each guarded-state access (resource label, owning object, read/write).
+* For every resource the detector refines a **candidate lockset** — the
+  intersection of the locks held at every access once a second thread
+  shows up.  An access pattern with >= 2 threads, >= 1 write and an empty
+  candidate lockset is a race: no single lock consistently protected the
+  data.  Single-threaded resources never report (initialization and
+  main-thread-only state stay silent), which is exactly the pipeline's
+  contract — if speculation state ever migrates to a worker thread, the
+  lockset is empty there and the detector fires.
+
+Enable with ``REPRO_RACECHECK=1`` (tests/conftest.py arms it for the
+whole session) or :func:`install`; ``python -m repro.analysis.run
+--race`` drives the evalpipe parity scenarios with ``workers > 1`` under
+it and fails on any report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import traceback
+from typing import Any, Callable
+
+ENV_FLAG = "REPRO_RACECHECK"
+
+
+def enabled() -> bool:
+    return os.environ.get(ENV_FLAG) == "1"
+
+
+class RaceError(AssertionError):
+    """An instrumented shared resource was accessed with an empty
+    candidate lockset from multiple threads."""
+
+
+_HELD = threading.local()
+
+
+def _held() -> set[int]:
+    s = getattr(_HELD, "locks", None)
+    if s is None:
+        s = _HELD.locks = set()
+    return s
+
+
+class TrackedLock:
+    """Drop-in ``threading.Lock`` wrapper that records, per thread, which
+    tracked locks are currently held — the lockset the detector
+    intersects at each ``race_access`` seam."""
+
+    #: Strong refs to every TrackedLock ever created: lockset membership
+    #: is by id(), and a recycled address must never alias a dead lock.
+    _ALL: list["TrackedLock"] = []
+
+    def __init__(self, lock: Any = None, name: str = "lock"):
+        self._lock = lock if lock is not None else threading.Lock()
+        self.name = name
+        TrackedLock._ALL.append(self)
+
+    def acquire(self, *args: Any, **kwargs: Any) -> bool:
+        got = self._lock.acquire(*args, **kwargs)
+        if got:
+            _held().add(id(self))
+        return got
+
+    def release(self) -> None:
+        _held().discard(id(self))
+        self._lock.release()
+
+    def __enter__(self) -> "TrackedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+
+@dataclasses.dataclass
+class _Resource:
+    """Eraser per-resource state.  ``owner`` holds a strong reference so
+    the (label, id(owner)) key can never alias a recycled address."""
+
+    label: str
+    owner: Any = None
+    threads: set[int] = dataclasses.field(default_factory=set)
+    writers: set[int] = dataclasses.field(default_factory=set)
+    # None = virgin (universal set); refined by intersection once the
+    # resource turns shared (>= 2 threads)
+    lockset: set[int] | None = None
+    shared: bool = False
+    accesses: int = 0
+    last_site: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Race:
+    resource: str
+    threads: int
+    writes: bool
+    site: str
+
+    def __str__(self) -> str:
+        kind = "write" if self.writes else "read"
+        return (f"race on {self.resource!r}: {self.threads} threads, "
+                f"inconsistent/empty lockset at {kind} ({self.site})")
+
+
+def _call_site() -> str:
+    # the seam frame is instrumentation.race_access -> our hook; the
+    # interesting frame is race_access's caller (3 frames up)
+    frames = traceback.extract_stack(limit=5)
+    for fr in reversed(frames):
+        fn = fr.filename
+        if "racecheck" not in fn and "instrumentation" not in fn:
+            return f"{fn}:{fr.lineno}"
+    return "?"
+
+
+class RaceChecker:
+    def __init__(self) -> None:
+        self._meta = threading.Lock()      # guards detector state only
+        self._resources: dict[tuple[str, int], _Resource] = {}
+        self._races: dict[tuple[str, str], Race] = {}
+        self._unpatch: list[Callable[[], None]] = []
+        self.installed = False
+
+    # -- the hook ----------------------------------------------------------
+
+    def access(self, resource: str, owner: Any, write: bool = True) -> None:
+        key = (resource, id(owner))
+        tid = threading.get_ident()
+        held = frozenset(_held())
+        site = _call_site()
+        with self._meta:
+            res = self._resources.get(key)
+            if res is None:
+                res = self._resources[key] = _Resource(label=resource,
+                                                       owner=owner)
+            res.accesses += 1
+            res.threads.add(tid)
+            if write:
+                res.writers.add(tid)
+            res.last_site = site
+            if len(res.threads) < 2:
+                # exclusive: one thread so far — initialization and
+                # main-thread-only state need no locks
+                return
+            if not res.shared:
+                res.shared = True
+                res.lockset = set(held)
+            else:
+                assert res.lockset is not None
+                res.lockset &= held
+            if not res.lockset and res.writers:
+                race = Race(resource=resource, threads=len(res.threads),
+                            writes=bool(res.writers), site=site)
+                self._races.setdefault((resource, site), race)
+
+    # -- reporting ---------------------------------------------------------
+
+    def races(self) -> list[Race]:
+        with self._meta:
+            return list(self._races.values())
+
+    def report(self) -> dict[str, Any]:
+        with self._meta:
+            return {
+                "resources": [
+                    {"resource": r.label, "threads": len(r.threads),
+                     "writers": len(r.writers), "accesses": r.accesses,
+                     "shared": r.shared,
+                     "lockset_size": (None if r.lockset is None
+                                      else len(r.lockset))}
+                    for r in self._resources.values()],
+                "races": [str(r) for r in self._races.values()],
+            }
+
+    def assert_race_free(self) -> None:
+        races = self.races()
+        if races:
+            raise RaceError(
+                "lockset violations detected:\n  "
+                + "\n  ".join(str(r) for r in races))
+
+    def reset(self) -> None:
+        with self._meta:
+            self._resources.clear()
+            self._races.clear()
+            TrackedLock._ALL.clear()
+
+    # -- patching ----------------------------------------------------------
+
+    def install(self) -> None:
+        if self.installed:
+            return
+        # flag BEFORE the repro.core import: with REPRO_RACECHECK=1 that
+        # import runs core._arm_analysis(), which calls install() again —
+        # a re-entrant second pass would double-patch the lock seams
+        self.installed = True
+        from repro.core import evalpipe, instrumentation, procurement
+
+        orig_init_log = procurement.ControllerMixin._init_decision_log
+
+        def init_log(ctrl) -> None:
+            orig_init_log(ctrl)
+            ctrl._count_lock = TrackedLock(ctrl._count_lock, "count_lock")
+
+        procurement.ControllerMixin._init_decision_log = init_log
+        self._unpatch.append(lambda: setattr(
+            procurement.ControllerMixin, "_init_decision_log",
+            orig_init_log))
+
+        orig_disp_init = evalpipe.EvalDispatcher.__init__
+
+        def disp_init(disp, *args: Any, **kwargs: Any) -> None:
+            orig_disp_init(disp, *args, **kwargs)
+            disp._lock = TrackedLock(disp._lock, "dispatcher_lock")
+
+        evalpipe.EvalDispatcher.__init__ = disp_init
+        self._unpatch.append(lambda: setattr(
+            evalpipe.EvalDispatcher, "__init__", orig_disp_init))
+
+        instrumentation.RACE_HOOKS.append(self.access)
+        self._unpatch.append(
+            lambda: instrumentation.RACE_HOOKS.remove(self.access))
+
+    def uninstall(self) -> None:
+        while self._unpatch:
+            self._unpatch.pop()()
+        self.installed = False
+
+
+_CHECKER = RaceChecker()
+
+
+def install() -> RaceChecker:
+    _CHECKER.install()
+    return _CHECKER
+
+
+def uninstall() -> None:
+    _CHECKER.uninstall()
+
+
+def maybe_install() -> RaceChecker | None:
+    if enabled():
+        return install()
+    return None
+
+
+def current() -> RaceChecker:
+    return _CHECKER
+
+
+def report() -> dict[str, Any]:
+    return _CHECKER.report()

@@ -1,0 +1,267 @@
+"""The analysis CI gate: ``python -m repro.analysis.run``.
+
+Three sub-gates, all on by default (select with ``--lint`` /
+``--sanitize`` / ``--race``); the process exits nonzero if any selected
+gate fails:
+
+* **lint** — :mod:`repro.analysis.jaxlint` over ``src/repro`` against the
+  checked-in waiver baseline (``jaxlint_baseline.txt``).  Fails on any
+  unwaived finding or any stale waiver.  This is the tier-1 gate.
+
+* **sanitize** — :mod:`repro.analysis.sanitize` armed over steady-state
+  scenarios of the four controllers (procurement, fleet, sizing,
+  surrogate annealer), each run for several rounds on the simulated
+  evaluators.  Fails unless every round after the warm-up compiles
+  nothing (the zero-retrace invariant); prints per-round device->host
+  transfer counts (the ROADMAP item-4 hit list) and writes the full
+  report to ``--report`` (default ``ANALYSIS_SANITIZE.json`` at the repo
+  root).
+
+* **race** — :mod:`repro.analysis.racecheck` armed over the evaluation
+  runtime's concurrent scenarios (pool dispatch with ``workers > 1``
+  from multiple controllers, plus a raw dispatcher hammer).  Fails on
+  any empty-lockset report.
+
+The scenarios mirror the constructions in ``tests/test_evalpipe.py`` —
+small spaces, simulated evaluators — so the gate runs in seconds and
+needs no cluster.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any
+
+_REPO = Path(__file__).resolve().parents[3]
+
+#: Rounds per controller scenario and how many lead rounds may compile.
+#: Only round 0 may trace (the engines, the table build, the first
+#: refit); from round 1 on, zero compilations is the law.
+ROUNDS = 6
+WARMUP = 1
+
+CORES = tuple(range(4, 68, 8))
+
+
+# ---------------------------------------------------------------------------
+# Steady-state scenarios (mirroring tests/test_evalpipe.py fixtures).
+# ---------------------------------------------------------------------------
+
+
+def _procurement(pipelined: bool = False):
+    from repro.core import (EC2_CATALOG_ADJUSTED, Objective,
+                            ProcurementController, make_ec2_space)
+    from repro.core.costmodel import SimulatedEvaluator
+    from repro.core.landscape import BLEND_BEFORE
+
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED, core_counts=CORES)
+    evaluator = SimulatedEvaluator(EC2_CATALOG_ADJUSTED)
+    kw: dict = {}
+    if pipelined:
+        # wall_clock routes measurements through the worker pool — the
+        # configuration where the controller's measurement counter is
+        # written from several threads at once
+        evaluator.wall_clock = True
+        kw = dict(use_pipeline=True, lookahead=8)
+    return ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED, evaluator=evaluator,
+        objective=Objective(lambda_cost=1.0), blend=dict(BLEND_BEFORE),
+        schedule=1.0, seed=0, **kw)
+
+
+def _fleet(eval_workers=None):
+    from repro.core import (EC2_CATALOG, FleetController, Objective,
+                            PenalizedObjective, ServiceCatalog, TenantSpec,
+                            make_ec2_space)
+    from repro.core.costmodel import SimulatedEvaluator
+
+    fams = ("general", "compute", "memory", "storage")
+    cat = ServiceCatalog({f: EC2_CATALOG[f] for f in fams},
+                         capacities={f: 80.0 for f in fams})
+    space = make_ec2_space(cat, core_counts=CORES)
+    tenants = [TenantSpec(f"t{i}", {"wordcount": 1.0, "kmeans": 1.0},
+                          priority=1.0 + 0.25 * i) for i in range(4)]
+    return FleetController(
+        space, cat, SimulatedEvaluator(cat), tenants,
+        objective=PenalizedObjective(Objective(lambda_cost=200.0),
+                                     weight=25.0),
+        steps_per_round=16, seed=0, eval_workers=eval_workers)
+
+
+def _sizing(eval_workers=None):
+    from repro.core.sizing import SizingController, SizingSpace
+    from repro.workloads.microservice import (ContainerSize, MicroserviceDAG,
+                                              RequestClass, ServiceTier)
+
+    tiers = (ServiceTier("gw", base_rate=60.0),
+             ServiceTier("auth", base_rate=80.0))
+    classes = (RequestClass("browse", "gw", {"gw": 1, "auth": 1},
+                            slo_s=0.35),)
+    dag = MicroserviceDAG(tiers, (("gw", "auth"),), classes)
+    spec = SizingSpace(dag,
+                       sizes=(ContainerSize("s", 1, 2.0),
+                              ContainerSize("l", 4, 8.0)),
+                       replica_counts=(1, 2, 3), lambda_cost=0.5,
+                       slo_penalty=50.0)
+    return SizingController(spec, {"browse": 40.0}, steps_per_round=16,
+                            n_chains=4, seed=3, eval_workers=eval_workers)
+
+
+def _surrogate():
+    from repro.core import SurrogateAnnealer
+    from repro.core.state import ConfigSpace, Dimension
+
+    space = ConfigSpace((
+        Dimension("fam", ("a", "b", "c", "d")),
+        Dimension("cores", tuple(range(4, 244, 2))),
+    ))
+
+    def fn(cfg):
+        f = {"a": 1.0, "b": 0.82, "c": 1.15, "d": 0.95}[cfg["fam"]]
+        c = cfg["cores"]
+        return f * (30.0 + 4000.0 / c + 0.9 * c ** 0.8)
+
+    return SurrogateAnnealer(space, fn, half_width=6, n_chains=8,
+                             steps_per_round=32, measures_per_round=4,
+                             n_bootstrap=8, seed=0)
+
+
+def _drive(ctrl) -> None:
+    run = getattr(ctrl, "run", None)
+    if run is not None:
+        run(ROUNDS)
+    close = getattr(ctrl, "close", None)
+    if close is not None:
+        close()
+
+
+# ---------------------------------------------------------------------------
+# Gates.
+# ---------------------------------------------------------------------------
+
+
+def gate_lint(args: argparse.Namespace) -> int:
+    from . import jaxlint
+
+    return jaxlint.main([])
+
+
+def gate_sanitize(args: argparse.Namespace) -> int:
+    from . import sanitize
+
+    san = sanitize.install()
+    san.reset()
+    try:
+        for build in (_procurement, _fleet, _sizing, _surrogate):
+            _drive(build())
+    finally:
+        report = san.report()
+        sanitize.uninstall()
+
+    _print_sanitize(report)
+    out = Path(args.report)
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    print(f"[sanitize] report written to {out}")
+    try:
+        san.assert_steady_state(warmup=WARMUP)
+    except sanitize.RetraceError as e:
+        print(f"[sanitize] FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"[sanitize] OK: zero recompilations after round {WARMUP - 1} "
+          "in every controller")
+    return 0
+
+
+def _print_sanitize(report: dict[str, Any]) -> None:
+    print("[sanitize] per-round entry-point activity "
+          "(calls/compiles) and device->host transfers:")
+    for rec in report["rounds"]:
+        ent = ", ".join(
+            f"{k}={v['calls']}c/{v['compiles']}x"
+            for k, v in sorted(rec["entries"].items())) or "-"
+        print(f"  {rec['controller']:<22} round {rec['round']}: {ent}; "
+              f"transfers={rec['transfers']}")
+
+
+def gate_race(args: argparse.Namespace) -> int:
+    from . import racecheck
+
+    chk = racecheck.install()
+    chk.reset()
+    try:
+        # the parity scenarios with real worker pools (workers > 1):
+        # concurrent landings hammer the dispatcher and controller
+        # counters while the pipeline state stays on the control thread
+        _drive(_fleet(eval_workers=4))
+        _drive(_sizing(eval_workers=4))
+        c = _procurement(pipelined=True)
+        c.run(30)
+        c.close()
+        _raw_dispatcher_hammer()
+        report = chk.report()
+    finally:
+        racecheck.uninstall()
+
+    shared = [r for r in report["resources"] if r["shared"]]
+    print(f"[race] {len(report['resources'])} instrumented resources, "
+          f"{len(shared)} genuinely shared across threads")
+    for r in shared:
+        print(f"  {r['resource']:<14} threads={r['threads']} "
+              f"writers={r['writers']} accesses={r['accesses']} "
+              f"lockset={r['lockset_size']}")
+    if report["races"]:
+        for line in report["races"]:
+            print(f"[race] FAIL: {line}", file=sys.stderr)
+        return 1
+    print("[race] OK: no empty-lockset access patterns")
+    return 0
+
+
+def _raw_dispatcher_hammer(n: int = 64, workers: int = 8) -> None:
+    """Many tiny measurements through one pool dispatcher — maximum
+    concurrency on the ``landed`` counter."""
+    from repro.core import EvalDispatcher, EvalRequest, EvalResult
+
+    disp = EvalDispatcher(lambda r: EvalResult(y=float(r.n)),
+                          mode="pool", max_workers=workers)
+    try:
+        futs = disp.submit_many([
+            EvalRequest(state=(i,), decoded={"x": i}, job="j", n=i)
+            for i in range(n)])
+        for f in futs:
+            f.result()
+    finally:
+        disp.close()
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.run",
+        description="repro static+dynamic analysis gates")
+    p.add_argument("--lint", action="store_true",
+                   help="run the jaxlint gate only (tier-1)")
+    p.add_argument("--sanitize", action="store_true",
+                   help="run the retrace/transfer sanitizer gate only")
+    p.add_argument("--race", action="store_true",
+                   help="run the lockset race-detector gate only")
+    p.add_argument("--report", default=str(_REPO / "ANALYSIS_SANITIZE.json"),
+                   help="where the sanitizer writes its JSON report")
+    args = p.parse_args(argv)
+
+    selected = [name for name, on in
+                (("lint", args.lint), ("sanitize", args.sanitize),
+                 ("race", args.race)) if on] or ["lint", "sanitize", "race"]
+    gates = {"lint": gate_lint, "sanitize": gate_sanitize,
+             "race": gate_race}
+    rc = 0
+    for name in selected:
+        print(f"=== {name} ===")
+        rc = max(rc, gates[name](args))
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -155,3 +155,25 @@ __all__ = [
     "microservice_config_fn",
     "TabuMemory",
 ]
+
+
+def _arm_analysis() -> None:
+    # Opt-in runtime instrumentation: REPRO_SANITIZE=1 wraps the jitted
+    # entry points with retrace/transfer counting, REPRO_RACECHECK=1 arms
+    # the lockset race detector over the evaluation runtime.  Both live in
+    # repro.analysis (core never depends on it except behind these flags)
+    # and register through repro.core.instrumentation hooks, so leaving
+    # the flags unset keeps the hot path untouched.
+    import os
+
+    if os.environ.get("REPRO_SANITIZE") == "1":
+        from repro.analysis import sanitize
+
+        sanitize.install()
+    if os.environ.get("REPRO_RACECHECK") == "1":
+        from repro.analysis import racecheck
+
+        racecheck.install()
+
+
+_arm_analysis()

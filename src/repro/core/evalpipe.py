@@ -64,6 +64,7 @@ import numpy as np
 
 from .annealing import Annealer, Step, acceptance_probability
 from .costmodel import Evaluator
+from .instrumentation import race_access
 from .objective import Measurement
 from .state import ConfigSpace
 from .surrogate import MeasurementStore, SpaceEncoding
@@ -174,6 +175,7 @@ class EvalDispatcher:
     def _run_one(self, req: EvalRequest) -> EvalResult:
         res = self._measure(req)
         with self._lock:
+            race_access("landed", self)
             self.landed += 1
         return res
 
@@ -186,6 +188,9 @@ class EvalDispatcher:
         """Dispatch a batch; returns futures in request order."""
         if not reqs:
             return []
+        # dispatch is main-thread-only by design (the pipeline speculates
+        # serially); the race seam lets the lockset detector verify that
+        race_access("dispatched", self)
         self.dispatched += len(reqs)
         if self.mode == "batched":
             if self._measure_many is not None:
@@ -196,6 +201,7 @@ class EvalDispatcher:
                 raise ValueError(
                     f"measure_many returned {len(results)} results "
                     f"for {len(reqs)} requests")
+            race_access("landed", self)
             self.landed += len(results)
             return [_Landed(r) for r in results]
         pool = self._ensure_pool()
@@ -551,6 +557,11 @@ class SpeculativePipeline:
         futs = self.dispatcher.submit_many(reqs)
         for (spec, attr), fut in zip(slots, futs):
             setattr(spec, attr, fut)
+        # pipeline state (queue, recycled list, chain RNG) is unlocked by
+        # contract: only the controller thread touches it — workers hand
+        # results back through futures.  These seams let the lockset
+        # detector verify the contract instead of trusting the comment.
+        race_access("pipeline", self)
         self._queue.extend(fresh)
 
     # -- resolution --
@@ -563,6 +574,7 @@ class SpeculativePipeline:
         self.store.add(req.state, float(res.y), float(req.n))
 
     def _drain_recycled(self, wait: bool) -> None:
+        race_access("pipeline", self)
         keep: list[tuple[EvalRequest, Any]] = []
         for req, fut in self._recycled:
             if wait or fut.done():
@@ -591,6 +603,7 @@ class SpeculativePipeline:
         rewind the chain RNG to the last resolved transition.  Called on
         a mispredicted acceptance, and by controllers whenever the world
         changed under the speculation — a reheat, a blend reweight."""
+        race_access("pipeline", self)
         if self._queue:
             self.stats.flushes += 1
             while self._queue:
@@ -607,6 +620,7 @@ class SpeculativePipeline:
             raise RuntimeError("pipeline is closed")
         self._drain_recycled(wait=False)
         self._fill()
+        race_access("pipeline", self)
         spec = self._queue.popleft()
         ch = self.chain
 

@@ -45,6 +45,7 @@ import numpy as np
 
 from .annealing import _fleet_nd_jit
 from .change_detect import BatchedPageHinkley
+from .instrumentation import note_round
 from .costmodel import Evaluator
 from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
@@ -562,6 +563,7 @@ class FleetController(ControllerMixin):
             decisions.append(d)
             self.decisions.append(d)
         self._round += 1
+        note_round("FleetController", self)
         return decisions
 
     def run(self, n_rounds: int) -> list[FleetDecision]:

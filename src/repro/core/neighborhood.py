@@ -173,7 +173,11 @@ def flat_index(x, shape: tuple[int, ...]):
     """Row-major flat index of the (ndim,) index vector ``x`` (traced)."""
     import jax.numpy as jnp
 
-    strides = np.cumprod((shape[1:] + (1,))[::-1])[::-1].copy()
+    # pure-Python strides: `shape` is static, and host-library calls are
+    # banned inside traced code (jaxlint host-call-in-jit)
+    strides = [1] * len(shape)
+    for d in range(len(shape) - 2, -1, -1):
+        strides[d] = strides[d + 1] * shape[d + 1]
     return (x * jnp.asarray(strides, x.dtype)).sum()
 
 

@@ -28,6 +28,7 @@ from .evalpipe import (
     SpeculativePipeline,
     measure_requests,
 )
+from .instrumentation import note_round, race_access
 from .landscape import tabulate
 from .neighborhood import Neighborhood, StepNeighborhood
 from .objective import Measurement, Objective
@@ -90,6 +91,7 @@ class ControllerMixin:
         runtime may land measurements from a worker pool, and a lost
         update here would silently inflate the claimed savings."""
         with self._count_lock:
+            race_access("measure_count", self)
             self._n_direct_measures += k
 
     def _measure_batch(
@@ -115,8 +117,14 @@ class ControllerMixin:
         job types tallies k per tabulated state).  ``surrogate_queries``
         counts the objective source's model evaluations."""
         src = getattr(self, "objective_source", None)
+        # read under the same lock the workers write under: the counter is
+        # landed from worker threads and a torn read here would leak into
+        # the decision log
+        with self._count_lock:
+            race_access("measure_count", self, write=False)
+            n = self._n_direct_measures
         return {
-            "true_measures": self._n_direct_measures,
+            "true_measures": n,
             "surrogate_queries":
                 src.surrogate_queries if src is not None else 0,
         }
@@ -384,6 +392,7 @@ class ProcurementController(ControllerMixin):
             surrogate_queries=counts["surrogate_queries"],
         )
         self.decisions.append(d)
+        note_round("ProcurementController", self)
         return d
 
     def run(self, n_jobs: int) -> list[Decision]:

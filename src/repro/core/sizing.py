@@ -48,6 +48,7 @@ from typing import Any, Callable, Mapping, Sequence
 import numpy as np
 
 from .costmodel import Evaluator
+from .instrumentation import note_round
 from .change_detect import PageHinkley
 from .objective import Measurement
 from .procurement import ControllerMixin, Decision
@@ -505,6 +506,7 @@ class SizingController(ControllerMixin):
         )
         self.decisions.append(d)
         self._round += 1
+        note_round("SizingController", self)
         return d
 
     def run(self, n_rounds: int) -> list[SizingDecision]:

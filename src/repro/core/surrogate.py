@@ -57,6 +57,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from .instrumentation import note_round, race_access
 from .landscape import tabulate
 from .state import ConfigSpace, Dimension, EncodedSpace, random_valid_state
 
@@ -145,6 +146,10 @@ class MeasurementStore:
         key = tuple(int(i) for i in state)
         if len(key) != self.ndim:
             raise ValueError(f"state rank {len(key)} != ndim {self.ndim}")
+        # the store is unlocked by contract: all adds/reads happen on the
+        # controller thread (workers hand results back through futures);
+        # the race seam lets the lockset detector verify that contract
+        race_access("store", self)
         # delete-then-insert keeps dict order == refresh order, which makes
         # capacity eviction (pop the front) evict the stalest entry
         self._data.pop(key, None)
@@ -154,6 +159,7 @@ class MeasurementStore:
 
     def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(states (M, ndim) int32, ys (M,) f64, ts (M,) f64), refresh order."""
+        race_access("store", self, write=False)
         if not self._data:
             z = np.zeros(0)
             return np.zeros((0, self.ndim), np.int32), z, z.copy()
@@ -200,6 +206,25 @@ class MeasurementStore:
 # ---------------------------------------------------------------------------
 # The interpolator.
 # ---------------------------------------------------------------------------
+
+
+#: Feature-space coordinate of measurement-padding rows: far beyond any
+#: real feature (which live in [0, 1] per axis), so padded entries can
+#: never be the nearest measurement and their kernel weight underflows
+#: to zero even before the zero recency weight kills them exactly.
+_PAD_FAR = 1.0e3
+
+#: Smallest padded axis length — below this, bucketing buys nothing.
+_PAD_MIN = 64
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (floored at ``_PAD_MIN``): the store grows
+    by a few measurements per round, and without bucketing every refit
+    would present a brand-new (Q, M) shape to the jitted interpolator —
+    one recompilation per controller round, forever (caught by
+    ``repro.analysis.sanitize``)."""
+    return max(_PAD_MIN, 1 << max(0, int(n) - 1).bit_length())
 
 
 @functools.cache
@@ -273,7 +298,21 @@ class SurrogateModel:
         spread = float(ys.max() - ys.min())
         y_scale = spread if spread > 0 else max(1.0, abs(float(ys.mean())))
 
-        xm = jnp.asarray(self.encoding.features(obs))
+        # pad the measurement axis to a power-of-two bucket so the online
+        # store's growth doesn't retrace the jitted interpolator every
+        # round: padded rows sit at _PAD_FAR (never nearest) with zero
+        # recency weight (exactly zero kernel contribution), so the
+        # result is bit-identical to the unpadded call
+        feats_m = self.encoding.features(obs)
+        m_cap = _bucket(len(obs))
+        if m_cap != len(obs):
+            pad = m_cap - len(obs)
+            feats_m = np.concatenate(
+                [feats_m,
+                 np.full((pad, feats_m.shape[1]), _PAD_FAR, np.float32)])
+            ys = np.concatenate([ys, np.zeros(pad)])
+            rec = np.concatenate([rec, np.zeros(pad)])
+        xm = jnp.asarray(feats_m)
         y_d = jnp.asarray(ys, jnp.float32)
         rec_d = jnp.asarray(rec, jnp.float32)
         run = _interp_jit(self.kind)
@@ -281,11 +320,19 @@ class SurrogateModel:
         states = np.asarray(states, np.int64).reshape(-1, self.encoding.ndim)
         means, dmins = [], []
         for lo in range(0, len(states), self.chunk):
-            xq = jnp.asarray(self.encoding.features(states[lo:lo + self.chunk]))
-            m, d = run(xq, xm, y_d, rec_d, self.length_scale,
-                       self.idw_power, self.eps)
-            means.append(np.asarray(m, np.float64))
-            dmins.append(np.asarray(d, np.float64))
+            feats_q = self.encoding.features(states[lo:lo + self.chunk])
+            n_q = len(feats_q)
+            # queries bucket too: the moving window clips at space edges,
+            # and a fresh Q shape is just as much a retrace as a fresh M
+            q_cap = min(_bucket(n_q), self.chunk)
+            if q_cap != n_q:
+                feats_q = np.concatenate(
+                    [feats_q,
+                     np.zeros((q_cap - n_q, feats_q.shape[1]), np.float32)])
+            m, d = run(jnp.asarray(feats_q), xm, y_d, rec_d,
+                       self.length_scale, self.idw_power, self.eps)
+            means.append(np.asarray(m, np.float64)[:n_q])
+            dmins.append(np.asarray(d, np.float64)[:n_q])
         mean = np.concatenate(means)
         unc = y_scale * np.concatenate(dmins)
         return mean, unc
@@ -721,6 +768,7 @@ class SurrogateAnnealer:
             measured=tuple(measured))
         self.rounds.append(rec)
         self._n += 1
+        note_round("SurrogateAnnealer", self)
         return rec
 
     def run(self, n_rounds: int) -> list[SurrogateRound]:

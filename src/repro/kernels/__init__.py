@@ -1,3 +1,31 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public Pallas kernel wrappers (the jitted layout-adapting entry points
+from :mod:`repro.kernels.ops`).
+
+This ``__all__`` is also ``repro.analysis.jaxlint``'s discovery surface
+for the kernel/reference pairing rule: every Pallas kernel entry point in
+this package must be exported here (directly or via its ops wrapper),
+must have a ``<name>_ref`` jnp oracle in :mod:`repro.kernels.ref`, and
+must be covered by a kernel-vs-reference tolerance test under ``tests/``.
+"""
+
+from .ops import (
+    flash_attention,
+    flash_attention_trainable,
+    flash_decode,
+    pairwise_sqdist,
+    quantize_int8,
+    rglru_scan,
+    sizing_latency,
+    wkv6,
+)
+
+__all__ = [
+    "flash_attention",
+    "flash_attention_trainable",
+    "flash_decode",
+    "pairwise_sqdist",
+    "quantize_int8",
+    "rglru_scan",
+    "sizing_latency",
+    "wkv6",
+]

@@ -14,7 +14,6 @@ repro.models.decode) streamed in (1, block_s) tiles.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +77,7 @@ def flash_decode(q, k_cache, v_cache, valid_mask, *, softcap: float = 0.0,
         interpret = jax.default_backend() != "tpu"
 
     kernel = functools.partial(_decode_kernel, n_s=n_s,
-                               scale=1.0 / math.sqrt(hd), softcap=softcap)
+                               scale=hd ** -0.5, softcap=softcap)
     return pl.pallas_call(
         kernel,
         grid=(B, K, n_s),

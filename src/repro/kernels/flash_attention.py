@@ -20,7 +20,6 @@ with double buffering.  MXU dims (block, hd) are multiples of 128.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +127,7 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     kernel = functools.partial(
         _flash_kernel, kind=kind, window=window, softcap=softcap,
         block_q=block_q, block_k=block_k, n_k=n_k, s_k=Sk,
-        scale=1.0 / math.sqrt(hd))
+        scale=hd ** -0.5)
 
     return pl.pallas_call(
         kernel,

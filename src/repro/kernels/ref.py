@@ -112,8 +112,10 @@ def sizing_latency_ref(lam, mu, repl, visit_w, adj, *, c_max: int,
     b = jnp.ones_like(a)
     b_c = jnp.zeros_like(a)
     for k in range(1, int(c_max) + 1):
-        b = a * b / (float(k) + a * b)
-        b_c = jnp.where(c == float(k), b, b_c)
+        # plain int `k`: weakly-typed, promotes to the array dtype without
+        # a host float() coercion (jaxlint host-coercion-in-jit)
+        b = a * b / (k + a * b)
+        b_c = jnp.where(c == k, b, b_c)
     rho = a / jnp.maximum(c, 1.0)
     p_wait = b_c / jnp.maximum(1.0 - rho * (1.0 - b_c), 1e-12)
     slack = c * mu - lam

@@ -1,8 +1,32 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
-host's real (single) device; only launch/dryrun.py forces 512 devices."""
+host's real (single) device; only launch/dryrun.py forces 512 devices.
+
+With ``REPRO_SANITIZE=1`` / ``REPRO_RACECHECK=1`` in the environment
+(the nightly tier-2 CI legs), the whole session runs under the runtime
+sanitizer / lockset race detector from :mod:`repro.analysis`, and the
+session fails at exit on any empty-lockset report — the parity suites
+double as the detectors' concurrency workload."""
 
 import jax
 import pytest
+
+from repro.analysis import racecheck, sanitize
+
+_SANITIZER = sanitize.maybe_install()
+_RACECHECKER = racecheck.maybe_install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _SANITIZER is not None:
+        rep = _SANITIZER.report()
+        tr = rep["transfers_total"]
+        print(f"\n[sanitize] {len(rep['rounds'])} controller rounds "
+              f"observed, {tr} device->host transfers")
+    if _RACECHECKER is not None:
+        races = _RACECHECKER.races()
+        if races:
+            print("\n".join(f"[race] {r}" for r in races))
+            session.exitstatus = 1
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,417 @@
+"""The analysis subsystem: jaxlint rule fixtures (each rule tripped by a
+seeded violation), the waiver baseline contract, the retrace/transfer
+sanitizer on a deliberately-retracing jitted function, and the lockset
+race detector on a deliberately-unlocked shared counter."""
+
+import textwrap
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxlint, racecheck, sanitize
+from repro.analysis.jaxlint import (
+    BaselineError,
+    Linter,
+    apply_baseline,
+    load_baseline,
+)
+from repro.analysis.racecheck import RaceChecker, RaceError, TrackedLock
+from repro.analysis.sanitize import RetraceError, Sanitizer, _JitProbe
+
+
+# ---------------------------------------------------------------------------
+# jaxlint: one fixture package per rule, each tripping exactly that rule.
+# ---------------------------------------------------------------------------
+
+
+def _lint(tmp_path, files, tests=None):
+    root = tmp_path / "fixpkg"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    tests_dir = None
+    if tests is not None:
+        tests_dir = tmp_path / "tests"
+        tests_dir.mkdir(exist_ok=True)
+        for rel, src in tests.items():
+            (tests_dir / rel).write_text(textwrap.dedent(src))
+    return Linter(root).run(tests_dir=tests_dir)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def test_lint_host_call_in_jit(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import math
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x * math.sqrt(2.0)
+    """})
+    assert _rules(findings) == {"host-call-in-jit"}
+    assert findings[0].symbol == "math.sqrt"
+
+
+def test_lint_host_call_reached_transitively(tmp_path):
+    # numpy in a helper that a jitted function reaches through a call
+    findings = _lint(tmp_path, {"mod.py": """
+        import numpy as np
+        import jax
+
+        def helper(x):
+            return np.cumprod(x)
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """})
+    assert _rules(findings) == {"host-call-in-jit"}
+    assert findings[0].qualname == "helper"
+
+
+def test_lint_host_coercion_in_jit(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) + x.item()
+    """})
+    assert _rules(findings) == {"host-coercion-in-jit"}
+    assert {f.symbol for f in findings} == {"float", ".item"}
+
+
+def test_lint_mutable_default_in_jit(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import jax
+
+        @jax.jit
+        def f(x, acc=[]):
+            return x
+    """})
+    assert _rules(findings) == {"mutable-default-in-jit"}
+
+
+def test_lint_scalar_into_jnp(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, y):
+            return x + jnp.asarray(float(y))
+    """})
+    assert "scalar-into-jnp" in _rules(findings)
+
+
+def test_lint_pallas_kernel_roots_are_reachable(tmp_path):
+    # the functools.partial(_kernel, ...) -> pl.pallas_call(kernel) idiom
+    # must make the kernel body jit-reachable
+    findings = _lint(tmp_path, {"kernels/mod.py": """
+        import functools
+        import math
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref, *, scale):
+            o_ref[...] = x_ref[...] * math.exp(scale)
+
+        def entry(x):
+            kernel = functools.partial(_kernel, scale=2.0)
+            return pl.pallas_call(kernel, out_shape=None)(x)
+    """})
+    assert any(f.rule == "host-call-in-jit" and f.qualname == "_kernel"
+               for f in findings)
+
+
+def test_lint_clean_module_has_no_findings(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return jnp.tanh(x) * 2.0
+    """})
+    assert findings == []
+
+
+def test_lint_kernel_ref_pairing(tmp_path):
+    files = {
+        "kernels/__init__.py": "__all__ = []\n",
+        "kernels/foo.py": """
+            from jax.experimental import pallas as pl
+
+            def _foo_kernel(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def foo(x):
+                return pl.pallas_call(_foo_kernel, out_shape=None)(x)
+        """,
+    }
+    findings = _lint(tmp_path, files, tests={})
+    assert _rules(findings) == {"kernel-ref-pairing"}
+    # missing oracle, missing tolerance test, missing export
+    assert {f.symbol for f in findings} == {"ref", "test", "export"}
+
+    # adding ref.py, a test referencing the kernel, and the export
+    # silences all three
+    files["kernels/ref.py"] = """
+        def foo_ref(x):
+            return x
+    """
+    files["kernels/__init__.py"] = "__all__ = ['foo']\n"
+    ok = _lint(tmp_path, files, tests={"test_foo.py": """
+        from fixpkg.kernels.foo import foo
+
+        def test_foo():
+            assert foo is not None
+    """})
+    assert ok == []
+
+
+# ---------------------------------------------------------------------------
+# The waiver baseline contract.
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_requires_reasons(tmp_path):
+    b = tmp_path / "baseline.txt"
+    b.write_text("rule:path.py:fn:sym\n")
+    with pytest.raises(BaselineError):
+        load_baseline(b)
+    b.write_text("rule:path.py:fn:sym = justified because reasons\n")
+    assert load_baseline(b) == {
+        "rule:path.py:fn:sym": "justified because reasons"}
+
+
+def test_baseline_waives_and_reports_stale(tmp_path):
+    findings = _lint(tmp_path, {"mod.py": """
+        import math
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x * math.sqrt(2.0)
+    """})
+    (f,) = findings
+    annotated, stale = apply_baseline(findings, {f.key: "ok because fixture"})
+    assert annotated[0].waived == "ok because fixture"
+    assert stale == []
+    _, stale = apply_baseline(findings, {f.key: "ok", "gone:x:y:z": "old"})
+    assert stale == ["gone:x:y:z"]
+
+
+def test_lint_cli_gate_exit_codes(tmp_path):
+    root = tmp_path / "fixpkg"
+    root.mkdir()
+    (root / "mod.py").write_text(textwrap.dedent("""
+        import math
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x * math.sqrt(2.0)
+    """))
+    empty = tmp_path / "empty_baseline.txt"
+    empty.write_text("")
+    # seeded violation, no waiver -> nonzero
+    assert jaxlint.main(["--root", str(root), "--baseline", str(empty)]) == 1
+    # waived with reason -> zero
+    key = "host-call-in-jit:fixpkg/mod.py:f:math.sqrt"
+    waived = tmp_path / "baseline.txt"
+    waived.write_text(f"{key} = fixture\n")
+    assert jaxlint.main(["--root", str(root), "--baseline", str(waived)]) == 0
+    # stale waiver -> nonzero again
+    waived.write_text(f"{key} = fixture\nstale:a.py:f:x = old\n")
+    assert jaxlint.main(["--root", str(root), "--baseline", str(waived)]) == 1
+
+
+def test_repo_lint_gate_is_green():
+    """The merge invariant: the repo's own lint has no unwaived findings
+    and no stale waivers."""
+    assert jaxlint.main([]) == 0
+
+
+# ---------------------------------------------------------------------------
+# sanitize: retrace counting and the steady-state invariant.
+# ---------------------------------------------------------------------------
+
+
+def test_sanitizer_flags_deliberately_retracing_function():
+    san = Sanitizer()
+    probe = _JitProbe("anneal_chain_nd", jax.jit(lambda x: x * 2.0), san)
+    probe(jnp.ones(4))
+    san.note_round("Ctl", None)
+    probe(jnp.ones(8))              # new shape -> retrace in round 1
+    san.note_round("Ctl", None)
+    assert san.entries["anneal_chain_nd"].calls == 2
+    assert san.entries["anneal_chain_nd"].compiles == 2
+    with pytest.raises(RetraceError) as e:
+        san.assert_steady_state(warmup=1)
+    assert "anneal_chain_nd" in str(e.value)
+
+
+def test_sanitizer_stable_shapes_are_steady():
+    san = Sanitizer()
+    probe = _JitProbe("anneal_chain_nd", jax.jit(lambda x: x + 1.0), san)
+    for _ in range(3):
+        probe(jnp.ones(16))
+        san.note_round("Ctl", None)
+    san.assert_steady_state(warmup=1)
+    assert [r["entries"].get("anneal_chain_nd", {}).get("compiles", 0)
+            for r in san.rounds] == [1, 0, 0]
+
+
+def test_sanitizer_counts_device_to_host_transfers():
+    if sanitize.current().installed:        # env-armed session: observe only
+        san = sanitize.current()
+        before = san.transfers
+        np.asarray(jnp.arange(4))
+        assert san.transfers > before
+        return
+    san = sanitize.install()
+    try:
+        san.reset()
+        np.asarray(jnp.arange(4))           # device -> host
+        jax.device_get(jnp.arange(4))
+        np.asarray(np.arange(4))            # host -> host: NOT a transfer
+        assert san.transfers == 2
+    finally:
+        sanitize.uninstall()
+
+
+def test_fleet_controller_steady_state_zero_retrace():
+    """End-to-end: three fleet rounds under the sanitizer retrace nothing
+    after round 0 (the hard acceptance invariant of the analysis gate)."""
+    from repro.analysis import run as gates
+
+    pre_armed = sanitize.current().installed
+    san = sanitize.current() if pre_armed else sanitize.install()
+    mark = len(san.rounds)
+    try:
+        gates._fleet().run(3)
+        rounds = [r for r in san.rounds[mark:]
+                  if r["controller"] == "FleetController"]
+        assert len(rounds) == 3
+        assert all(d["compiles"] == 0
+                   for r in rounds[1:] for d in r["entries"].values())
+    finally:
+        if not pre_armed:
+            sanitize.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# racecheck: locksets.
+# ---------------------------------------------------------------------------
+
+
+def _hammer(fn, n_threads=4, n_iter=200):
+    threads = [threading.Thread(target=fn) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def test_racecheck_flags_unlocked_shared_counter():
+    chk = RaceChecker()
+    owner = object()
+    state = {"n": 0}
+
+    def worker():
+        for _ in range(200):
+            chk.access("counter", owner, write=True)
+            state["n"] += 1                 # deliberately unlocked
+
+    _hammer(worker)
+    assert any(r.resource == "counter" for r in chk.races())
+    with pytest.raises(RaceError):
+        chk.assert_race_free()
+
+
+def test_racecheck_consistent_lock_is_silent():
+    chk = RaceChecker()
+    owner = object()
+    lock = TrackedLock(name="guard")
+    state = {"n": 0}
+
+    def worker():
+        for _ in range(200):
+            with lock:
+                chk.access("counter", owner, write=True)
+                state["n"] += 1
+
+    _hammer(worker)
+    chk.assert_race_free()
+    assert state["n"] == 800
+
+
+def test_racecheck_flags_unlocked_read_against_locked_writes():
+    # the exact shape of the bug fixed in ControllerMixin: workers write
+    # under the lock, a reader polls without it
+    chk = RaceChecker()
+    owner = object()
+    lock = TrackedLock(name="guard")
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            with lock:
+                chk.access("counter", owner, write=True)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(200):
+            chk.access("counter", owner, write=False)   # unlocked read
+    finally:
+        stop.set()
+        t.join()
+    assert any(r.resource == "counter" for r in chk.races())
+
+
+def test_racecheck_over_pool_dispatcher_is_clean():
+    """The evaluation runtime under the detector with real concurrency:
+    worker-thread landings under the dispatcher lock, main-thread
+    dispatch — no empty-lockset pattern."""
+    from repro.core import EvalDispatcher, EvalRequest, EvalResult
+
+    pre_armed = racecheck.current().installed
+    chk = racecheck.current() if pre_armed else racecheck.install()
+    try:
+        disp = EvalDispatcher(lambda r: EvalResult(y=float(r.n)),
+                              mode="pool", max_workers=8)
+        try:
+            futs = disp.submit_many([
+                EvalRequest(state=(i,), decoded={"x": i}, job="j", n=i)
+                for i in range(64)])
+            assert [f.result().y for f in futs] == [float(i)
+                                                    for i in range(64)]
+        finally:
+            disp.close()
+        chk.assert_race_free()
+    finally:
+        if not pre_armed:
+            racecheck.uninstall()
+
+
+def test_racecheck_over_fleet_workers_is_clean():
+    from repro.analysis import run as gates
+
+    pre_armed = racecheck.current().installed
+    chk = racecheck.current() if pre_armed else racecheck.install()
+    try:
+        ctrl = gates._fleet(eval_workers=4)
+        ctrl.run(2)
+        assert ctrl.evaluation_counts()["true_measures"] > 0
+        chk.assert_race_free()
+    finally:
+        if not pre_armed:
+            racecheck.uninstall()
