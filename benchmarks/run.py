@@ -11,7 +11,7 @@ import sys
 
 from . import blended_workloads, container_sizing, dnn_annealing, \
     fleet_arbitration, kernel_bench, paper_figures, pipeline_overlap, \
-    roofline_table, surrogate_scale
+    roofline_table, surrogate_scale, trace_fleet
 from .common import write_json
 
 SUITES = {
@@ -24,6 +24,7 @@ SUITES = {
     "surrogate_scale": surrogate_scale.run_all,
     "container_sizing": container_sizing.run_all,
     "pipeline_overlap": pipeline_overlap.run_all,
+    "trace_fleet": trace_fleet.run_all,
 }
 
 

@@ -1,6 +1,6 @@
 """Runtime sanitizer for the compiled control loop (``REPRO_SANITIZE=1``).
 
-ROADMAP item 4's premise is that the controllers' steady-state rounds run
+ROADMAP item 3's premise is that the controllers' steady-state rounds run
 entirely out of compiled code: the first round may trace, every later
 round must reuse its executables.  Nothing enforced that — a drifting
 static argument or a shape wobble retraces silently and the "light-weight
@@ -9,7 +9,9 @@ entry points
 
 * ``anneal_chain_nd``'s kernel (``repro.core.annealing._chain_nd_jit``),
 * the fleet kernel (``_fleet_nd_jit``, including the binding
-  ``repro.core.fleet`` imported at module load),
+  ``repro.core.fleet`` imported at module load, and the shard_map'd
+  per-mesh instances built by ``_fleet_shard_jit`` — both count under
+  the ``anneal_fleet`` entry),
 * ``evaluate_sizing_batch`` (compiles through ``SizingSpace._eval_jit``),
 * the surrogate refit (``repro.core.surrogate._interp_jit``),
 
@@ -184,6 +186,17 @@ class Sanitizer:
         self._patch(annealing, "_fleet_nd_jit", probe_fleet)
         # fleet.py binds the name at import time — patch that site too
         self._patch(fleet, "_fleet_nd_jit", probe_fleet)
+
+        # the sharded fleet path builds per-(mesh, shape) jitted kernels
+        # through a cached factory — wrap each built instance in a probe
+        # (the surrogate._interp_jit pattern), same entry-point bucket
+        orig_shard = annealing._fleet_shard_jit
+
+        @functools.cache
+        def shard_jit(*key):
+            return _JitProbe("anneal_fleet", orig_shard(*key), self)
+
+        self._patch(annealing, "_fleet_shard_jit", shard_jit)
 
         orig_esb = sizing.evaluate_sizing_batch
         san = self

@@ -10,6 +10,8 @@ from .annealing import (
     anneal_chain_dynamic,
     anneal_chain_nd,
     anneal_fleet,
+    chain_bucket,
+    fleet_chains,
     first_hit_time,
     jobs_to_min_vs_tau,
     jobs_to_min_vs_tau_fleet,
@@ -28,6 +30,7 @@ from .evalpipe import (
     measure_requests,
 )
 from .fleet import FleetController, FleetDecision, TenantSpec
+from .trace_replay import TraceReplayController
 from .costmodel import (
     Evaluator,
     MeasuredEvaluator,
@@ -122,6 +125,7 @@ __all__ = [
     "Annealer", "ChainSnapshot", "Step", "acceptance_probability",
     "anneal_chain",
     "anneal_chain_dynamic", "anneal_chain_nd", "anneal_fleet",
+    "chain_bucket", "fleet_chains",
     "first_hit_time", "jobs_to_min_vs_tau", "jobs_to_min_vs_tau_fleet",
     "random_valid_states",
     "BatchedPageHinkley", "PageHinkley", "WindowedZScore",
@@ -129,6 +133,7 @@ __all__ = [
     "ResolvedStep", "SpeculativePipeline", "StorePredictor",
     "map_pool", "measure_requests",
     "FleetController", "FleetDecision", "TenantSpec",
+    "TraceReplayController",
     "Evaluator", "MeasuredEvaluator", "RooflineEvaluator",
     "SimulatedEvaluator", "StepCosts", "objective_of",
     "BLEND_AFTER", "BLEND_BEFORE", "HIBENCH_JOBS", "JobModel",

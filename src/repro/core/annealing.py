@@ -486,6 +486,143 @@ def _fleet_nd_jit(keys, y_flat, valid_flat, taus, inits, extra,
     )(keys, taus, inits, y_flat, extra)
 
 
+# ---------------------------------------------------------------------------
+# Fleet-chain dispatch: bucket-padded chain axis + optional shard_map over
+# tenant blocks (the 1k+-tenant scaling path of the trace-driven fleet).
+# ---------------------------------------------------------------------------
+
+
+def chain_bucket(n: int, multiple: int = 1) -> int:
+    """Next power-of-two >= ``n``, rounded up to a ``multiple`` (device
+    count).  The fleet pads its chain axis to these buckets so a churning
+    tenant count (arrivals/departures every round) hits a handful of
+    compiled shapes instead of retracing per fleet size — the sanitizer's
+    steady-state zero-retrace invariant with churn depends on it."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    p = 1
+    while p < n:
+        p *= 2
+    if multiple > 1 and p % multiple:
+        p = ((p + multiple - 1) // multiple) * multiple
+    return p
+
+
+def _pad_chains(a: np.ndarray, p: int) -> np.ndarray:
+    """Pad axis 0 from C to ``p`` by repeating row 0 (valid chain data —
+    the padding chains run and are sliced away; per-chain independence of
+    the vmapped kernel keeps rows 0..C-1 bit-identical)."""
+    pad = p - a.shape[0]
+    if pad == 0:
+        return a
+    return np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_shard_jit(mesh, shape, categorical, noise_std, has_valid,
+                     has_extra):
+    """Build (and cache per mesh/shape) the shard_map'd fleet kernel:
+    chains are split over the mesh's ``"tenants"`` axis, each device runs
+    its block through the same vmapped :func:`_chain_nd_core`, results
+    concatenate back.  Chains never communicate (coupling enters as
+    precomputed ``extra`` rows), so the math is embarrassingly parallel
+    and the single-device instance is bit-identical to the direct
+    :func:`_fleet_nd_jit` dispatch — the parity tests pin that."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    row = PartitionSpec("tenants")
+    rep = PartitionSpec()
+
+    def run(kd, y_flat, taus, inits, *rest):
+        i = 0
+        valid_flat = None
+        if has_valid:
+            valid_flat, i = rest[0], 1
+        extra = rest[i] if has_extra else None
+        keys = jax.random.wrap_key_data(kd)
+
+        def one(key, tau_row, init, y, e):
+            return _chain_nd_core(
+                key, y, valid_flat, tau_row, init, shape=shape,
+                categorical=categorical, dynamic=False,
+                noise_std=noise_std, extra_flat=e)
+
+        return jax.vmap(
+            one, in_axes=(0, 0, 0, 0, 0 if has_extra else None),
+        )(keys, taus, inits, y_flat, extra)
+
+    body = shard_map(
+        run, mesh=mesh,
+        in_specs=(row, row, row, row)
+        + ((rep,) if has_valid else ())
+        + ((row,) if has_extra else ()),
+        out_specs=(row, row, row),
+        check_rep=False)
+    return jax.jit(body)
+
+
+def fleet_chains(
+    keys: jax.Array,
+    tables: np.ndarray | jax.Array,      # (C, size) float32, per-chain
+    valid_flat: jax.Array | None,        # (size,) bool or None
+    taus: np.ndarray,                    # (C, n_steps)
+    inits: np.ndarray,                   # (C, ndim) int32
+    extra: np.ndarray | None,            # (C, size) or None
+    *,
+    shape: tuple[int, ...],
+    categorical: tuple,
+    noise_std: float = 0.0,
+    mesh=None,
+    bucket: bool = True,
+):
+    """Run C per-chain-table fleet chains, bucket-padded and optionally
+    sharded over tenant blocks.
+
+    The chain axis is padded to :func:`chain_bucket` (pow-2, rounded to
+    the mesh's device count) by repeating chain 0, so a fleet whose
+    tenant count churns every round reuses a handful of compiled shapes.
+    With ``mesh=None`` (or a falsy bucket and no mesh) this is exactly
+    the direct :func:`_fleet_nd_jit` dispatch of the historical fleet hot
+    path; with a mesh, chains run under ``shard_map`` over the mesh's
+    ``"tenants"`` axis — bit-identical per chain (chains are independent;
+    the parity tests enforce it).  Returns ``(states, ys, accepts)``
+    sliced back to the true C.
+    """
+    C = int(np.shape(tables)[0])
+    n_dev = 1 if mesh is None else int(mesh.devices.size)
+    if bucket:
+        P = chain_bucket(C, n_dev)
+    elif C % n_dev:
+        P = ((C + n_dev - 1) // n_dev) * n_dev
+    else:
+        P = C
+    kd = np.asarray(jax.random.key_data(keys))
+    kd_p = _pad_chains(kd, P)
+    tab_p = jnp.asarray(_pad_chains(np.asarray(tables, np.float32), P))
+    taus_p = jnp.asarray(_pad_chains(np.asarray(taus, np.float32), P))
+    init_p = jnp.asarray(_pad_chains(np.asarray(inits, np.int32), P))
+    ext_p = (None if extra is None else
+             jnp.asarray(_pad_chains(np.asarray(extra, np.float32), P)))
+    if mesh is not None:
+        fn = _fleet_shard_jit(
+            mesh, tuple(shape), tuple(categorical), float(noise_std),
+            valid_flat is not None, extra is not None)
+        args = (jnp.asarray(kd_p), tab_p, taus_p, init_p)
+        if valid_flat is not None:
+            args += (valid_flat,)
+        if ext_p is not None:
+            args += (ext_p,)
+        st, ys, acc = fn(*args)
+    else:
+        st, ys, acc = _fleet_nd_jit(
+            jax.random.wrap_key_data(jnp.asarray(kd_p)), tab_p,
+            valid_flat, taus_p, init_p, ext_p, shape=tuple(shape),
+            categorical=tuple(categorical), dynamic=False,
+            noise_std=float(noise_std), per_chain=True)
+    return st[:C], ys[:C], acc[:C]
+
+
 def _default_init(enc: EncodedSpace) -> np.ndarray:
     if enc.valid_mask is None:
         return np.zeros(enc.ndim, np.int32)

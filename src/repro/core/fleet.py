@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .annealing import _fleet_nd_jit
+from .annealing import _fleet_nd_jit, fleet_chains
 from .change_detect import BatchedPageHinkley
 from .instrumentation import note_round
 from .costmodel import Evaluator
@@ -144,6 +144,12 @@ class FleetController(ControllerMixin):
         objective_source: ObjectiveSource | None = None,
         config_fn: "Callable[[Mapping[str, Any]], ClusterConfig] | None" = None,
         eval_workers: int | None = None,
+        incremental: bool = False,
+        settle_rounds: int = 3,
+        mesh: Any = None,
+        chain_bucketing: bool = True,
+        ledger_check_every: int = 64,
+        keep_decision_log: bool = True,
     ):
         if not tenants:
             raise ValueError("at least one tenant required")
@@ -167,6 +173,27 @@ class FleetController(ControllerMixin):
         # evaluators, one batched measure_many call otherwise — see
         # repro.core.evalpipe.measure_requests)
         self.eval_workers = eval_workers
+        # -- scaling knobs (trace-driven fleets at 1k+ tenants) --
+        # incremental rounds: re-anneal only tenants whose detectors
+        # fired / whose workload changed / who just arrived; the rest
+        # carry their incumbent (settle_rounds extra rounds after any of
+        # those events let a freshly perturbed chain converge)
+        if settle_rounds < 1:
+            raise ValueError("settle_rounds must be >= 1")
+        self.incremental = bool(incremental)
+        self.settle_rounds = int(settle_rounds)
+        # mesh: shard the per-round chain fleet over the mesh's "tenants"
+        # axis (launch.mesh.make_tenant_mesh); None = direct dispatch.
+        # chain_bucketing pads the chain axis to pow-2 buckets so churning
+        # tenant counts reuse compiled shapes (zero steady-state retraces)
+        self.mesh = mesh
+        self.chain_bucketing = bool(chain_bucketing)
+        # every N rounds, cross-check the incrementally maintained
+        # reservation mirror against a from-scratch recompute (0 = never)
+        self.ledger_check_every = int(ledger_check_every)
+        # huge replays (1k tenants x hundreds of rounds) opt out of
+        # retaining every FleetDecision; round() still returns them
+        self.keep_decision_log = bool(keep_decision_log)
         self.objective_source = (ExhaustiveSource()
                                  if objective_source is None
                                  else objective_source)
@@ -198,7 +225,6 @@ class FleetController(ControllerMixin):
                             else self._enc.valid_mask.reshape(-1))
         self._valid_jnp = (None if self._enc.valid_mask is None
                            else jnp.asarray(self._valid_flat))
-        self._tables_jnp = None     # (T, S) device copy; rebuilt on change
         for s in range(S):
             idx = np.unravel_index(s, self._shape)
             cfg = self._config_of(space.decode([int(i) for i in idx]))
@@ -241,6 +267,20 @@ class FleetController(ControllerMixin):
                           else None)
         self._reheat_pending = [False] * len(tenants)
         self._prev_cfgs = [None] * len(tenants)
+        # per-tenant PERSISTENT chain-RNG stream ids: never reused, so a
+        # same-round remove+add swap cannot hand the newcomer the
+        # departed tenant's RNG stream (keys were positional before), and
+        # a tenant's walk is invariant to who else is in the fleet — the
+        # property that makes incremental rounds decision-identical to
+        # full rounds on the re-annealed tenants
+        self._stream_ids = np.arange(len(tenants), dtype=np.int64)
+        self._next_stream_id = len(tenants)
+        # rounds of forced re-annealing left per tenant (arrival / drift /
+        # table change reset it to settle_rounds); incremental rounds
+        # anneal only tenants with _settle > 0 or a pending reheat
+        self._settle = np.full(len(tenants), self.settle_rounds, np.int64)
+        self._decode_cache: dict[int, tuple[dict[str, Any],
+                                            ClusterConfig]] = {}
         self._round = 0
         self.violation_history: list[float] = []
         self._mirror_reservations()
@@ -300,7 +340,9 @@ class FleetController(ControllerMixin):
     ) -> np.ndarray:
         """(T, size) penalty rows: for tenant i at candidate state s, the
         weighted aggregate capacity + budget overshoot given the OTHER
-        tenants' incumbent allocations."""
+        tenants' incumbent allocations.  Fully vectorized over tenants
+        (the per-tenant Python loop it replaces was an O(T) interpreter
+        cost per round that dominated at 1k+ tenants)."""
         inc = np.asarray(
             self._incumbents if incumbents is None else incumbents,
             np.int64)
@@ -309,13 +351,17 @@ class FleetController(ControllerMixin):
             raise ValueError(f"incumbents shape {inc.shape} != ({T},)")
         agg_cores = self._cores_by_family[:, inc].sum(1)       # (F,)
         agg_spend = float(self._spend_rate[inc].sum())
-        rows = np.zeros((T, self._enc.size()), np.float64)
-        for i in range(T):
-            others_c = agg_cores - self._cores_by_family[:, inc[i]]
-            others_s = agg_spend - self._spend_rate[inc[i]]
-            rows[i] = self.objective.penalize(
-                0.0, self._overshoot_row(others_c, others_s))
-        return rows
+        others_c = agg_cores[:, None] - self._cores_by_family[:, inc]  # (F,T)
+        others_s = agg_spend - self._spend_rate[inc]                   # (T,)
+        over_c = np.clip(
+            self._cores_by_family[:, None, :]
+            + (others_c - self._capacity[:, None])[:, :, None],
+            0.0, None).sum(0)                                  # (T, size)
+        over_b = np.clip(
+            self._spend_rate[None, :]
+            + (others_s - self.budget_usd_hr)[:, None],
+            0.0, None)                                         # (T, size)
+        return self.objective.penalize(0.0, over_c + over_b)
 
     def coupling_penalty(self, enc, n_chains: int) -> np.ndarray:
         """The :func:`anneal_fleet` ``coupling_penalty`` hook form: current
@@ -367,7 +413,9 @@ class FleetController(ControllerMixin):
         return (cores - self._cores_by_family[:, states[i]],
                 spend - self._spend_rate[states[i]])
 
-    def _best_feasible(self, i: int, states: np.ndarray) -> int:
+    def _best_feasible_from(
+        self, i: int, cores_wo: np.ndarray, spend_wo: float
+    ) -> int:
         """Tenant i's best valid state that adds no MARGINAL overshoot
         beyond what the other tenants already cause; the global cheapest
         valid state if every state would deepen the breach.  Marginal —
@@ -375,7 +423,6 @@ class FleetController(ControllerMixin):
         others' overshoot is a constant across ALL of tenant i's candidate
         states, and testing against total overshoot would declare nothing
         fitting and churn tenants that use none of the breached resource."""
-        cores_wo, spend_wo = self._others_usage(i, states)
         row = self._overshoot_row(cores_wo, spend_wo)
         others_v = self._overshoot(cores_wo, spend_wo)
         fits = self._valid_flat & (row - others_v <= 1e-9)
@@ -384,44 +431,61 @@ class FleetController(ControllerMixin):
         y = self._tenant_tables[i]
         return int(np.where(fits, y, np.inf).argmin())
 
+    def _best_feasible(self, i: int, states: np.ndarray) -> int:
+        return self._best_feasible_from(*(
+            (i,) + self._others_usage(i, states)))
+
     def _arbitrate(
         self, proposals: np.ndarray, pen_tables: np.ndarray
     ) -> tuple[np.ndarray, list[str]]:
         """Greedy admission by priority-weighted improvement, then a
         preemption repair pass (lowest priority first) if the assignment is
-        still infeasible.  ``pen_tables`` is (T, size): base + coupling."""
+        still infeasible.  ``pen_tables`` is (T, size): base + coupling.
+
+        Feasibility is tracked by INCREMENTAL delta updates to one running
+        (cores-by-family, $/hr) aggregate — O(F) per admission trial
+        instead of the O(T) from-scratch re-aggregation per trial this
+        replaces (which made the admission pass O(T^2) at 1k tenants).
+        The per-round :meth:`_ledger_crosscheck` guards the running
+        aggregate's integrity against a from-scratch recompute."""
         T = len(self.tenants)
         cur = self._incumbents.copy()
-        deltas = np.asarray([
-            pen_tables[i, cur[i]] - pen_tables[i, proposals[i]]
-            for i in range(T)])
+        cores, spend = self._aggregate(cur)
+        rng_t = np.arange(T)
+        deltas = pen_tables[rng_t, cur] - pen_tables[rng_t, proposals]
         weights = np.asarray([t.priority for t in self.tenants])
         order = np.argsort(-(weights * deltas), kind="stable")
         actions = ["hold"] * T
         for i in order:
             if proposals[i] == cur[i] or deltas[i] <= 0:
                 continue
-            trial = cur.copy()
-            trial[i] = proposals[i]
-            if self._feasible(trial):
-                cur = trial
+            dc = (self._cores_by_family[:, proposals[i]]
+                  - self._cores_by_family[:, cur[i]])
+            ds = self._spend_rate[proposals[i]] - self._spend_rate[cur[i]]
+            if self._overshoot(cores + dc, spend + ds) <= 1e-9:
+                cores, spend = cores + dc, spend + ds
+                cur[i] = proposals[i]
                 actions[i] = "admit"
             else:
                 actions[i] = "defer"
-        if not self._feasible(cur):
+        if self._overshoot(cores, spend) > 1e-9:
             # incumbents themselves violate (shrunk capacity, hot start):
             # preempt lowest-priority tenants onto their best fitting
             # state — but only tenants actually CONTRIBUTING to the breach
             # (moving a tenant whose marginal overshoot is zero costs a
             # migration and reduces the violation by nothing)
             for i in sorted(range(T), key=lambda i: weights[i]):
-                if self._feasible(cur):
+                v = self._overshoot(cores, spend)
+                if v <= 1e-9:
                     break
-                others_v = self._overshoot(*self._others_usage(i, cur))
-                if self._violation(cur) - others_v <= 1e-9:
+                cores_wo = cores - self._cores_by_family[:, cur[i]]
+                spend_wo = spend - self._spend_rate[cur[i]]
+                if v - self._overshoot(cores_wo, spend_wo) <= 1e-9:
                     continue
-                best = self._best_feasible(i, cur)
+                best = self._best_feasible_from(i, cores_wo, spend_wo)
                 if best != cur[i]:
+                    cores = cores_wo + self._cores_by_family[:, best]
+                    spend = spend_wo + float(self._spend_rate[best])
                     cur[i] = best
                     actions[i] = "preempt"
         return cur, actions
@@ -430,9 +494,47 @@ class FleetController(ControllerMixin):
     # the control round
     # ------------------------------------------------------------------
 
+    def _chain_keys(self, r: int, ids: np.ndarray) -> jax.Array:
+        """Per-tenant chain keys for round ``r`` from the PERSISTENT
+        stream ids: ``fold_in(fold_in(key, r), id)``.  The positional
+        ``jax.random.split`` keys this replaces tied a tenant's chain to
+        its INDEX in the fleet — a same-round departure+arrival handed
+        the newcomer the departed tenant's exact RNG stream, and any
+        churn shifted every later tenant's walk.  Id-derived keys make a
+        tenant's chain invariant to fleet composition, which is also what
+        makes incremental rounds decision-identical to full rounds on the
+        tenants they do re-anneal."""
+        base = jax.random.fold_in(self._key, r)
+        return jax.vmap(lambda s: jax.random.fold_in(base, s))(
+            jnp.asarray(ids, jnp.uint32))
+
+    def _active_indices(self) -> np.ndarray:
+        """Tenants to re-anneal this round: everyone in full mode; in
+        incremental mode only tenants still settling (arrival, workload
+        change, preemption and detector fire each reset the countdown) or
+        carrying a pending reheat."""
+        if not self.incremental:
+            return np.arange(len(self.tenants))
+        mask = (self._settle > 0) | np.asarray(self._reheat_pending, bool)
+        return np.flatnonzero(mask)
+
+    def _decode_config(
+        self, s: int
+    ) -> tuple[dict[str, Any], ClusterConfig]:
+        """Decoded state + ClusterConfig for flat state ``s``, cached —
+        at 1k tenants the per-round space.decode/config_fn loop was pure
+        repeated work (tenants overwhelmingly sit on a few states)."""
+        hit = self._decode_cache.get(s)
+        if hit is None:
+            idx = tuple(int(v) for v in np.unravel_index(s, self._shape))
+            decoded = self.space.decode(idx)
+            hit = (decoded, self._config_of(decoded))
+            self._decode_cache[s] = hit
+        return hit
+
     def round(self) -> list[FleetDecision]:
-        """One fleet control round: draw jobs, anneal all tenants in one
-        jitted call, arbitrate, log, and account."""
+        """One fleet control round: draw jobs, anneal the active tenants
+        in one jitted call, arbitrate, log, and account."""
         r = self._round
         T = len(self.tenants)
         steps = self.steps_per_round
@@ -441,79 +543,107 @@ class FleetController(ControllerMixin):
         # BEFORE drawing (blend_of reflects round r exactly — drawing first
         # would advance the stream and switch tables one round early).
         # Cached per blend, so unchanged tenants cost a dict lookup.
-        tables_changed = self._tables_jnp is None
         for i, t in enumerate(self.tenants):
             table = self._table_for(self._stream.blend_of(t.name))
             if table is not self._tenant_tables[i]:
                 self._tenant_tables[i] = table
-                tables_changed = True
-        if tables_changed:
-            self._tables_jnp = jnp.asarray(
-                np.stack(self._tenant_tables), jnp.float32)
+                self._settle[i] = self.settle_rounds   # workload changed
         jobs = next(self._stream)
         self._refresh_capacity()   # pick up foreign reservation changes
 
         rows = self.coupling_rows()                          # (T, size)
+        tables_mat = np.stack(self._tenant_tables)           # (T, size)
+        pen_tables = tables_mat + rows                       # (T, size)
+        active = self._active_indices()
+        A = len(active)
+        self.last_annealed = A    # replay/bench visibility: chains run
         n0 = r * steps
-        taus = np.empty((T, steps), np.float64)
+        proposals = self._incumbents.copy()
+        ys = np.full((T, steps), np.nan)
+        explored_chain = np.zeros(T, bool)
         reheats_fired = [False] * T
-        for i, sched in enumerate(self._schedules):
-            if self._reheat_pending[i]:
-                sched.reheat(n0)
-                self._reheat_pending[i] = False
-                reheats_fired[i] = True
-            taus[i] = sched.tau_array(n0, steps)
+        taus_last = np.full(T, self._tau)
+        if A:
+            taus = np.empty((A, steps), np.float64)
+            for k, i in enumerate(active):
+                sched = self._schedules[i]
+                if self._reheat_pending[i]:
+                    sched.reheat(n0)
+                    self._reheat_pending[i] = False
+                    reheats_fired[i] = True
+                taus[k] = sched.tau_array(n0, steps)
+            taus_last[active] = taus[:, -1]
+            inits = np.stack(
+                np.unravel_index(self._incumbents[active], self._shape),
+                axis=-1).astype(np.int32)
+            keys = self._chain_keys(r, self._stream_ids[active])
+            # active chains run through fleet_chains: bucket-padded to a
+            # handful of compiled shapes (churning tenant counts stop
+            # retracing) and, with a mesh, shard_map'd over tenant blocks
+            st, ys_d, acc_d = fleet_chains(
+                keys, tables_mat[active],
+                self._valid_jnp, taus, inits, rows[active],
+                shape=self._shape, categorical=self._enc.categorical,
+                mesh=self.mesh, bucket=self.chain_bucketing)
 
-        inits = np.stack(
-            np.unravel_index(self._incumbents, self._shape),
-            axis=-1).astype(np.int32)
-        # the hot path calls the jitted kernel directly with cached device
-        # tables — anneal_fleet's per-call conveniences (shape checks,
-        # asarray/broadcast of static data) cost real milliseconds at
-        # hundreds of rounds (see benchmarks/fleet_arbitration.py)
-        keys = jax.random.split(jax.random.fold_in(self._key, r), T)
-        st, ys_d, acc_d = _fleet_nd_jit(
-            keys, self._tables_jnp, self._valid_jnp,
-            jnp.asarray(taus, jnp.float32), jnp.asarray(inits),
-            jnp.asarray(rows, jnp.float32),
-            shape=self._shape, categorical=self._enc.categorical,
-            dynamic=False, noise_std=0.0, per_chain=True)
-        out = {"states": st, "ys": ys_d, "accepts": acc_d}
+            # proposals: best visited state (step-0 incumbent included)
+            # under the penalized objective
+            visited = np.concatenate(
+                [inits[:, None, :], np.asarray(st)], axis=1)
+            flat = np.ravel_multi_index(
+                tuple(visited.transpose(2, 0, 1)),
+                self._shape)                              # (A, steps+1)
+            pen_a = pen_tables[active]
+            best = np.take_along_axis(pen_a, flat, axis=1).argmin(1)
+            proposals[active] = flat[np.arange(A), best]
+            ys[active] = np.asarray(ys_d)
 
-        # proposals: best visited state (step-0 incumbent included) under
-        # the penalized objective
-        visited = np.concatenate(
-            [inits[:, None, :], np.asarray(out["states"])], axis=1)
-        flat = np.ravel_multi_index(
-            tuple(visited.transpose(2, 0, 1)), self._shape)   # (T, steps+1)
-        pen_tables = np.stack(self._tenant_tables) + rows     # (T, size)
-        proposals = np.asarray([
-            flat[i, pen_tables[i, flat[i]].argmin()] for i in range(T)],
-            np.int64)
+            # exploration: did the chain ACCEPT an uphill move this round?
+            # (the single-tenant Step.explored semantics — the arbitrated
+            # proposal itself is an argmin over visited states, so it can
+            # never be uphill of the incumbent.)
+            accepts = np.asarray(acc_d)                   # (A, steps)
+            y0 = pen_a[np.arange(A), flat[:, 0]]
+            explored_chain[active] = self.explored_flags(
+                ys[active], accepts, y0)
+            # one settle round consumed (detector fires below re-arm it)
+            self._settle[active] = np.maximum(self._settle[active] - 1, 0)
 
-        # drift detection on the measured (penalized) objective stream —
-        # all tenants per step in one batched update (proposals into
-        # masked-out states measure +inf; the batched detector skips
-        # non-finite entries, so they cannot poison the Welford stats)
-        ys = np.asarray(out["ys"])                            # (T, steps)
+        # drift detection.  Full mode keeps the historical semantics: the
+        # chains' measured (penalized) objective stream, all tenants per
+        # step in one batched update (proposals into masked-out states
+        # measure +inf; the batched detector skips non-finite entries).
+        # Incremental mode instead watches each tenant's INCUMBENT
+        # penalized value — one observation per round, active or not: a
+        # workload (table) or coupling shift moves that value and pulls
+        # the tenant back into the active set, while chain exploration
+        # noise — which is not drift — cannot re-arm the settle counter
+        # and quietly turn incremental rounds back into full ones.
         if self._detector is not None:
-            for k in range(steps):
-                for i in np.flatnonzero(self._detector.update(ys[:, k])):
+            if self.incremental:
+                obs = pen_tables[np.arange(T), self._incumbents]
+                for i in np.flatnonzero(self._detector.update(obs)):
                     self._reheat_pending[i] = True
-
-        # exploration: did the chain ACCEPT an uphill move this round?
-        # (the single-tenant Step.explored semantics — the arbitrated
-        # proposal itself is an argmin over visited states, so it can
-        # never be uphill of the incumbent.)
-        accepts = np.asarray(out["accepts"])                  # (T, steps)
-        y0 = pen_tables[np.arange(T), flat[:, 0]]
-        explored_chain = self.explored_flags(ys, accepts, y0)
+                    self._settle[i] = self.settle_rounds
+            else:
+                for k in range(steps):
+                    for i in np.flatnonzero(
+                            self._detector.update(ys[:, k])):
+                        self._reheat_pending[i] = True
+                        self._settle[i] = self.settle_rounds
 
         prev = self._incumbents.copy()
         final, actions = self._arbitrate(proposals, pen_tables)
         self._incumbents = final
-        self.violation_history.append(self._violation(final))
+        final_v = self._violation(final)
+        self.violation_history.append(final_v)
+        for i, a in enumerate(actions):
+            if a == "preempt":     # forcibly moved: let its chain resettle
+                self._settle[i] = self.settle_rounds
         self._mirror_reservations()
+        if (self.ledger_check_every
+                and (r + 1) % self.ledger_check_every == 0):
+            self._ledger_crosscheck()
 
         # the round's measurement phase goes through the evaluation
         # runtime's shared dispatch seam: ONE vectorized measure_many call
@@ -521,10 +651,7 @@ class FleetController(ControllerMixin):
         # wall-clock ones — instead of a serial per-tenant loop
         decodeds, cfgs, migs = [], [], []
         for i in range(T):
-            idx = tuple(int(v) for v in
-                        np.unravel_index(int(final[i]), self._shape))
-            decoded = self.space.decode(idx)
-            cfg = self._config_of(decoded)
+            decoded, cfg = self._decode_config(int(final[i]))
             decodeds.append(decoded)
             cfgs.append(cfg)
             migs.append(self.evaluator.migration(
@@ -535,7 +662,6 @@ class FleetController(ControllerMixin):
             eval_workers=self.eval_workers)
 
         decisions = []
-        final_v = self._violation(final)
         counts = self.evaluation_counts()
         for i, t in enumerate(self.tenants):
             s = int(final[i])
@@ -554,14 +680,15 @@ class FleetController(ControllerMixin):
                 n=r, job=jobs[t.name], config=cfg, measurement=m,
                 y=pen_y, accepted=bool(s != prev[i]),
                 explored=bool(explored_chain[i]),
-                tau=float(taus[i, -1]), reheated=reheats_fired[i],
+                tau=float(taus_last[i]), reheated=reheats_fired[i],
                 tenant=t.name, round=r, action=actions[i],
                 violation=viol_i,
                 true_measures=counts["true_measures"],
                 surrogate_queries=counts["surrogate_queries"],
             )
             decisions.append(d)
-            self.decisions.append(d)
+        if self.keep_decision_log:
+            self.decisions.extend(decisions)
         self._round += 1
         note_round("FleetController", self)
         return decisions
@@ -608,7 +735,13 @@ class FleetController(ControllerMixin):
             self._detector.add_streams(1)
         self._reheat_pending.append(False)
         self._prev_cfgs.append(None)
-        self._tables_jnp = None
+        # a NEVER-reused chain-RNG stream id: even if this arrival lands
+        # in the same round as a departure, the newcomer cannot inherit
+        # the departed tenant's RNG stream (or anyone's — ids are fresh)
+        self._stream_ids = np.append(
+            self._stream_ids, self._next_stream_id)
+        self._next_stream_id += 1
+        self._settle = np.append(self._settle, self.settle_rounds)
         self._mirror_reservations()
 
     def remove_tenant(self, name: str) -> None:
@@ -631,8 +764,33 @@ class FleetController(ControllerMixin):
             self._detector.remove_stream(i)
         del self._reheat_pending[i]
         del self._prev_cfgs[i]
-        self._tables_jnp = None
+        # the id retires WITH the tenant (never reused — see add_tenant)
+        self._stream_ids = np.delete(self._stream_ids, i)
+        self._settle = np.delete(self._settle, i)
         self._mirror_reservations()
+
+    def retune_tenant(
+        self, name: str, blend: Mapping[str, float],
+        priority: float | None = None,
+    ) -> None:
+        """Switch a live tenant's workload blend NOW — a trace
+        *phase-change* event.  The tenant's job stream keeps its RNG
+        position (only the draw distribution changes), any still-pending
+        declared ``change_at`` is superseded, and the tenant re-enters
+        the incremental active set for ``settle_rounds`` rounds; its
+        blended objective table is rebuilt lazily at the next round
+        (cached per blend, so a returning blend costs a dict lookup)."""
+        idx = [i for i, t in enumerate(self.tenants) if t.name == name]
+        if not idx:
+            raise KeyError(f"unknown tenant {name!r}")
+        i = idx[0]
+        self._stream.set_blend(name, blend)
+        spec = dataclasses.replace(
+            self.tenants[i], blend=dict(blend), blend_after=None,
+            change_at=None,
+            **({} if priority is None else {"priority": priority}))
+        self.tenants = self.tenants[:i] + (spec,) + self.tenants[i + 1:]
+        self._settle[i] = self.settle_rounds
 
     # ------------------------------------------------------------------
     # accounting / diagnostics
@@ -649,18 +807,63 @@ class FleetController(ControllerMixin):
         (transient: a repair pass could not fully restore feasibility) our
         entries are cleared rather than left mirroring a stale round — an
         empty mirror is visibly wrong, a previous round's is silently
-        wrong."""
-        for f, c in self._mirrored.items():
-            self.catalog.release(f, c)
-        self._mirrored = {}
+        wrong.
+
+        The update is INCREMENTAL: each family moves by the delta between
+        its previous mirrored amount and the new target
+        (:meth:`ServiceCatalog.adjust`), so a round that changes nothing
+        touches the catalog zero times and a round that moves one tenant
+        touches only the families whose aggregate actually changed —
+        instead of the full release-everything/re-reserve-everything sweep
+        this replaces.  :meth:`_ledger_crosscheck` periodically replays
+        the from-scratch rebuild and fails loudly on any drift."""
         if not self._feasible(self._incumbents):
+            for f, c in self._mirrored.items():
+                self.catalog.release(f, c)
+            self._mirrored = {}
             return
         cores, _ = self._aggregate(self._incumbents)
-        for f, c in zip(self._families, cores):
-            amt = min(float(c), self.catalog.remaining(f))
+        target = dict(zip(self._families, cores))
+        for f in set(target) | set(self._mirrored):
+            have = self._mirrored.get(f, 0.0)
+            # clamp to what the catalog can still give us ON TOP OF our
+            # own existing hold — foreign holds are squeezed around, never
+            # released (remaining()+have is exactly the old post-release
+            # headroom, so the incremental clamp equals the rebuilt one)
+            amt = min(float(target.get(f, 0.0)),
+                      self.catalog.remaining(f) + have)
+            if amt != have:
+                self.catalog.adjust(f, amt - have)
             if amt > 0:
-                self.catalog.reserve(f, amt)
                 self._mirrored[f] = amt
+            else:
+                self._mirrored.pop(f, None)
+
+    def _ledger_crosscheck(self) -> None:
+        """Replay the from-scratch mirror rebuild and compare it against
+        the incrementally maintained one (every ``ledger_check_every``
+        rounds).  Raises on ANY drift — mirrored amounts, or perturbation
+        of foreign reservations — so the incremental ledger path stays
+        exactly as trustworthy as the full rebuild it replaced."""
+        inc = dict(self._mirrored)
+        foreign = {f: self.catalog.reserved(f) - inc.get(f, 0.0)
+                   for f in self._families}
+        for f, c in inc.items():
+            self.catalog.release(f, c)
+        self._mirrored = {}
+        self._mirror_reservations()
+        ok = set(self._mirrored) == set(inc) and all(
+            math.isclose(self._mirrored[f], inc[f],
+                         rel_tol=1e-9, abs_tol=1e-6) for f in inc)
+        ok = ok and all(
+            math.isclose(
+                self.catalog.reserved(f) - self._mirrored.get(f, 0.0),
+                foreign[f], rel_tol=1e-9, abs_tol=1e-6)
+            for f in self._families)
+        if not ok:
+            raise RuntimeError(
+                f"reservation-mirror drift at round {self._round}: "
+                f"incremental {inc} != recomputed {dict(self._mirrored)}")
 
     def allocations(self) -> dict[str, dict[str, Any]]:
         """Per-tenant current configuration and spend rate."""

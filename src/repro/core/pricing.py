@@ -146,6 +146,26 @@ class ServiceCatalog:
                 f"{self.reserved(name)}")
         self._reserved[name] = max(0.0, self.reserved(name) - n_cores)
 
+    def adjust(self, name: str, delta_cores: float) -> None:
+        """Incremental ledger update: ``delta_cores`` > 0 reserves, < 0
+        releases, in one call.  This is the per-round API of the fleet's
+        incremental reservation mirror — a round that moves one tenant
+        touches only the families whose aggregate actually changed,
+        instead of releasing and re-reserving every family from scratch.
+        Same invariants as :meth:`reserve`/:meth:`release` (and the same
+        exceptions), so the incremental path cannot drift anywhere a
+        from-scratch rebuild could not."""
+        if delta_cores >= 0:
+            self.reserve(name, delta_cores)
+        else:
+            self.release(name, -delta_cores)
+
+    def reserved_snapshot(self) -> dict[str, float]:
+        """The full reservation ledger (family -> cores), for periodic
+        from-scratch cross-checks against incrementally-maintained
+        mirrors (zero entries elided, matching never-reserved state)."""
+        return {f: c for f, c in self._reserved.items() if c > 0.0}
+
     def release_all(self) -> None:
         self._reserved.clear()
 

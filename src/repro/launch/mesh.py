@@ -50,5 +50,20 @@ def make_host_mesh(model: int = 1) -> Mesh:
                          **mesh_axis_kwargs(2))
 
 
+def make_tenant_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over local devices with a ``"tenants"`` axis — the seam
+    the fleet's sharded chain dispatch (:func:`repro.core.annealing.
+    fleet_chains`) splits its tenant blocks over.  ``n_devices`` limits
+    the mesh to the first n devices (a single-device mesh is the parity
+    fixture: shard_map over one device must be bit-identical to the
+    direct dispatch)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices {n} out of range [1, {len(devs)}]")
+    return jax.make_mesh((n,), ("tenants",), devices=devs[:n],
+                         **mesh_axis_kwargs(1))
+
+
 def mesh_chips(mesh: Mesh) -> int:
     return mesh.devices.size

@@ -133,6 +133,22 @@ class MultiTenantStream:
         del self._streams[name]
         del self._blends[name]
 
+    def set_blend(self, name: str, blend: Mapping[str, float]) -> None:
+        """Retune a live tenant's blend mid-run (a trace *phase-change*
+        event).  The tenant's RNG stream continues — only the draw
+        distribution switches, exactly like a declared ``change_at``
+        firing — and any still-pending declared change point is cleared
+        (the phase event supersedes it)."""
+        if name not in self._streams:
+            raise KeyError(f"unknown tenant {name!r}")
+        self._blends[name] = dict(blend)
+        self._streams[name].set_blend(blend)
+        self.tenants = tuple(
+            dataclasses.replace(t, blend=dict(blend), blend_after=None,
+                                change_at=None)
+            if t.name == name else t
+            for t in self.tenants)
+
     @property
     def tenant_names(self) -> tuple[str, ...]:
         return tuple(t.name for t in self.tenants)

@@ -1,0 +1,181 @@
+"""Property tests (hypothesis, or its seeded shim) for the churn /
+capacity-ledger invariants: under ANY interleaving of tenant churn,
+capacity updates, retunes and control rounds, the incrementally
+maintained reservation ledger equals a from-scratch recompute, remaining
+capacity never goes negative without a capacity shrink, and a departing
+tenant's share is reclaimable the very next round."""
+
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core import (
+    CapacityError,
+    EC2_CATALOG_ADJUSTED,
+    FleetController,
+    InstanceFamily,
+    ServiceCatalog,
+    TenantSpec,
+    make_ec2_space,
+)
+from repro.core.costmodel import SimulatedEvaluator
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+# -- op encoding for random controller histories: (kind, a, b) ------------
+#    kind 0 round | 1 add | 2 remove | 3 set_capacity | 4 retune
+OPS = st.lists(
+    st.composite(lambda draw: (
+        draw(st.integers(min_value=0, max_value=4)),
+        draw(st.integers(min_value=0, max_value=7)),
+        draw(st.floats(min_value=0.25, max_value=2.0, allow_nan=False)),
+    ))(),
+    min_size=1, max_size=12)
+
+
+def _controller(seed, T=3):
+    catalog = EC2_CATALOG_ADJUSTED.with_capacities(
+        {f: 14.0 * T for f in EC2_CATALOG_ADJUSTED.names()})
+    space = make_ec2_space(catalog, core_counts=(4, 12, 20, 28))
+    evaluator = SimulatedEvaluator(catalog)
+    jobs = sorted(evaluator.jobs)
+    rng = np.random.default_rng(seed)
+    # a small blend pool keeps the per-controller table cache effective
+    pool = [dict(zip(jobs, rng.dirichlet(np.ones(len(jobs)))))
+            for _ in range(4)]
+    tenants = [TenantSpec(f"t{i}", pool[i % len(pool)]) for i in range(T)]
+    ctl = FleetController(
+        space, catalog, evaluator, tenants, budget_usd_hr=2.5 * T,
+        steps_per_round=8, seed=seed, incremental=True, settle_rounds=2,
+        ledger_check_every=0)      # crosschecks run explicitly below
+    return ctl, catalog, pool
+
+
+def _apply(ctl, catalog, pool, op, next_id):
+    """One random history step; returns (next_id, shrank_below_usage)."""
+    kind, a, x = op
+    shrank = False
+    if kind == 0:
+        ctl.round()
+    elif kind == 1:
+        ctl.add_tenant(TenantSpec(f"n{next_id}", pool[a % len(pool)]))
+        next_id += 1
+    elif kind == 2 and len(ctl.tenants) > 1:
+        ctl.remove_tenant(ctl.tenants[a % len(ctl.tenants)].name)
+    elif kind == 3:
+        fam = catalog.names()[a % len(catalog.names())]
+        new_cap = x * 14.0 * len(ctl.tenants)
+        shrank = new_cap < catalog.reserved(fam)
+        catalog.set_capacity(fam, new_cap)
+        ctl.round()               # give the controller a repair pass
+    elif kind == 4:
+        ctl.retune_tenant(ctl.tenants[a % len(ctl.tenants)].name,
+                          pool[a % len(pool)])
+    return next_id, shrank
+
+
+@settings(max_examples=8, deadline=None)
+@given(OPS, SEEDS)
+def test_incremental_ledger_equals_recompute(ops, seed):
+    """After ANY op sequence, the incrementally maintained reservation
+    mirror must equal the from-scratch rebuild (the crosscheck raises on
+    drift) and the catalog ledger must stay internally consistent."""
+    ctl, catalog, pool = _controller(seed % 1000)
+    next_id = 0
+    for op in ops:
+        next_id, _ = _apply(ctl, catalog, pool, op, next_id)
+    ctl._ledger_crosscheck()      # raises RuntimeError on any drift
+    snap = catalog.reserved_snapshot()
+    assert snap == {f: c for f, c in ctl._mirrored.items() if c > 0}
+
+
+@settings(max_examples=8, deadline=None)
+@given(OPS, SEEDS)
+def test_remaining_capacity_never_negative_without_shrink(ops, seed):
+    ctl, catalog, pool = _controller(seed % 1000)
+    next_id, any_shrink = 0, False
+    for op in ops:
+        next_id, shrank = _apply(ctl, catalog, pool, op, next_id)
+        any_shrink = any_shrink or shrank
+        if not any_shrink:
+            for f in catalog.names():
+                assert catalog.remaining(f) >= -1e-9
+        # mirrored never exceeds the feasible aggregate
+        if ctl._feasible(ctl._incumbents):
+            cores, _ = ctl._aggregate(ctl._incumbents)
+            for f, c in zip(ctl._families, cores):
+                assert ctl._mirrored.get(f, 0.0) <= c + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(SEEDS)
+def test_departed_share_reusable_next_round(seed):
+    """Removing a tenant releases its share immediately: total reserved
+    drops, and a newcomer admitted at the departed tenant's exact state
+    fits without any violation."""
+    ctl, catalog, pool = _controller(seed % 1000, T=3)
+    ctl.run(2)
+    assert ctl._feasible(ctl._incumbents)
+    victim = ctl.tenants[1]
+    s = int(ctl._incumbents[1])
+    before = sum(catalog.reserved(f) for f in catalog.names())
+    ctl.remove_tenant(victim.name)
+    after = sum(catalog.reserved(f) for f in catalog.names())
+    released = float(ctl._cores_by_family[:, s].sum())
+    assert after <= before - released + 1e-9
+    init = tuple(int(v) for v in np.unravel_index(s, ctl._shape))
+    ctl.add_tenant(TenantSpec("reuser", dict(victim.blend), init=init))
+    assert ctl._feasible(ctl._incumbents)
+    ctl.round()
+    assert ctl.violation_history[-1] <= 1e-9
+    ctl._ledger_crosscheck()
+
+
+# ---------------------------------------------------------------------------
+# ServiceCatalog.adjust: delta API == reserve/release shadow model
+# ---------------------------------------------------------------------------
+
+DELTAS = st.lists(
+    st.floats(min_value=-30.0, max_value=30.0, allow_nan=False),
+    min_size=1, max_size=30)
+
+
+@settings(max_examples=20, deadline=None)
+@given(DELTAS)
+def test_adjust_matches_shadow_ledger(deltas):
+    cat = ServiceCatalog(
+        {"f": InstanceFamily("f", 0.05, 4.0, 60.0)}, {"f": 50.0})
+    shadow = 0.0
+    for d in deltas:
+        try:
+            cat.adjust("f", d)
+        except CapacityError:
+            # rejected deltas must leave the ledger untouched
+            assert d > 0 and shadow + d > 50.0 + 1e-9 or \
+                d < 0 and -d > shadow + 1e-9
+            continue
+        shadow = max(0.0, shadow + d)
+        assert math.isclose(cat.reserved("f"), shadow, abs_tol=1e-9)
+        assert cat.remaining("f") >= -1e-9
+
+
+def test_adjust_zero_is_noop():
+    cat = ServiceCatalog(
+        {"f": InstanceFamily("f", 0.05, 4.0, 60.0)}, {"f": 10.0})
+    cat.adjust("f", 0.0)
+    assert cat.reserved("f") == 0.0
+    assert cat.reserved_snapshot() == {}
+
+
+def test_crosscheck_detects_seeded_drift():
+    """The crosscheck actually bites: corrupt the incremental mirror and
+    it must raise."""
+    ctl, catalog, _ = _controller(0)
+    ctl.run(2)
+    assert ctl._mirrored
+    fam = next(iter(ctl._mirrored))
+    ctl._mirrored[fam] += 3.0            # simulated drift (catalog not
+    with pytest.raises(RuntimeError):    # updated to match)
+        ctl._ledger_crosscheck()

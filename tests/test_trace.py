@@ -1,0 +1,311 @@
+"""Trace generator + replay determinism: seed-pinned event sequences,
+the checked-in golden fingerprint, event-driven ticking, deterministic
+FleetDecision logs, and the same-round churn-swap RNG/detector
+regression."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EC2_CATALOG_ADJUSTED,
+    FleetController,
+    TenantSpec,
+    TraceReplayController,
+    make_ec2_space,
+)
+from repro.core.costmodel import SimulatedEvaluator
+from repro.workloads.trace import (
+    TraceEvent,
+    replay_ticks,
+    synthetic_trace,
+    trace_fingerprint,
+)
+
+JOBS = ("alpha", "beta", "gamma")
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "trace_seed0.json")
+
+
+def _trace(**kw):
+    kw.setdefault("n_tenants", 32)
+    kw.setdefault("horizon_s", 1800.0)
+    kw.setdefault("seed", 0)
+    return synthetic_trace(JOBS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# generator determinism and structural invariants
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_events():
+    assert _trace().events == _trace().events
+    assert _trace().profiles == _trace().profiles
+
+
+def test_different_seed_different_events():
+    assert _trace(seed=1).events != _trace(seed=2).events
+
+
+def test_events_sorted_departs_before_arrivals():
+    tr = _trace()
+    keys = [e.sort_key() for e in tr.events]
+    assert keys == sorted(keys)
+    # every depart has an earlier arrive; every phase targets a tenant
+    # that arrived earlier and has not yet departed
+    arrived, departed = set(), set()
+    for e in tr.events:
+        if e.kind == "arrive":
+            assert e.tenant not in arrived
+            arrived.add(e.tenant)
+        elif e.kind == "depart":
+            assert e.tenant in arrived and e.tenant not in departed
+            departed.add(e.tenant)
+        else:
+            assert e.tenant in arrived and e.tenant not in departed
+
+
+def test_founding_cohort_and_concurrency():
+    tr = _trace(n_tenants=16)
+    assert len(tr.founding()) == 16
+    curve = tr.concurrency_curve()
+    assert all(n >= 0 for _, n in curve)
+    assert tr.stats()["peak_tenants"] >= 16
+
+
+def test_churn_zero_only_ages_out():
+    tr = _trace(churn=0.0)
+    assert tr.stats()["arrivals"] == 32   # the founding cohort only
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        TraceEvent(0.0, "restart", "t0", 0)
+    with pytest.raises(ValueError):
+        TraceEvent(0.0, "arrive", "t0")   # needs a profile
+    with pytest.raises(ValueError):
+        synthetic_trace([], n_tenants=4)
+    with pytest.raises(ValueError):
+        synthetic_trace(JOBS, n_profiles=1)
+
+
+def test_golden_fingerprint():
+    """The checked-in digest pins the generator's draw order and
+    defaults — silent distribution drift fails here, not in a flaky
+    downstream bench."""
+    got = trace_fingerprint(_trace())
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# event-driven ticking
+# ---------------------------------------------------------------------------
+
+
+def test_replay_ticks_cover_all_events_once():
+    tr = _trace()
+    seen = []
+    last_t = -1.0
+    for t, events in replay_ticks(tr, control_period_s=30.0):
+        assert t >= last_t
+        last_t = t
+        seen.extend(events)
+    assert tuple(seen) == tr.events
+
+
+def test_replay_ticks_jump_quiet_gaps():
+    """A lone event far beyond the control period is reached in ONE tick
+    (the clock jumps), not horizon/period idle rounds."""
+    ev = (TraceEvent(0.0, "arrive", "a", 0),
+          TraceEvent(5000.0, "depart", "a"))
+    tr = _trace(n_tenants=1, churn=0.0)
+    tr = type(tr)(events=ev, profiles=tr.profiles,
+                  priorities=tr.priorities, horizon_s=6000.0, seed=0)
+    ticks = list(replay_ticks(tr, control_period_s=30.0))
+    assert len(ticks) <= 3               # t=0 batch, jump to 5000, flush
+    assert any(e.kind == "depart" for _, evs in ticks for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# replay determinism (same seeds -> identical decision logs)
+# ---------------------------------------------------------------------------
+
+
+def _replay_controller(seed=0, **kw):
+    T = 6
+    catalog = EC2_CATALOG_ADJUSTED.with_capacities(
+        {f: 12.0 * T for f in EC2_CATALOG_ADJUSTED.names()})
+    space = make_ec2_space(catalog, core_counts=tuple(range(4, 68, 8)))
+    evaluator = SimulatedEvaluator(catalog)
+    trace = synthetic_trace(
+        sorted(evaluator.jobs), n_tenants=T, horizon_s=420.0, seed=seed,
+        n_profiles=4)
+    kw.setdefault("keep_decision_log", True)
+    return TraceReplayController(
+        trace, space, catalog, evaluator, budget_usd_hr=1.6 * T,
+        steps_per_round=12, slo_s=3600.0, seed=seed, **kw)
+
+
+def _sig(ctl):
+    return [(d.round, d.tenant, d.action, d.config, d.y)
+            for d in ctl.fleet.decisions]
+
+
+def test_replay_deterministic():
+    a, b = _replay_controller(seed=3), _replay_controller(seed=3)
+    sa, sb = a.replay(), b.replay()
+    assert _sig(a) == _sig(b)
+
+    def strip(d):                        # wall-clock is the one non-
+        return {k: v for k, v in d.items() if k != "wall_s"}  # pinned key
+
+    assert strip(sa) == strip(sb)
+    assert [strip(r) for r in a.rounds] == [strip(r) for r in b.rounds]
+
+
+def test_replay_summary_consistent():
+    ctl = _replay_controller(seed=1)
+    s = ctl.replay()
+    assert s["rounds"] == len(ctl.rounds)
+    assert s["tenant_rounds"] == sum(r["n_tenants"] for r in ctl.rounds)
+    assert 0.0 <= s["annealed_fraction"] <= 1.0
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+    applied = s["events_applied"]
+    st = ctl.trace.stats()
+    # founding arrivals are pre-admitted, not re-applied
+    assert applied["arrive"] == st["arrivals"] - len(ctl.trace.founding())
+    assert (applied["depart"] + s["skipped"]["depart_last_tenant"]
+            + s["skipped"]["unknown_tenant"] >= 0)
+
+
+def test_incremental_holds_inactive_tenants():
+    """Once settled (no churn, detectors off), incremental rounds anneal
+    nobody and every tenant holds its incumbent."""
+    ctl = _replay_controller(seed=2, detectors=False, incremental=True,
+                             settle_rounds=1)
+    fleet = ctl.fleet
+    fleet.run(3)                        # founding settle drains
+    before = fleet._incumbents.copy()
+    ds = fleet.round()
+    assert fleet.last_annealed == 0
+    assert all(d.action == "hold" for d in ds)
+    assert np.array_equal(fleet._incumbents, before)
+
+
+# ---------------------------------------------------------------------------
+# tier-2: sanitized replay — churn must not retrace in the steady state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_trace_replay_steady_state_zero_retrace():
+    """A churning replay under the retrace sanitizer compiles the fleet
+    kernel only when the pow-2 chain bucket grows to a NEW padded shape —
+    and never in the trailing half of the rounds (the nightly
+    REPRO_SANITIZE gate over the trace loop)."""
+    from repro.analysis import sanitize
+
+    pre_armed = sanitize.current().installed
+    san = sanitize.current() if pre_armed else sanitize.install()
+    mark = len(san.rounds)
+    try:
+        ctl = _replay_controller(seed=4)
+        ctl.replay()
+        rounds = [r for r in san.rounds[mark:]
+                  if r["controller"] == "FleetController"]
+        assert len(rounds) == len(ctl.rounds)
+        compiles = [sum(d["compiles"] for d in r["entries"].values())
+                    for r in rounds]
+        # a round may compile ONLY when its padded chain bucket is a
+        # shape never dispatched before; repeats must hit the jit cache
+        from repro.core import chain_bucket
+        buckets = [chain_bucket(r["n_annealed"]) if r["n_annealed"] else 0
+                   for r in ctl.rounds]
+        seen: set = set()
+        for i, (c, bkt) in enumerate(zip(compiles, buckets)):
+            fresh = bkt and bkt not in seen
+            assert c <= (1 if fresh else 0), (
+                f"round {i}: retrace on already-seen bucket {bkt} "
+                f"(compiles={compiles}, buckets={buckets})")
+            seen.add(bkt)
+    finally:
+        if not pre_armed:
+            sanitize.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# same-round churn swap: RNG stream + detector state regression
+# ---------------------------------------------------------------------------
+
+
+def _fleet(T=3, seed=0, **kw):
+    catalog = EC2_CATALOG_ADJUSTED.with_capacities(
+        {f: 12.0 * T for f in EC2_CATALOG_ADJUSTED.names()})
+    space = make_ec2_space(catalog, core_counts=tuple(range(4, 68, 8)))
+    evaluator = SimulatedEvaluator(catalog)
+    jobs = sorted(evaluator.jobs)
+    rng = np.random.default_rng(11)
+    tenants = [
+        TenantSpec(f"t{i}",
+                   dict(zip(jobs, rng.dirichlet(np.ones(len(jobs))))))
+        for i in range(T)]
+    return FleetController(space, catalog, evaluator, tenants,
+                           budget_usd_hr=1.6 * T, steps_per_round=12,
+                           seed=seed, **kw), jobs
+
+
+def test_swap_does_not_reuse_rng_stream():
+    """remove_tenant + add_tenant in the same gap must NOT hand the
+    newcomer the departed tenant's RNG stream: the newcomer lands on the
+    departed tenant's INDEX, but its stream id is fresh."""
+    ctl, jobs = _fleet()
+    ctl.round()
+    old_ids = ctl._stream_ids.copy()
+    victim = ctl.tenants[1]
+    ctl.remove_tenant(victim.name)
+    ctl.add_tenant(TenantSpec("newcomer", dict(victim.blend),
+                              priority=victim.priority))
+    assert "newcomer" == ctl.tenants[-1].name
+    new_id = ctl._stream_ids[-1]
+    assert new_id not in old_ids          # never reused
+    # and the chain keys actually differ from the departed tenant's
+    import jax
+    k_old = jax.random.fold_in(
+        jax.random.fold_in(ctl._key, ctl._round), int(old_ids[1]))
+    k_new = jax.random.fold_in(
+        jax.random.fold_in(ctl._key, ctl._round), int(new_id))
+    assert not np.array_equal(jax.random.key_data(k_old),
+                              jax.random.key_data(k_new))
+
+
+def test_swap_resets_detector_state():
+    """The newcomer's drift-detector stream starts fresh — it must not
+    inherit the departed tenant's Welford statistics."""
+    ctl, _ = _fleet()
+    ctl.run(3)
+    assert ctl._detector._n[1] > 0        # victim accumulated stats
+    victim = ctl.tenants[1]
+    ctl.remove_tenant(victim.name)
+    ctl.add_tenant(TenantSpec("fresh", dict(victim.blend)))
+    assert ctl._detector._n[-1] == 0      # newcomer: clean slate
+
+
+def test_churn_invariant_chain_keys():
+    """A surviving tenant's chain keys are unchanged by others' churn —
+    the composition-invariance that incremental parity rests on."""
+    a, _ = _fleet(T=3, seed=5)
+    b, _ = _fleet(T=3, seed=5)
+    b.remove_tenant(b.tenants[0].name)    # churn around tenant t2
+    b.add_tenant(TenantSpec("x", dict(a.tenants[0].blend)))
+    ia = [t.name for t in a.tenants].index("t2")
+    ib = [t.name for t in b.tenants].index("t2")
+    ka = a._chain_keys(4, a._stream_ids[[ia]])
+    kb = b._chain_keys(4, b._stream_ids[[ib]])
+    import jax
+    assert np.array_equal(jax.random.key_data(ka),
+                          jax.random.key_data(kb))
