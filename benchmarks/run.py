@@ -9,10 +9,12 @@ from __future__ import annotations
 import argparse
 import sys
 
+import repro.telemetry as telemetry
+
 from . import blended_workloads, container_sizing, dnn_annealing, \
     fleet_arbitration, kernel_bench, paper_figures, pipeline_overlap, \
     roofline_table, surrogate_scale, trace_fleet
-from .common import write_json
+from .common import OUT_DIR, write_json
 
 SUITES = {
     "paper_figures": paper_figures.run_all,
@@ -39,13 +41,18 @@ def main(argv=None) -> int:
         if args.only and name not in args.only:
             continue
         print(f"=== {name} ===", flush=True)
-        try:
-            results.extend(fn())
-        except Exception as e:  # a crashed suite is a failed suite
-            import traceback
-            traceback.print_exc()
-            results.append({"bench": name, "ok": False,
-                            "error": repr(e), "checks": []})
+        # each suite runs under its own telemetry window and leaves a
+        # TELEMETRY_<suite>.json + .perfetto.json next to its BENCH_*
+        # artifact (sessions nest, so suites arming their own are fine)
+        with telemetry.session(meta={"suite": name}) as tel:
+            try:
+                results.extend(fn())
+            except Exception as e:  # a crashed suite is a failed suite
+                import traceback
+                traceback.print_exc()
+                results.append({"bench": name, "ok": False,
+                                "error": repr(e), "checks": []})
+            tel.write_artifacts(f"TELEMETRY_{name}", out_dir=OUT_DIR)
 
     write_json("results.json", results)
     n_ok = sum(1 for r in results if r.get("ok"))

@@ -23,11 +23,13 @@ Claims checked:
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
 import numpy as np
 
+import repro.telemetry as telemetry
 from repro.core import (
     EC2_CATALOG_ADJUSTED,
     Objective,
@@ -75,6 +77,44 @@ def _decision_sig(ctl: TraceReplayController) -> list[tuple]:
             for d in ctl.fleet.decisions]
 
 
+def _check_telemetry(b: Bench, tel: "telemetry.Telemetry", n_rounds: int,
+                     result: dict) -> None:
+    """Claim checks on the telemetry-armed baseline leg: the Perfetto
+    export must carry one fleet.round span per replay round with the
+    measure/anneal/arbitrate phases nested inside it, and the dashboard
+    must render the objective/cost/SLO series."""
+    spans: dict[str, list] = {}
+    for s in tel.spans.spans():               # (name, cat, ts, dur, ...)
+        spans.setdefault(s[0], []).append(s)
+    rounds = spans.get("fleet.round", [])
+    b.check(f"telemetry: one fleet.round span per replay round "
+            f"({len(rounds)}/{n_rounds})", len(rounds) == n_rounds)
+
+    def nested(child) -> bool:                # ts containment, +-2us slack
+        cs, ce = child[2], child[2] + child[3]
+        return any(p[2] - 2 <= cs and ce <= p[2] + p[3] + 2
+                   for p in rounds)
+
+    for phase in ("fleet.measure", "fleet.anneal", "fleet.arbitrate"):
+        ph = spans.get(phase, [])
+        b.check(f"telemetry: {phase} spans present and nested inside "
+                f"fleet.round ({len(ph)})",
+                bool(ph) and all(nested(s) for s in ph))
+    dash = tel.dashboard()
+    for series in ("fleet/objective", "fleet/spend_usd_hr",
+                   "trace/slo_attainment"):
+        b.check(f"telemetry: dashboard renders {series}", series in dash)
+    paths = tel.write_artifacts(
+        "TELEMETRY_trace", out_dir=os.path.dirname(TOP_LEVEL_ARTIFACT))
+    with open(paths["perfetto"]) as f:
+        events = json.load(f)["traceEvents"]
+    b.check(f"telemetry: Perfetto artifact loads "
+            f"({len(events)} trace events)", len(events) > 0)
+    result["telemetry"] = {"artifacts": paths,
+                           "trace_events": len(events),
+                           "spans_dropped": tel.spans.dropped}
+
+
 def trace_fleet(tenant_counts=(64, 256, 1024), horizon_s: float = 3600.0,
                 parity_T: int = 64, parity_horizon_s: float = 300.0,
                 smoke: bool = False) -> dict:
@@ -90,7 +130,18 @@ def trace_fleet(tenant_counts=(64, 256, 1024), horizon_s: float = 3600.0,
     for T in tenant_counts:
         t0 = time.perf_counter()
         ctl = _controller(T, horizon_s, seed=T, keep_decision_log=False)
-        summary = ctl.replay()
+        if T == base_T:
+            # the baseline leg doubles as the observability deliverable:
+            # replay with the metric/span sinks armed and leave the
+            # snapshot + Perfetto trace next to BENCH_trace.json (the
+            # larger legs stay dark so the scaling curve is unperturbed)
+            with telemetry.session(
+                    meta={"bench": "trace_fleet", "T": T,
+                          "horizon_s": horizon_s}) as tel:
+                summary = ctl.replay()
+            _check_telemetry(b, tel, len(ctl.rounds), result)
+        else:
+            summary = ctl.replay()
         total_s = time.perf_counter() - t0
         tail = [r["violation"] for r in
                 ctl.rounds[-max(len(ctl.rounds) // 4, 1):]]
@@ -156,7 +207,6 @@ def trace_fleet(tenant_counts=(64, 256, 1024), horizon_s: float = 3600.0,
 
     write_json("trace_fleet.json", result)
     with open(TOP_LEVEL_ARTIFACT, "w") as f:
-        import json
         json.dump(result, f, indent=2)
     return b.finish()
 
@@ -167,7 +217,6 @@ def run_all() -> list[dict]:
 
 if __name__ == "__main__":
     import argparse
-    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="64-tenant short-horizon tier-1 gate")

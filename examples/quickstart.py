@@ -17,6 +17,7 @@ import time
 
 sys.path.insert(0, "src")
 
+from repro import telemetry
 from repro.core.costmodel import SimulatedEvaluator
 from repro.core.landscape import BLEND_BEFORE, blended_surface
 from repro.core.objective import Objective
@@ -41,13 +42,19 @@ def main() -> None:
         seed=0,
     )
 
-    for i in range(300):
-        d = controller.submit()
-        if i % 50 == 0:
-            print(f"job {d.n:4d}  Y={d.y:7.2f}  "
-                  f"config=({d.config.instance_type}, "
-                  f"{d.config.n_workers} cores)  "
-                  f"{'explored' if d.explored else ''}")
+    # run under a telemetry session so the controller's guarded call
+    # sites record the per-round series (dark — zero cost — otherwise)
+    with telemetry.session(meta={"example": "quickstart"}) as tel:
+        for i in range(300):
+            d = controller.submit()
+            if i % 50 == 0:
+                print(f"job {d.n:4d}  Y={d.y:7.2f}  "
+                      f"config=({d.config.instance_type}, "
+                      f"{d.config.n_workers} cores)  "
+                      f"{'explored' if d.explored else ''}")
+    ys = tel.metrics.series("procurement/y").values()
+    print(f"\nround dashboard: Y "
+          f"{telemetry.sparkline(ys, width=60)}  (300 rounds)")
 
     best_cfg, best_y = controller.best_config()
     Y = blended_surface(EC2_CATALOG_ADJUSTED, BLEND_BEFORE, cores)

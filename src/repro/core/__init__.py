@@ -179,6 +179,14 @@ def _arm_analysis() -> None:
         from repro.analysis import racecheck
 
         racecheck.install()
+    # REPRO_TELEMETRY=1 arms the passive observability layer
+    # (repro.telemetry): metric/span sinks attach so the always-present
+    # guarded call sites start recording.  Unlike the analysis gates it
+    # patches nothing and cannot abort a run.
+    if os.environ.get("REPRO_TELEMETRY") == "1":
+        from repro import telemetry
+
+        telemetry.maybe_enable()
 
 
 _arm_analysis()

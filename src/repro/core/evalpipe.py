@@ -57,6 +57,7 @@ import collections
 import copy
 import dataclasses
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Mapping, Sequence
 
@@ -68,6 +69,7 @@ from .instrumentation import race_access
 from .objective import Measurement
 from .state import ConfigSpace
 from .surrogate import MeasurementStore, SpaceEncoding
+from ..telemetry import registry as metrics
 
 
 # ---------------------------------------------------------------------------
@@ -172,11 +174,21 @@ class EvalDispatcher:
                 thread_name_prefix="evalpipe")
         return self._pool
 
-    def _run_one(self, req: EvalRequest) -> EvalResult:
-        res = self._measure(req)
+    def _run_one(self, req: EvalRequest,
+                 t_submit: float | None = None) -> EvalResult:
+        # t_submit is only passed while a telemetry sink is attached, so
+        # the dark path takes zero perf_counter() calls
+        if t_submit is not None:
+            t0 = time.perf_counter()
+            metrics.observe("evalpipe/dispatch_wait_s", t0 - t_submit)
+            res = self._measure(req)
+            metrics.observe("evalpipe/measure_s", time.perf_counter() - t0)
+        else:
+            res = self._measure(req)
         with self._lock:
             race_access("landed", self)
             self.landed += 1
+        metrics.inc("evalpipe/landed")
         return res
 
     def submit(self, req: EvalRequest) -> Future | _Landed:
@@ -192,7 +204,10 @@ class EvalDispatcher:
         # serially); the race seam lets the lockset detector verify that
         race_access("dispatched", self)
         self.dispatched += len(reqs)
+        metrics.inc("evalpipe/dispatched", len(reqs))
+        telemetry_on = metrics.get() is not None
         if self.mode == "batched":
+            t0 = time.perf_counter() if telemetry_on else None
             if self._measure_many is not None:
                 results = list(self._measure_many(reqs))
             else:
@@ -201,11 +216,16 @@ class EvalDispatcher:
                 raise ValueError(
                     f"measure_many returned {len(results)} results "
                     f"for {len(reqs)} requests")
+            if t0 is not None:
+                metrics.observe("evalpipe/measure_s",
+                                time.perf_counter() - t0)
             race_access("landed", self)
             self.landed += len(results)
+            metrics.inc("evalpipe/landed", len(results))
             return [_Landed(r) for r in results]
         pool = self._ensure_pool()
-        return [pool.submit(self._run_one, r) for r in reqs]
+        t_submit = time.perf_counter() if telemetry_on else None
+        return [pool.submit(self._run_one, r, t_submit) for r in reqs]
 
     def close(self) -> None:
         if self._pool is not None:
@@ -590,11 +610,13 @@ class SpeculativePipeline:
             if fut is None:
                 continue
             self.stats.recycled += 1
+            metrics.inc("evalpipe/recycled")
             # a speculation that never started running measured nothing —
             # cancel it (freeing its worker slot for the re-speculation)
             # rather than letting stale work starve the fresh head
             if getattr(fut, "cancel", None) is not None and fut.cancel():
                 self.stats.cancelled += 1
+                metrics.inc("evalpipe/cancelled")
                 continue
             self._recycled.append((req, fut))
 
@@ -606,6 +628,7 @@ class SpeculativePipeline:
         race_access("pipeline", self)
         if self._queue:
             self.stats.flushes += 1
+            metrics.inc("evalpipe/rewinds")
             while self._queue:
                 self._recycle(self._queue.popleft())
         self.chain.rng.bit_generator.state = copy.deepcopy(
@@ -635,11 +658,13 @@ class SpeculativePipeline:
         step = ch.apply_transition(
             spec.proposal, spec.u, float(result.y), n=spec.n, tau=spec.tau)
         self.stats.resolved += 1
+        metrics.inc("evalpipe/resolved")
         self._committed_rng = spec.rng_after
         if self.on_resolve is not None:
             self.on_resolve(spec.request)
         if step.accepted != spec.predicted_accept:
             self.stats.mispredictions += 1
+            metrics.inc("evalpipe/mispredictions")
             self.flush()
         return ResolvedStep(
             step=step, result=result, request=spec.request,

@@ -46,6 +46,8 @@ import numpy as np
 from .annealing import _fleet_nd_jit, fleet_chains
 from .change_detect import BatchedPageHinkley
 from .instrumentation import note_round
+from ..telemetry import registry as metrics
+from ..telemetry import span
 from .costmodel import Evaluator
 from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
@@ -282,6 +284,7 @@ class FleetController(ControllerMixin):
         self._decode_cache: dict[int, tuple[dict[str, Any],
                                             ClusterConfig]] = {}
         self._round = 0
+        self.last_annealed = 0
         self.violation_history: list[float] = []
         self._mirror_reservations()
 
@@ -535,6 +538,10 @@ class FleetController(ControllerMixin):
     def round(self) -> list[FleetDecision]:
         """One fleet control round: draw jobs, anneal the active tenants
         in one jitted call, arbitrate, log, and account."""
+        with span("fleet.round", cat="fleet"):
+            return self._round_impl()
+
+    def _round_impl(self) -> list[FleetDecision]:
         r = self._round
         T = len(self.tenants)
         steps = self.steps_per_round
@@ -543,11 +550,12 @@ class FleetController(ControllerMixin):
         # BEFORE drawing (blend_of reflects round r exactly — drawing first
         # would advance the stream and switch tables one round early).
         # Cached per blend, so unchanged tenants cost a dict lookup.
-        for i, t in enumerate(self.tenants):
-            table = self._table_for(self._stream.blend_of(t.name))
-            if table is not self._tenant_tables[i]:
-                self._tenant_tables[i] = table
-                self._settle[i] = self.settle_rounds   # workload changed
+        with span("fleet.refit", cat="fleet"):
+            for i, t in enumerate(self.tenants):
+                table = self._table_for(self._stream.blend_of(t.name))
+                if table is not self._tenant_tables[i]:
+                    self._tenant_tables[i] = table
+                    self._settle[i] = self.settle_rounds  # workload changed
         jobs = next(self._stream)
         self._refresh_capacity()   # pick up foreign reservation changes
 
@@ -580,11 +588,13 @@ class FleetController(ControllerMixin):
             # active chains run through fleet_chains: bucket-padded to a
             # handful of compiled shapes (churning tenant counts stop
             # retracing) and, with a mesh, shard_map'd over tenant blocks
-            st, ys_d, acc_d = fleet_chains(
-                keys, tables_mat[active],
-                self._valid_jnp, taus, inits, rows[active],
-                shape=self._shape, categorical=self._enc.categorical,
-                mesh=self.mesh, bucket=self.chain_bucketing)
+            with span("fleet.anneal", cat="fleet",
+                      metric="fleet/anneal_s"):
+                st, ys_d, acc_d = fleet_chains(
+                    keys, tables_mat[active],
+                    self._valid_jnp, taus, inits, rows[active],
+                    shape=self._shape, categorical=self._enc.categorical,
+                    mesh=self.mesh, bucket=self.chain_bucketing)
 
             # proposals: best visited state (step-0 incumbent included)
             # under the penalized objective
@@ -620,46 +630,50 @@ class FleetController(ControllerMixin):
         # noise — which is not drift — cannot re-arm the settle counter
         # and quietly turn incremental rounds back into full ones.
         if self._detector is not None:
-            if self.incremental:
-                obs = pen_tables[np.arange(T), self._incumbents]
-                for i in np.flatnonzero(self._detector.update(obs)):
-                    self._reheat_pending[i] = True
-                    self._settle[i] = self.settle_rounds
-            else:
-                for k in range(steps):
-                    for i in np.flatnonzero(
-                            self._detector.update(ys[:, k])):
+            with span("fleet.detect", cat="fleet"):
+                if self.incremental:
+                    obs = pen_tables[np.arange(T), self._incumbents]
+                    for i in np.flatnonzero(self._detector.update(obs)):
                         self._reheat_pending[i] = True
                         self._settle[i] = self.settle_rounds
+                else:
+                    for k in range(steps):
+                        for i in np.flatnonzero(
+                                self._detector.update(ys[:, k])):
+                            self._reheat_pending[i] = True
+                            self._settle[i] = self.settle_rounds
 
         prev = self._incumbents.copy()
-        final, actions = self._arbitrate(proposals, pen_tables)
+        with span("fleet.arbitrate", cat="fleet"):
+            final, actions = self._arbitrate(proposals, pen_tables)
         self._incumbents = final
         final_v = self._violation(final)
         self.violation_history.append(final_v)
         for i, a in enumerate(actions):
             if a == "preempt":     # forcibly moved: let its chain resettle
                 self._settle[i] = self.settle_rounds
-        self._mirror_reservations()
-        if (self.ledger_check_every
-                and (r + 1) % self.ledger_check_every == 0):
-            self._ledger_crosscheck()
+        with span("fleet.ledger", cat="fleet"):
+            self._mirror_reservations()
+            if (self.ledger_check_every
+                    and (r + 1) % self.ledger_check_every == 0):
+                self._ledger_crosscheck()
 
         # the round's measurement phase goes through the evaluation
         # runtime's shared dispatch seam: ONE vectorized measure_many call
         # for simulated/tabulated evaluators, a bounded worker pool for
         # wall-clock ones — instead of a serial per-tenant loop
-        decodeds, cfgs, migs = [], [], []
-        for i in range(T):
-            decoded, cfg = self._decode_config(int(final[i]))
-            decodeds.append(decoded)
-            cfgs.append(cfg)
-            migs.append(self.evaluator.migration(
-                self._prev_cfgs[i], cfg, self.catalog))
-        measured = self._measure_batch(
-            [(decodeds[i], jobs[t.name], r, cfgs[i])
-             for i, t in enumerate(self.tenants)],
-            eval_workers=self.eval_workers)
+        with span("fleet.measure", cat="fleet", metric="fleet/measure_s"):
+            decodeds, cfgs, migs = [], [], []
+            for i in range(T):
+                decoded, cfg = self._decode_config(int(final[i]))
+                decodeds.append(decoded)
+                cfgs.append(cfg)
+                migs.append(self.evaluator.migration(
+                    self._prev_cfgs[i], cfg, self.catalog))
+            measured = self._measure_batch(
+                [(decodeds[i], jobs[t.name], r, cfgs[i])
+                 for i, t in enumerate(self.tenants)],
+                eval_workers=self.eval_workers)
 
         decisions = []
         counts = self.evaluation_counts()
@@ -689,9 +703,34 @@ class FleetController(ControllerMixin):
             decisions.append(d)
         if self.keep_decision_log:
             self.decisions.extend(decisions)
+        if metrics.get() is not None:
+            self._record_round_metrics(r, final, final_v, pen_tables,
+                                       actions, reheats_fired, measured)
         self._round += 1
         note_round("FleetController", self)
         return decisions
+
+    def _record_round_metrics(self, r, final, final_v, pen_tables,
+                              actions, reheats_fired, measured) -> None:
+        """Per-round dashboard series.  Called only with a metrics sink
+        attached — the dark round path pays one ``get()`` for all of it."""
+        T = len(self.tenants)
+        t_r = float(r)
+        metrics.record("fleet/objective",
+                       float(pen_tables[np.arange(T), final].mean()), t_r)
+        metrics.record("fleet/spend_usd_hr",
+                       float(self._spend_rate[final].sum()), t_r)
+        metrics.record("fleet/violation", final_v, t_r)
+        metrics.record("fleet/tenants", float(T), t_r)
+        metrics.record("fleet/annealed", float(self.last_annealed), t_r)
+        if measured:
+            ok = sum(1 for m in measured if not m.slo_violated)
+            metrics.record("fleet/slo_attainment", ok / len(measured), t_r)
+        for a in actions:
+            metrics.inc("fleet/actions/" + a)
+        n_reheat = sum(reheats_fired)
+        if n_reheat:
+            metrics.inc("fleet/reheats", n_reheat)
 
     def run(self, n_rounds: int) -> list[FleetDecision]:
         out = []
@@ -743,6 +782,7 @@ class FleetController(ControllerMixin):
         self._next_stream_id += 1
         self._settle = np.append(self._settle, self.settle_rounds)
         self._mirror_reservations()
+        metrics.inc("fleet/churn/arrive")
 
     def remove_tenant(self, name: str) -> None:
         """Retire tenant ``name`` between rounds, releasing its share of
@@ -768,6 +808,7 @@ class FleetController(ControllerMixin):
         self._stream_ids = np.delete(self._stream_ids, i)
         self._settle = np.delete(self._settle, i)
         self._mirror_reservations()
+        metrics.inc("fleet/churn/depart")
 
     def retune_tenant(
         self, name: str, blend: Mapping[str, float],
@@ -791,6 +832,7 @@ class FleetController(ControllerMixin):
             **({} if priority is None else {"priority": priority}))
         self.tenants = self.tenants[:i] + (spec,) + self.tenants[i + 1:]
         self._settle[i] = self.settle_rounds
+        metrics.inc("fleet/churn/phase")
 
     # ------------------------------------------------------------------
     # accounting / diagnostics
@@ -884,4 +926,16 @@ class FleetController(ControllerMixin):
             "cores": {f: float(c) for f, c in zip(self._families, cores)},
             "usd_per_hr": spend,
             "violation": self._violation(self._incumbents),
+        }
+
+    _telemetry_prefix = "fleet"
+
+    def _stats_rounds(self) -> int:
+        return self._round
+
+    def _stats_extra(self) -> dict[str, Any]:
+        return {
+            "tenants": len(self.tenants),
+            "last_annealed": int(self.last_annealed),
+            "aggregate": self.aggregate_usage(),
         }

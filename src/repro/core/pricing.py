@@ -19,6 +19,8 @@ import dataclasses
 import math
 from typing import Mapping
 
+from ..telemetry import registry as metrics
+
 
 class CapacityError(RuntimeError):
     """A reservation would exceed a family's capacity (or release more than
@@ -124,6 +126,19 @@ class ServiceCatalog:
         if n_cores < 0:
             raise ValueError("n_cores must be >= 0")
         self._capacity[name] = float(n_cores)
+        self._note_ledger(name)
+
+    def _note_ledger(self, name: str) -> None:
+        """Telemetry gauges for one family's ledger state — reserved
+        cores and (for capped families) utilization.  One truth test
+        when no sink is attached."""
+        if metrics.get() is None:
+            return
+        reserved = self.reserved(name)
+        metrics.set_gauge(f"ledger/{name}/reserved", reserved)
+        cap = self.capacity(name)
+        if cap != math.inf and cap > 0:
+            metrics.set_gauge(f"ledger/{name}/utilization", reserved / cap)
 
     def reserve(self, name: str, n_cores: float) -> None:
         """Claim ``n_cores`` from family ``name``; CapacityError if it
@@ -136,6 +151,7 @@ class ServiceCatalog:
                 f"{self.remaining(name)} (capacity {self.capacity(name)}, "
                 f"reserved {self.reserved(name)})")
         self._reserved[name] = self.reserved(name) + n_cores
+        self._note_ledger(name)
 
     def release(self, name: str, n_cores: float) -> None:
         if n_cores < 0:
@@ -145,6 +161,7 @@ class ServiceCatalog:
                 f"release({name!r}, {n_cores}) exceeds reservation "
                 f"{self.reserved(name)}")
         self._reserved[name] = max(0.0, self.reserved(name) - n_cores)
+        self._note_ledger(name)
 
     def adjust(self, name: str, delta_cores: float) -> None:
         """Incremental ledger update: ``delta_cores`` > 0 reserves, < 0

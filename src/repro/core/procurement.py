@@ -37,6 +37,8 @@ from .schedules import AdaptiveReheat, Schedule
 from .state import ClusterConfig, ConfigSpace, cluster_config_from
 from .surrogate import MeasurementStore, ObjectiveSource
 from .tabu import TabuMemory
+from ..telemetry import registry as metrics
+from ..telemetry import span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +111,8 @@ class ControllerMixin:
         return out
 
     def evaluation_counts(self) -> dict[str, int]:
-        """Cumulative (true measures, surrogate queries).
+        """Cumulative (true measures, surrogate queries).  Prefer
+        :meth:`stats`, which embeds these in the unified contract.
 
         ``true_measures`` counts ``evaluator.measure`` runs — per-job
         measurements AND the ones made while building objective tables
@@ -187,6 +190,54 @@ class ControllerMixin:
         return sum(
             d.measurement.cost_usd + d.measurement.migration_usd
             for d in self.decisions)
+
+    # -- the unified stats contract ------------------------------------
+
+    _telemetry_prefix: "str | None" = None
+
+    def _stats_rounds(self) -> int:
+        """Control rounds completed; defaults to the decision count
+        (one decision per round for the single-tenant controller)."""
+        return len(self.decisions)
+
+    def _stats_extra(self) -> dict[str, Any]:
+        """Controller-specific additions merged into :meth:`stats`."""
+        return {}
+
+    def pipeline_stats(self) -> "dict[str, Any] | None":
+        """Speculation telemetry (resolved / mispredictions / flushes /
+        recycled / hit rate); None when running inline or when the
+        controller has no speculative pipeline at all.
+
+        Prefer :meth:`stats`, which embeds this under ``"pipeline"``."""
+        pipe = getattr(self, "_pipeline", None)
+        if pipe is None:
+            return None
+        s = pipe.stats
+        return {**dataclasses.asdict(s), "hit_rate": s.hit_rate()}
+
+    def stats(self) -> dict[str, Any]:
+        """One stats dict every controller answers — the contract that
+        supersedes the ad-hoc ``pipeline_stats()`` /
+        ``evaluation_counts()`` / ``summary()`` trio (each still works,
+        and each is embedded here).
+
+        Keys: ``controller`` (class name), ``rounds``, the
+        :meth:`evaluation_counts` counters, ``pipeline``
+        (:meth:`pipeline_stats`), any controller-specific extras, and —
+        when a telemetry sink is attached — ``metrics``, the registry
+        snapshot filtered to this controller's namespace."""
+        out: dict[str, Any] = {
+            "controller": type(self).__name__,
+            "rounds": self._stats_rounds(),
+        }
+        out.update(self.evaluation_counts())
+        out["pipeline"] = self.pipeline_stats()
+        out.update(self._stats_extra())
+        reg = metrics.get()
+        if reg is not None and self._telemetry_prefix:
+            out["metrics"] = reg.snapshot(prefix=self._telemetry_prefix)
+        return out
 
 
 @dataclasses.dataclass
@@ -368,8 +419,21 @@ class ProcurementController(ControllerMixin):
             self._pipeline.flush()
 
     # -- public API --
+    _telemetry_prefix = "procurement"
+
     def submit(self, job: str | None = None) -> Decision:
         """Process one arriving job; returns the decision record."""
+        with span("procurement.submit", cat="procurement"):
+            d = self._submit_impl(job)
+        if metrics.get() is not None:
+            metrics.record("procurement/y", d.y, float(d.n))
+            metrics.record("procurement/cost_usd",
+                           d.measurement.cost_usd, float(d.n))
+            if d.reheated:
+                metrics.inc("procurement/reheats")
+        return d
+
+    def _submit_impl(self, job: str | None) -> Decision:
         self._last_job = job or next(iter(self.blend))
         if self._pipeline is not None:
             resolved = self._pipeline.step()
@@ -418,13 +482,8 @@ class ProcurementController(ControllerMixin):
         if self._pipeline is not None:
             self._pipeline.close()
 
-    def pipeline_stats(self) -> "dict[str, Any] | None":
-        """Speculation telemetry (resolved / mispredictions / flushes /
-        recycled / hit rate), or None when running inline."""
-        if self._pipeline is None:
-            return None
-        s = self._pipeline.stats
-        return {**dataclasses.asdict(s), "hit_rate": s.hit_rate()}
+    # pipeline_stats() is inherited from ControllerMixin (prefer the
+    # unified stats() contract, which embeds it under "pipeline")
 
     # -- offline planning (batched sweep -> online warm start) --
     def plan(

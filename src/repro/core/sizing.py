@@ -55,6 +55,8 @@ from .procurement import ControllerMixin, Decision
 from .schedules import AdaptiveReheat
 from .state import ClusterConfig, ConfigSpace, Dimension
 from .surrogate import ObjectiveSource
+from ..telemetry import registry as metrics
+from ..telemetry import span
 from ..workloads.microservice import (
     DEFAULT_SIZES,
     ContainerSize,
@@ -414,14 +416,32 @@ class SizingController(ControllerMixin):
     # the control round
     # ------------------------------------------------------------------
 
+    _telemetry_prefix = "sizing"
+
+    def _stats_rounds(self) -> int:
+        return self._round
+
     def round(self) -> SizingDecision:
+        with span("sizing.round", cat="sizing"):
+            d = self._round_impl()
+        if metrics.get() is not None:
+            t_r = float(d.n)
+            metrics.record("sizing/y", d.y, t_r)
+            metrics.record("sizing/cost_usd_hr", d.usd_per_hr, t_r)
+            metrics.record("sizing/slo_attainment", d.slo_attainment, t_r)
+            if d.reheated:
+                metrics.inc("sizing/reheats")
+        return d
+
+    def _round_impl(self) -> SizingDecision:
         import jax
 
         from .annealing import anneal_fleet, random_valid_states
 
         r = self._round
         rates = self._mix_at(r)
-        table = self._table_for(rates)
+        with span("sizing.refit", cat="sizing"):
+            table = self._table_for(rates)
 
         n0 = r * self.steps_per_round
         reheated = False
@@ -436,13 +456,14 @@ class SizingController(ControllerMixin):
         inits = np.array(
             random_valid_states(k_init, self._enc, self.n_chains), np.int32)
         inits[0] = np.asarray(self.incumbent, np.int32)
-        out = anneal_fleet(
-            k_run, self._enc,
-            table.reshape(self._shape).astype(np.float32),
-            self.steps_per_round,
-            np.broadcast_to(taus.astype(np.float32),
-                            (self.n_chains, self.steps_per_round)),
-            inits=inits, n_chains=self.n_chains)
+        with span("sizing.anneal", cat="sizing", metric="sizing/anneal_s"):
+            out = anneal_fleet(
+                k_run, self._enc,
+                table.reshape(self._shape).astype(np.float32),
+                self.steps_per_round,
+                np.broadcast_to(taus.astype(np.float32),
+                                (self.n_chains, self.steps_per_round)),
+                inits=inits, n_chains=self.n_chains)
 
         visited = np.concatenate(
             [inits[:, None, :], np.asarray(out["states"])],
@@ -474,7 +495,8 @@ class SizingController(ControllerMixin):
                 break
         cand_idx = [tuple(int(v) for v in np.unravel_index(f, self._shape))
                     for f in cand]
-        results = self._measure_candidates(cand_idx, rates)
+        with span("sizing.measure", cat="sizing"):
+            results = self._measure_candidates(cand_idx, rates)
         self._count_measures(len(results))
         if self.recycle_store is not None:
             for st, rr in zip(cand_idx, results):

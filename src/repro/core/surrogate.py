@@ -60,6 +60,8 @@ import numpy as np
 from .instrumentation import note_round, race_access
 from .landscape import tabulate
 from .state import ConfigSpace, Dimension, EncodedSpace, random_valid_state
+from ..telemetry import registry as metrics
+from ..telemetry import span
 
 
 # ---------------------------------------------------------------------------
@@ -687,6 +689,18 @@ class SurrogateAnnealer:
 
     def round(self) -> SurrogateRound:
         """One measure-refit-anneal round; returns its audit record."""
+        with span("surrogate.round", cat="surrogate"):
+            rec = self._round_impl()
+        if metrics.get() is not None:
+            t_r = float(rec.n)
+            metrics.record("surrogate/best_y", rec.best_y, t_r)
+            metrics.record("surrogate/window", float(rec.window_size), t_r)
+            metrics.set_gauge("surrogate/store_size", float(len(self.store)))
+            metrics.set_gauge("surrogate/stale_refreshes",
+                              float(self.stale_refreshes))
+        return rec
+
+    def _round_impl(self) -> SurrogateRound:
         import jax
 
         from .annealing import anneal_fleet, random_valid_states
@@ -717,7 +731,9 @@ class SurrogateAnnealer:
         enc = self._window_enc(sub, offs)
         W = sub.size()
         grid = np.indices(sub.shape).reshape(len(sub.shape), -1).T  # (W, nd)
-        mean, unc = self.model.predict(grid + offs, self.store, now=t)
+        with span("surrogate.refit", cat="surrogate",
+                  metric="surrogate/refit_s"):
+            mean, unc = self.model.predict(grid + offs, self.store, now=t)
         self.surrogate_queries += W
 
         # chain 0 starts at the incumbent (always inside its own window);
@@ -729,10 +745,12 @@ class SurrogateAnnealer:
         inits[0] = np.asarray(self.incumbent, np.int64) - offs
         bonus = np.broadcast_to((-self.kappa * unc).astype(np.float32),
                                 (self.n_chains, W))
-        out = anneal_fleet(
-            k_run, enc, mean.reshape(sub.shape).astype(np.float32),
-            self.steps_per_round, self.tau, inits=inits,
-            n_chains=self.n_chains, extra_costs=bonus)
+        with span("surrogate.anneal", cat="surrogate",
+                  metric="surrogate/anneal_s"):
+            out = anneal_fleet(
+                k_run, enc, mean.reshape(sub.shape).astype(np.float32),
+                self.steps_per_round, self.tau, inits=inits,
+                n_chains=self.n_chains, extra_costs=bonus)
 
         # candidate pool: every state any chain visited (step-0 included)
         visited = np.concatenate(
@@ -757,8 +775,9 @@ class SurrogateAnnealer:
                 chosen.append(int(pos))
             if len(chosen) == self.measures_per_round:
                 break
-        measured.extend(self._measure_states(
-            [visited[pos] + offs for pos in chosen], t))
+        with span("surrogate.measure", cat="surrogate"):
+            measured.extend(self._measure_states(
+                [visited[pos] + offs for pos in chosen], t))
 
         self.incumbent, best_y = self._best(t)
         rec = SurrogateRound(
@@ -787,5 +806,26 @@ class SurrogateAnnealer:
         return self._best(float(self._n))
 
     def counts(self) -> dict[str, int]:
+        """Cumulative evaluation counters.  Prefer :meth:`stats`, which
+        embeds these in the unified controller contract."""
         return {"true_measures": self.true_measures,
                 "surrogate_queries": self.surrogate_queries}
+
+    def stats(self) -> dict[str, Any]:
+        """The unified per-controller stats contract
+        (:meth:`repro.core.procurement.ControllerMixin.stats`) for the
+        surrogate loop, which is not a ``ControllerMixin``: same keys,
+        ``pipeline`` is always None (probes go through ``map_pool``, not
+        a speculative pipeline), plus the store/refresh extras."""
+        out: dict[str, Any] = {
+            "controller": type(self).__name__,
+            "rounds": self._n,
+            **self.counts(),
+            "pipeline": None,
+            "store_size": len(self.store),
+            "stale_refreshes": self.stale_refreshes,
+        }
+        reg = metrics.get()
+        if reg is not None:
+            out["metrics"] = reg.snapshot(prefix="surrogate")
+        return out

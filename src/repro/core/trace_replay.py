@@ -36,10 +36,13 @@ from typing import Any, Callable, Mapping
 
 from .costmodel import Evaluator
 from .fleet import FleetController, FleetDecision, TenantSpec
+from .instrumentation import note_round
 from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
 from .state import ClusterConfig, ConfigSpace
 from .surrogate import ObjectiveSource
+from ..telemetry import registry as metrics
+from ..telemetry import span
 from ..workloads.trace import SyntheticTrace, TraceEvent, replay_ticks
 
 
@@ -157,14 +160,15 @@ class TraceReplayController:
         for t, events in replay_ticks(self.trace, self.control_period_s):
             if max_rounds is not None and len(self.rounds) >= max_rounds:
                 break
-            applied = self._apply_events(events)
-            t0 = time.perf_counter()
-            decisions = self.fleet.round()
-            wall = time.perf_counter() - t0
+            with span("trace.tick", cat="trace"):
+                applied = self._apply_events(events)
+                t0 = time.perf_counter()
+                decisions = self.fleet.round()
+                wall = time.perf_counter() - t0
             actions = {"admit": 0, "hold": 0, "defer": 0, "preempt": 0}
             for d in decisions:
                 actions[d.action] += 1
-            self.rounds.append({
+            rec = {
                 "t": float(t),
                 "n_tenants": len(self.fleet.tenants),
                 "n_annealed": int(self.fleet.last_annealed),
@@ -173,10 +177,52 @@ class TraceReplayController:
                 "violation": float(self.fleet.violation_history[-1]),
                 "slo_attainment": self._slo_attainment(decisions),
                 "wall_s": wall,
-            })
+            }
+            self.rounds.append(rec)
+            if metrics.get() is not None:
+                self._record_tick_metrics(rec)
+            # the replay's own round boundary: exactly one per tick, on
+            # top of the wrapped FleetController's (attributed
+            # separately, so the sanitizer and telemetry each count both
+            # seams without double-counting either)
+            note_round("TraceReplayController", self)
         return self.summary()
 
+    def _record_tick_metrics(self, rec: dict[str, Any]) -> None:
+        """Per-tick dashboard series, keyed by event time (seconds)."""
+        t = rec["t"]
+        metrics.record("trace/tenants", float(rec["n_tenants"]), t)
+        metrics.record("trace/annealed", float(rec["n_annealed"]), t)
+        metrics.record("trace/violation", rec["violation"], t)
+        if not math.isnan(rec["slo_attainment"]):
+            metrics.record("trace/slo_attainment", rec["slo_attainment"], t)
+        metrics.record("trace/round_wall_s", rec["wall_s"], t)
+        for kind, k in rec["events"].items():
+            if k:
+                metrics.inc("trace/events/" + kind, k)
+
+    def stats(self) -> dict[str, Any]:
+        """The unified controller stats contract
+        (:meth:`repro.core.procurement.ControllerMixin.stats`) for the
+        replay loop: the replay summary plus the wrapped fleet's own
+        stats under ``"fleet"``.  Supersedes calling :meth:`summary`
+        directly."""
+        out: dict[str, Any] = {
+            "controller": type(self).__name__,
+            "rounds": len(self.rounds),
+            **self.fleet.evaluation_counts(),
+            "pipeline": None,
+            "summary": self.summary(),
+            "fleet": self.fleet.stats(),
+        }
+        reg = metrics.get()
+        if reg is not None:
+            out["metrics"] = reg.snapshot(prefix="trace")
+        return out
+
     def summary(self) -> dict[str, Any]:
+        """Whole-replay aggregates.  Prefer :meth:`stats`, which embeds
+        this under ``"summary"``."""
         rs = self.rounds
         n_tenant_rounds = sum(r["n_tenants"] for r in rs)
         slo = [r["slo_attainment"] for r in rs

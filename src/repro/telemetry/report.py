@@ -1,0 +1,181 @@
+"""Telemetry snapshots and the terminal dashboard CLI.
+
+:func:`build_snapshot` folds a :class:`~repro.telemetry.registry.
+MetricsRegistry` and a :class:`~repro.telemetry.spans.SpanRecorder` into
+one plain-JSON dict — the payload ``benchmarks/run.py`` writes as
+``TELEMETRY_<suite>.json`` next to each ``BENCH_<suite>.json``.
+:func:`render` turns that snapshot into a terminal dashboard: one
+sparkline row per recorded series (per-round objective / cost / SLO
+attainment), then counters, gauges, histogram percentiles, and the span
+wall-clock table.
+
+CLI::
+
+    python -m repro.telemetry.report TELEMETRY_trace.json
+    python -m repro.telemetry.report TELEMETRY_trace.json --section series
+
+The Perfetto trace is the companion artifact (``*.perfetto.json``) —
+open that in https://ui.perfetto.dev; this module is the "no browser at
+hand" view of the same run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Iterable
+
+from .registry import MetricsRegistry
+from .spans import SpanRecorder
+
+__all__ = ["SPARK", "sparkline", "build_snapshot", "render", "main"]
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: Iterable[float], width: int = 48) -> str:
+    """Unicode sparkline of ``values`` downsampled to ``width`` chars."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return ""
+    if len(vals) > width:
+        # bucket-mean downsample so spikes survive visually
+        step = len(vals) / width
+        vals = [sum(vals[int(i * step):max(int((i + 1) * step),
+                                           int(i * step) + 1)])
+                / max(int((i + 1) * step) - int(i * step), 1)
+                for i in range(width)]
+    lo, hi = min(vals), max(vals)
+    span = hi - lo
+    if span <= 0:
+        return SPARK[0] * len(vals)
+    return "".join(SPARK[min(int((v - lo) / span * (len(SPARK) - 1)
+                                 + 0.5), len(SPARK) - 1)] for v in vals)
+
+
+def build_snapshot(metrics: MetricsRegistry | None = None,
+                   spans: SpanRecorder | None = None,
+                   meta: dict[str, Any] | None = None) -> dict[str, Any]:
+    """One JSON-serializable dict for the whole run."""
+    return {
+        "meta": dict(meta or {}),
+        "metrics": metrics.snapshot() if metrics is not None else {
+            "counters": {}, "gauges": {}, "series": {}, "histograms": {}},
+        "spans": {
+            "summary": spans.summary() if spans is not None else {},
+            "dropped": spans.dropped if spans is not None else 0,
+            "count": len(spans.spans()) if spans is not None else 0,
+        },
+    }
+
+
+def _fmt(v: float) -> str:
+    if v != v:                      # NaN
+        return "nan"
+    if abs(v) >= 1e5 or (0 < abs(v) < 1e-3):
+        return f"{v:.3g}"
+    if float(v).is_integer() and abs(v) < 1e9:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render(snap: dict[str, Any], width: int = 48,
+           sections: tuple[str, ...] = ("series", "counters", "gauges",
+                                        "histograms", "spans")) -> str:
+    """Terminal dashboard for a :func:`build_snapshot` payload."""
+    out: list[str] = []
+    meta = snap.get("meta") or {}
+    if meta:
+        out.append("== run: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(meta.items())))
+    m = snap.get("metrics") or {}
+
+    series = m.get("series") or {}
+    if "series" in sections and series:
+        out.append("-- per-round series " + "-" * (width + 6))
+        name_w = max(len(n) for n in series)
+        for name in sorted(series):
+            v = series[name].get("v", [])
+            if not v:
+                continue
+            spark = sparkline(v, width)
+            out.append(
+                f"{name:<{name_w}}  n={len(v):<5d} "
+                f"min={_fmt(min(v)):>8} last={_fmt(v[-1]):>8} "
+                f"max={_fmt(max(v)):>8}  {spark}")
+            if series[name].get("dropped"):
+                out.append(f"{'':<{name_w}}  ({series[name]['dropped']} "
+                           "older points dropped from ring)")
+
+    counters = m.get("counters") or {}
+    if "counters" in sections and counters:
+        out.append("-- counters")
+        name_w = max(len(n) for n in counters)
+        for name in sorted(counters):
+            out.append(f"{name:<{name_w}}  {_fmt(counters[name])}")
+
+    gauges = m.get("gauges") or {}
+    if "gauges" in sections and gauges:
+        out.append("-- gauges")
+        name_w = max(len(n) for n in gauges)
+        for name in sorted(gauges):
+            out.append(f"{name:<{name_w}}  {_fmt(gauges[name])}")
+
+    hists = m.get("histograms") or {}
+    if "histograms" in sections and hists:
+        out.append("-- histograms (seconds unless suffixed otherwise)")
+        name_w = max(len(n) for n in hists)
+        for name in sorted(hists):
+            h = hists[name]
+            out.append(
+                f"{name:<{name_w}}  count={int(h['count']):<6d} "
+                f"mean={_fmt(h['mean']):>9} p50={_fmt(h['p50']):>9} "
+                f"p90={_fmt(h['p90']):>9} p99={_fmt(h['p99']):>9} "
+                f"max={_fmt(h['max']):>9}")
+
+    sp = (snap.get("spans") or {}).get("summary") or {}
+    if "spans" in sections and sp:
+        out.append("-- spans (wall-clock, retained window)")
+        name_w = max(len(n) for n in sp)
+        for name in sorted(sp, key=lambda n: -sp[n]["total_ms"]):
+            st = sp[name]
+            out.append(
+                f"{name:<{name_w}}  count={int(st['count']):<6d} "
+                f"total={st['total_ms']:>10.2f}ms "
+                f"mean={st['mean_ms']:>8.3f}ms")
+        if snap["spans"].get("dropped"):
+            out.append(f"({snap['spans']['dropped']} older spans dropped "
+                       "from ring)")
+
+    return "\n".join(out) if out else "(empty telemetry snapshot)"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.report",
+        description="Render a TELEMETRY_*.json snapshot as a terminal "
+                    "dashboard.")
+    ap.add_argument("path", help="snapshot JSON written by "
+                                 "Telemetry.write_artifacts / run.py")
+    ap.add_argument("--width", type=int, default=48,
+                    help="sparkline width (chars)")
+    ap.add_argument("--section", action="append", default=None,
+                    choices=["series", "counters", "gauges", "histograms",
+                             "spans"],
+                    help="render only these sections (repeatable)")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        snap = json.load(f)
+    sections = tuple(args.section) if args.section else (
+        "series", "counters", "gauges", "histograms", "spans")
+    try:
+        print(render(snap, width=args.width, sections=sections))
+    except BrokenPipeError:        # e.g. piped into `head`
+        import os
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
