@@ -113,7 +113,7 @@ def pipeline_overlap(smoke: bool = False) -> dict:
     d_piped = piped.run(n_jobs)
     wall_piped = time.perf_counter() - t0
     piped.close()
-    stats = piped.pipeline_stats()
+    stats = piped.stats()["pipeline"]
 
     speedup = wall_serial / max(wall_piped, 1e-9)
     result["procurement"] = {

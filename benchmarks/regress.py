@@ -1,0 +1,229 @@
+"""Benchmark regression gate: fresh ``BENCH_*.json`` vs committed baselines.
+
+Closes the observability loop: the benches *emit* artifacts, the
+telemetry stack *explains* them, and this module *holds the line* —
+every freshly emitted ``BENCH_*.json`` at the repo root is compared
+against the committed history in ``benchmarks/baselines/`` with
+per-metric tolerances, and any regression fails the run (exit 1).
+Every comparison (pass or fail) is appended to ``BENCH_history.jsonl``
+so trends survive CI artifact retention.
+
+Metric semantics per file live in :data:`SPECS`: each metric names a
+dotted path into the JSON (``-1`` indexes the last list element), a
+direction (``higher`` / ``lower`` is better, or ``equal`` for parity
+booleans), and a relative and/or absolute slack.  Comparisons only run
+when the ``smoke`` flags of fresh and baseline artifacts match — a
+smoke-mode rerun is *not* comparable to a full-mode baseline and is
+skipped with a note rather than failed.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.regress             # gate all
+    PYTHONPATH=src python -m benchmarks.regress BENCH_trace.json
+    PYTHONPATH=src python -m benchmarks.regress --update    # re-seed
+
+Stdlib-only; runs anywhere the artifacts exist (no jax needed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from typing import Any
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINES = os.path.join(REPO_ROOT, "benchmarks", "baselines")
+DEFAULT_HISTORY = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gated metric inside a BENCH artifact."""
+
+    path: str                 # dotted path; "-1" indexes last list element
+    direction: str            # "higher" | "lower" | "equal"
+    rel: float = 0.0          # relative slack on the baseline value
+    abs_tol: float = 0.0      # absolute slack (additive with rel)
+
+    def check(self, fresh: float, base: float) -> bool:
+        """True when ``fresh`` is acceptable against ``base``."""
+        if self.direction == "equal":
+            return fresh == base
+        slack = abs(base) * self.rel + self.abs_tol
+        if self.direction == "higher":
+            return fresh >= base - slack
+        return fresh <= base + slack
+
+
+#: Per-artifact gate specs.  Tolerances are deliberately loose — the
+#: benches are seeded but wall-clock-sensitive paths (speculation
+#: scheduling, annealer tie-breaks across BLAS builds) can wobble; the
+#: gate exists to catch *regressions*, not noise.
+SPECS: dict[str, tuple[Metric, ...]] = {
+    "BENCH_pipeline.json": (
+        Metric("speedup", "higher", rel=0.35),
+        Metric("speculation.hit_rate", "higher", rel=0.25),
+        Metric("parity_k1", "equal"),
+    ),
+    "BENCH_sizing.json": (
+        Metric("trajectory.-1.annealed.y", "lower", rel=0.30),
+        Metric("trajectory.-1.annealed.slo_attainment", "higher", rel=0.10),
+    ),
+    "BENCH_surrogate.json": (
+        Metric("validation_trajectory.-1.best_y", "lower", rel=0.15),
+        Metric("validation_trajectory.-1.true_measures", "lower", rel=0.50),
+    ),
+    "BENCH_trace.json": (
+        Metric("scaling.64.slo_attainment", "higher", rel=0.05),
+        Metric("scaling.64.annealed_fraction", "lower", rel=0.50),
+        Metric("scaling.64.violation_rounds", "lower", abs_tol=2.0),
+        Metric("parity.full_identical", "equal"),
+        Metric("parity.incremental_identical", "equal"),
+    ),
+}
+
+
+def _get(obj: Any, path: str) -> Any:
+    """Resolve a dotted path; integer segments index lists."""
+    cur = obj
+    for seg in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(seg)]
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                raise KeyError(path)
+            cur = cur[seg]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def compare(fresh: dict[str, Any], base: dict[str, Any],
+            metrics: tuple[Metric, ...]) -> dict[str, Any]:
+    """Evaluate every metric; returns ``{path: {fresh, baseline, ok}}``."""
+    out: dict[str, Any] = {}
+    for m in metrics:
+        try:
+            fv, bv = _get(fresh, m.path), _get(base, m.path)
+        except (KeyError, IndexError, ValueError, TypeError):
+            out[m.path] = {"fresh": None, "baseline": None, "ok": False,
+                           "note": "path missing"}
+            continue
+        if isinstance(fv, bool) or isinstance(bv, bool):
+            ok = bool(fv) == bool(bv) if m.direction == "equal" else bool(fv)
+            out[m.path] = {"fresh": bool(fv), "baseline": bool(bv), "ok": ok}
+            continue
+        fvf, bvf = float(fv), float(bv)
+        ok = (math.isfinite(fvf) and math.isfinite(bvf)
+              and m.check(fvf, bvf))
+        out[m.path] = {"fresh": fvf, "baseline": bvf, "ok": ok,
+                       "direction": m.direction}
+    return out
+
+
+def gate(files: list[str], baselines: str, fresh_dir: str,
+         history: str | None, update: bool) -> int:
+    """Compare each artifact; append history; return exit code."""
+    failures = 0
+    entries: list[dict[str, Any]] = []
+    sha = _git_sha()
+    for name in files:
+        fresh_path = os.path.join(fresh_dir, name)
+        base_path = os.path.join(baselines, name)
+        if not os.path.exists(fresh_path):
+            print(f"[regress] {name}: no fresh artifact — skipped")
+            continue
+        if update:
+            os.makedirs(baselines, exist_ok=True)
+            shutil.copyfile(fresh_path, base_path)
+            print(f"[regress] {name}: baseline updated from fresh artifact")
+            continue
+        if not os.path.exists(base_path):
+            print(f"[regress] {name}: no committed baseline — run "
+                  f"--update to seed; skipped")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        f_smoke = bool(fresh.get("smoke", False))
+        b_smoke = bool(base.get("smoke", False))
+        if f_smoke != b_smoke:
+            print(f"[regress] {name}: smoke flags differ "
+                  f"(fresh={f_smoke}, baseline={b_smoke}) — not "
+                  f"comparable, skipped")
+            entries.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                                time.gmtime()),
+                            "sha": sha, "file": name, "smoke": f_smoke,
+                            "status": "skipped_smoke_mismatch"})
+            continue
+        result = compare(fresh, base, SPECS[name])
+        bad = {p: r for p, r in result.items() if not r["ok"]}
+        status = "regressed" if bad else "pass"
+        entries.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                            time.gmtime()),
+                        "sha": sha, "file": name, "smoke": f_smoke,
+                        "status": status, "metrics": result})
+        if bad:
+            failures += 1
+            print(f"[regress] {name}: REGRESSED")
+            for p, r in bad.items():
+                print(f"  {p}: fresh={r['fresh']} vs "
+                      f"baseline={r['baseline']} "
+                      f"({r.get('note', r.get('direction', ''))})")
+        else:
+            print(f"[regress] {name}: ok "
+                  f"({len(result)} metrics within tolerance)")
+    if history and entries:
+        with open(history, "a") as f:
+            for e in entries:
+                f.write(json.dumps(e, sort_keys=True) + "\n")
+        print(f"[regress] appended {len(entries)} entries to "
+              f"{os.path.relpath(history, REPO_ROOT)}")
+    return 1 if failures else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress",
+        description="Gate fresh BENCH_*.json against committed baselines.")
+    ap.add_argument("files", nargs="*", default=None,
+                    help="artifact filenames to gate (default: all known)")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="committed baseline directory")
+    ap.add_argument("--fresh-dir", default=REPO_ROOT,
+                    help="directory holding freshly emitted artifacts")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help="JSONL trend log to append to ('' disables)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts over the baselines instead "
+                         "of comparing")
+    args = ap.parse_args(argv)
+    files = list(args.files) if args.files else sorted(SPECS)
+    unknown = [f for f in files if f not in SPECS]
+    if unknown:
+        ap.error(f"no gate spec for: {', '.join(unknown)} "
+                 f"(known: {', '.join(sorted(SPECS))})")
+    return gate(files, args.baselines, args.fresh_dir,
+                args.history or None, args.update)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -104,6 +104,39 @@ def _check_telemetry(b: Bench, tel: "telemetry.Telemetry", n_rounds: int,
     for series in ("fleet/objective", "fleet/spend_usd_hr",
                    "trace/slo_attainment"):
         b.check(f"telemetry: dashboard renders {series}", series in dash)
+    # -- PR 9: provenance exactness on the armed leg -------------------
+    # Every committed round inside the flight-recorder window must carry
+    # DecisionRecords whose exact_split sums BIT-EQUAL to the committed
+    # objective and whose named terms ladder passes the float32 bar.
+    recs = tel.provenance.records() if tel.provenance is not None else ()
+    fleet_recs = [r for r in recs if r.controller == "fleet"]
+    rounds_seen = {r.round for r in fleet_recs}
+    lo = min(rounds_seen) if rounds_seen else 0
+    committed = set(range(lo, n_rounds))
+    b.check(f"provenance: every committed round in recorder window has "
+            f"decision records ({len(rounds_seen & committed)}/"
+            f"{len(committed)})",
+            bool(fleet_recs) and committed <= rounds_seen)
+    split_ok = all(sum(v for _, v in r.exact_split) == r.y
+                   for r in fleet_recs)
+    terms_ok = all(r.check() for r in fleet_recs)
+    b.check(f"provenance: exact_split sums bit-equal to committed y "
+            f"on all {len(fleet_recs)} records", split_ok)
+    b.check(f"provenance: named terms ladder within float32 exactness "
+            f"on all {len(fleet_recs)} records", terms_ok)
+    result["provenance"] = {
+        "records": len(fleet_recs), "rounds_covered": len(rounds_seen),
+        "dropped": tel.provenance.dropped if tel.provenance else 0,
+        "exact_split_bit_equal": split_ok, "terms_f32_exact": terms_ok}
+
+    pages = [a.rule for a in tel.alerts.fired
+             if a.severity == "page"] if tel.alerts is not None else []
+    result["alerts"] = {
+        "fired": [a.to_dict() for a in tel.alerts.fired]
+        if tel.alerts is not None else [],
+        "pages": pages,
+    }
+
     paths = tel.write_artifacts(
         "TELEMETRY_trace", out_dir=os.path.dirname(TOP_LEVEL_ARTIFACT))
     with open(paths["perfetto"]) as f:
@@ -113,6 +146,26 @@ def _check_telemetry(b: Bench, tel: "telemetry.Telemetry", n_rounds: int,
     result["telemetry"] = {"artifacts": paths,
                            "trace_events": len(events),
                            "spans_dropped": tel.spans.dropped}
+
+
+def _budget_cut_leg(b: Bench, result: dict) -> None:
+    """Inject a budget cut on a small replayed fleet and require the
+    default ``spend_over_budget`` page alert to fire.  Runs in its own
+    telemetry session so the deliberate breach never pollutes the
+    baseline leg's ``--fail-on-alerts`` gate."""
+    with telemetry.session(meta={"bench": "trace_fleet",
+                                 "leg": "budget_cut"}) as tel:
+        ctl = _controller(8, 240.0, seed=3, keep_decision_log=False)
+        ctl.replay()                       # populate tenants, warm state
+        fleet = ctl.fleet
+        fleet.budget_usd_hr *= 0.02        # even the cheapest states breach
+        for _ in range(6):
+            fleet.round()
+        fired = [a.rule for a in tel.alerts.fired]
+    b.check(f"alerts: spend_over_budget page alert fires under an "
+            f"injected 98% budget cut (fired: {fired})",
+            "spend_over_budget" in fired)
+    result["budget_cut_leg"] = {"fired": fired}
 
 
 def trace_fleet(tenant_counts=(64, 256, 1024), horizon_s: float = 3600.0,
@@ -205,6 +258,23 @@ def trace_fleet(tenant_counts=(64, 256, 1024), horizon_s: float = 3600.0,
     b.check(f"T={parity_T}: sharded+bucketed INCREMENTAL replay "
             f"decision-identical to dense", ok_incr)
 
+    # -- PR 9: provenance is observation-only --------------------------
+    # Same dense-incremental replay with the flight recorder armed must
+    # commit the exact same FleetDecision log as the dark run above.
+    with telemetry.session(meta={"bench": "trace_fleet",
+                                 "leg": "parity_armed"}):
+        ctl = _controller(parity_T, parity_horizon_s, seed=7,
+                          keep_decision_log=True,
+                          incremental=True, chain_bucketing=False)
+        ctl.replay()
+        armed_sig = _decision_sig(ctl)
+    ok_armed = armed_sig == sigs["dense_incremental"]
+    result["parity"]["provenance_armed_identical"] = ok_armed
+    b.check(f"T={parity_T}: provenance-armed replay decision-identical "
+            f"to dark (observation-only)", ok_armed)
+
+    _budget_cut_leg(b, result)
+
     write_json("trace_fleet.json", result)
     with open(TOP_LEVEL_ARTIFACT, "w") as f:
         json.dump(result, f, indent=2)
@@ -217,8 +287,21 @@ def run_all() -> list[dict]:
 
 if __name__ == "__main__":
     import argparse
+    import sys
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="64-tenant short-horizon tier-1 gate")
+    ap.add_argument("--fail-on-alerts", action="store_true",
+                    help="exit 1 if any page-severity alert fired on the "
+                         "telemetry-armed baseline leg (nightly gate; the "
+                         "injected budget-cut leg is exempt by design)")
     args = ap.parse_args()
-    print(json.dumps([trace_fleet(smoke=args.smoke)], indent=2))
+    out = trace_fleet(smoke=args.smoke)
+    print(json.dumps([out], indent=2))
+    if args.fail_on_alerts:
+        with open(TOP_LEVEL_ARTIFACT) as f:
+            pages = (json.load(f).get("alerts") or {}).get("pages") or []
+        if pages:
+            print(f"[trace_fleet] page alerts fired on baseline leg: "
+                  f"{pages}", file=sys.stderr)
+            sys.exit(1)

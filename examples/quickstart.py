@@ -56,6 +56,11 @@ def main() -> None:
     print(f"\nround dashboard: Y "
           f"{telemetry.sparkline(ys, width=60)}  (300 rounds)")
 
+    # the flight recorder rode along: every committed decision carries
+    # an exact objective-term decomposition and a one-line explanation
+    why = next(r for r in tel.provenance.records() if r.round == 1)
+    print(f"why (round 1): {why.why()}")
+
     best_cfg, best_y = controller.best_config()
     Y = blended_surface(EC2_CATALOG_ADJUSTED, BLEND_BEFORE, cores)
     print(f"\nbest seen: ({best_cfg.instance_type}, "
@@ -98,7 +103,7 @@ def pipelined(space) -> None:
         c.run(60)
         walls[name] = time.perf_counter() - t0
         c.close()
-        stats = c.pipeline_stats()
+        stats = c.stats()["pipeline"]
         extra = (f"  hit rate {stats['hit_rate']:.0%}, "
                  f"{len(c.recycle_store)} states recycled into the store"
                  if stats else "")

@@ -354,6 +354,50 @@ def first_hit_time(states: jax.Array, target: jax.Array | int) -> jax.Array:
     return jnp.where(hits.any(), jnp.argmax(hits), n)
 
 
+def chain_accept_stats(
+    ys: np.ndarray,                     # (C, n_steps) proposal objectives
+    accepts: np.ndarray,                # (C, n_steps) accept flags
+    y0: np.ndarray | float,             # (C,) objective at the inits
+    taus: np.ndarray,                   # (C, n_steps) temperatures
+) -> tuple[np.ndarray, np.ndarray]:
+    """Temperature and heat-bath probability at each chain's LAST
+    accepted transition, recovered post hoc from one compiled round's
+    outputs (numpy only — the provenance layer's read path, same
+    forward-fill trick as ``ControllerMixin.explored_flags``).
+
+    Returns ``(tau_at, p)`` of shape (C,): ``tau_at[c]`` is the
+    temperature at the last accepted step (the final step's temperature
+    when nothing was accepted) and ``p[c] = exp(-max(dy, 0)/tau)`` the
+    acceptance probability of that transition against the incumbent the
+    chain actually held before it (NaN when nothing was accepted).
+    """
+    ys = np.asarray(ys, np.float64)
+    accepts = np.asarray(accepts, bool)
+    C, n_steps = ys.shape
+    taus = np.broadcast_to(np.asarray(taus, np.float64), (C, n_steps))
+    kk = np.broadcast_to(np.arange(n_steps)[None, :], (C, n_steps))
+    last_acc = np.maximum.accumulate(np.where(accepts, kk, -1), axis=1)
+    prev_acc = np.concatenate(
+        [np.full((C, 1), -1), last_acc[:, :-1]], axis=1)
+    y0_col = np.broadcast_to(
+        np.asarray(y0, np.float64).reshape(-1, 1), (C, 1)).copy()
+    inc_before = np.where(
+        prev_acc >= 0,
+        np.take_along_axis(ys, np.maximum(prev_acc, 0), axis=1), y0_col)
+    k_last = last_acc[:, -1]
+    has = k_last >= 0
+    idx = np.maximum(k_last, 0)[:, None]
+    dy = (np.take_along_axis(ys, idx, axis=1)[:, 0]
+          - np.take_along_axis(inc_before, idx, axis=1)[:, 0])
+    tau_at = np.where(has,
+                      np.take_along_axis(taus, idx, axis=1)[:, 0],
+                      taus[:, -1])
+    pos_tau = np.maximum(tau_at, 1e-300)
+    p = np.exp(-np.maximum(dy, 0.0) / pos_tau)
+    p = np.where(tau_at <= 0.0, (dy <= 0.0).astype(np.float64), p)
+    return tau_at, np.where(has, p, np.nan)
+
+
 def jobs_to_min_vs_tau(
     key: jax.Array,
     y_table: np.ndarray | jax.Array,

@@ -43,9 +43,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .annealing import _fleet_nd_jit, fleet_chains
+from .annealing import _fleet_nd_jit, chain_accept_stats, fleet_chains
 from .change_detect import BatchedPageHinkley
 from .instrumentation import note_round
+from ..telemetry import provenance
 from ..telemetry import registry as metrics
 from ..telemetry import span
 from .costmodel import Evaluator
@@ -459,6 +460,10 @@ class FleetController(ControllerMixin):
         weights = np.asarray([t.priority for t in self.tenants])
         order = np.argsort(-(weights * deltas), kind="stable")
         actions = ["hold"] * T
+        # provenance-armed only: which tenant's marginal breach share
+        # caused each defer/preempt (dark rounds pay one dict literal)
+        attrib: dict[int, str] = {}
+        armed = provenance.get() is not None
         for i in order:
             if proposals[i] == cur[i] or deltas[i] <= 0:
                 continue
@@ -471,6 +476,11 @@ class FleetController(ControllerMixin):
                 actions[i] = "admit"
             else:
                 actions[i] = "defer"
+                if armed:
+                    trial = cur.copy()
+                    trial[i] = proposals[i]
+                    attrib[i] = self._attribute_breach(
+                        cores + dc, spend + ds, trial, exclude=i)
         if self._overshoot(cores, spend) > 1e-9:
             # incumbents themselves violate (shrunk capacity, hot start):
             # preempt lowest-priority tenants onto their best fitting
@@ -487,11 +497,33 @@ class FleetController(ControllerMixin):
                     continue
                 best = self._best_feasible_from(i, cores_wo, spend_wo)
                 if best != cur[i]:
+                    if armed:
+                        attrib[i] = self._attribute_breach(
+                            cores, spend, cur, exclude=i)
                     cores = cores_wo + self._cores_by_family[:, best]
                     spend = spend_wo + float(self._spend_rate[best])
                     cur[i] = best
                     actions[i] = "preempt"
+        self._last_attribution = attrib
         return cur, actions
+
+    def _attribute_breach(self, cores: np.ndarray, spend: float,
+                          states: np.ndarray, exclude: int) -> str:
+        """Name of the tenant (other than ``exclude``) whose marginal
+        contribution to the aggregate overshoot at ``(cores, spend)`` —
+        given assignment ``states`` — is largest; "" when no other
+        tenant contributes.  Provenance-armed arbitration only."""
+        v = self._overshoot(cores, spend)
+        best_j, best_m = -1, 1e-9
+        for j in range(len(self.tenants)):
+            if j == exclude:
+                continue
+            m = v - self._overshoot(
+                cores - self._cores_by_family[:, states[j]],
+                spend - self._spend_rate[states[j]])
+            if m > best_m:
+                best_j, best_m = j, m
+        return self.tenants[best_j].name if best_j >= 0 else ""
 
     # ------------------------------------------------------------------
     # the control round
@@ -579,6 +611,9 @@ class FleetController(ControllerMixin):
                     sched.reheat(n0)
                     self._reheat_pending[i] = False
                     reheats_fired[i] = True
+                    provenance.note_event(
+                        "reheat", r, self.tenants[i].name,
+                        detail=f"tau_hot={self._tau_hot:g}")
                 taus[k] = sched.tau_array(n0, steps)
             taus_last[active] = taus[:, -1]
             inits = np.stack(
@@ -636,12 +671,18 @@ class FleetController(ControllerMixin):
                     for i in np.flatnonzero(self._detector.update(obs)):
                         self._reheat_pending[i] = True
                         self._settle[i] = self.settle_rounds
+                        provenance.note_event(
+                            "drift", r, self.tenants[i].name,
+                            detail="incumbent objective shifted")
                 else:
                     for k in range(steps):
                         for i in np.flatnonzero(
                                 self._detector.update(ys[:, k])):
                             self._reheat_pending[i] = True
                             self._settle[i] = self.settle_rounds
+                            provenance.note_event(
+                                "drift", r, self.tenants[i].name,
+                                detail=f"chain objective shifted (step {k})")
 
         prev = self._incumbents.copy()
         with span("fleet.arbitrate", cat="fleet"):
@@ -706,9 +747,77 @@ class FleetController(ControllerMixin):
         if metrics.get() is not None:
             self._record_round_metrics(r, final, final_v, pen_tables,
                                        actions, reheats_fired, measured)
+        if provenance.get() is not None:
+            chain = None
+            if A:
+                chain = {"flat": flat, "pen_a": pen_a, "best": best,
+                         "ys": ys[active], "accepts": accepts,
+                         "y0": y0, "taus": taus}
+            self._record_round_provenance(
+                r, decisions, final, pen_tables, tables_mat, rows,
+                active, chain)
         self._round += 1
         note_round("FleetController", self)
         return decisions
+
+    def _record_round_provenance(self, r, decisions, final, pen_tables,
+                                 tables_mat, rows, active, chain) -> None:
+        """One DecisionRecord per tenant per committed round.  Called
+        only with a provenance sink attached; every breakdown input is
+        a table the round already computed (no extra jit outputs).
+
+        Exactness: ``exact_split`` = (base table value, coupling row) —
+        the committed ``y = pen_tables[i, s]`` came from the elementwise
+        float64 add ``tables_mat + rows``, and the scalar ladder replays
+        that identical IEEE op, so the split sums bit-for-bit.  The named
+        ``terms`` ladder decomposes this round's measurement through
+        :func:`provenance.objective_terms` (bit-equal to
+        ``objective.base(m)``) and carries the table-vs-measurement gap
+        explicitly as ``table_gap``, so the full ladder reproduces the
+        committed value to float64 round-off — far inside the float32
+        bar ``DecisionRecord.check`` enforces."""
+        if chain is not None:
+            tau_at, p_at = chain_accept_stats(
+                chain["ys"], chain["accepts"], chain["y0"], chain["taus"])
+        arr = {int(i): k for k, i in enumerate(active)}
+        attrib = getattr(self, "_last_attribution", {})
+        base_obj = self.objective.base
+        for i, d in enumerate(decisions):
+            s = int(final[i])
+            base_val = float(tables_mat[i, s])
+            coup = float(rows[i, s])
+            ot = provenance.objective_terms(base_obj, d.measurement)
+            y_meas = provenance.ladder_sum(ot)
+            terms = ot + (("table_gap", base_val - y_meas),
+                          ("coupling", coup))
+            tau_i, p_i = float(d.tau), float("nan")
+            rejected, rejected_y = None, float("nan")
+            k = arr.get(i)
+            if k is not None:
+                tau_i, p_i = float(tau_at[k]), float(p_at[k])
+                row = chain["flat"][k]                # visited, (steps+1,)
+                pv = chain["pen_a"][k][row]
+                prop = int(row[chain["best"][k]])
+                if d.action in ("defer", "preempt") or prop != s:
+                    # the chain's own proposal was turned down (or the
+                    # arbiter moved the tenant elsewhere)
+                    rejected, rejected_y = prop, float(pen_tables[i, prop])
+                else:
+                    # proposal committed: runner-up distinct visited state
+                    mask = row != s
+                    if mask.any():
+                        j = int(np.where(mask, pv, np.inf).argmin())
+                        rejected, rejected_y = int(row[j]), float(pv[j])
+            provenance.record(provenance.DecisionRecord(
+                controller="fleet", round=r, tenant=d.tenant,
+                action=d.action, state=s, y=d.y, terms=terms,
+                exact_split=(("base", base_val), ("coupling", coup)),
+                tau=tau_i, accept_prob=p_i,
+                rejected=rejected, rejected_y=rejected_y,
+                counterfactual=(rejected_y - d.y if rejected is not None
+                                else float("nan")),
+                attribution=attrib.get(i, ""),
+                violation=d.violation, reheated=d.reheated))
 
     def _record_round_metrics(self, r, final, final_v, pen_tables,
                               actions, reheats_fired, measured) -> None:
@@ -722,6 +831,9 @@ class FleetController(ControllerMixin):
                        float(self._spend_rate[final].sum()), t_r)
         metrics.record("fleet/violation", final_v, t_r)
         metrics.record("fleet/tenants", float(T), t_r)
+        if math.isfinite(self.budget_usd_hr):
+            # the alert engine's budget_burn rules read this gauge
+            metrics.set_gauge("fleet/budget_usd_hr", self.budget_usd_hr)
         metrics.record("fleet/annealed", float(self.last_annealed), t_r)
         if measured:
             ok = sum(1 for m in measured if not m.slo_violated)
@@ -783,6 +895,7 @@ class FleetController(ControllerMixin):
         self._settle = np.append(self._settle, self.settle_rounds)
         self._mirror_reservations()
         metrics.inc("fleet/churn/arrive")
+        provenance.note_event("arrive", self._round, spec.name)
 
     def remove_tenant(self, name: str) -> None:
         """Retire tenant ``name`` between rounds, releasing its share of
@@ -809,6 +922,7 @@ class FleetController(ControllerMixin):
         self._settle = np.delete(self._settle, i)
         self._mirror_reservations()
         metrics.inc("fleet/churn/depart")
+        provenance.note_event("depart", self._round, name)
 
     def retune_tenant(
         self, name: str, blend: Mapping[str, float],
@@ -833,6 +947,7 @@ class FleetController(ControllerMixin):
         self.tenants = self.tenants[:i] + (spec,) + self.tenants[i + 1:]
         self._settle[i] = self.settle_rounds
         metrics.inc("fleet/churn/phase")
+        provenance.note_event("phase", self._round, name)
 
     # ------------------------------------------------------------------
     # accounting / diagnostics

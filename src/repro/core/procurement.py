@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -37,6 +38,7 @@ from .schedules import AdaptiveReheat, Schedule
 from .state import ClusterConfig, ConfigSpace, cluster_config_from
 from .surrogate import MeasurementStore, ObjectiveSource
 from .tabu import TabuMemory
+from ..telemetry import provenance
 from ..telemetry import registry as metrics
 from ..telemetry import span
 
@@ -204,17 +206,25 @@ class ControllerMixin:
         """Controller-specific additions merged into :meth:`stats`."""
         return {}
 
-    def pipeline_stats(self) -> "dict[str, Any] | None":
+    def _pipeline_stats(self) -> "dict[str, Any] | None":
         """Speculation telemetry (resolved / mispredictions / flushes /
         recycled / hit rate); None when running inline or when the
-        controller has no speculative pipeline at all.
-
-        Prefer :meth:`stats`, which embeds this under ``"pipeline"``."""
+        controller has no speculative pipeline at all.  The
+        :meth:`stats` contract embeds this under ``"pipeline"``."""
         pipe = getattr(self, "_pipeline", None)
         if pipe is None:
             return None
         s = pipe.stats
         return {**dataclasses.asdict(s), "hit_rate": s.hit_rate()}
+
+    def pipeline_stats(self) -> "dict[str, Any] | None":
+        """Deprecated: read ``stats()["pipeline"]`` instead.  Routed
+        through :meth:`stats` so the unified contract is the single
+        source of truth; emits one :class:`DeprecationWarning`."""
+        warnings.warn(
+            "pipeline_stats() is deprecated; read stats()['pipeline']",
+            DeprecationWarning, stacklevel=2)
+        return self.stats()["pipeline"]
 
     def stats(self) -> dict[str, Any]:
         """One stats dict every controller answers — the contract that
@@ -232,7 +242,7 @@ class ControllerMixin:
             "rounds": self._stats_rounds(),
         }
         out.update(self.evaluation_counts())
-        out["pipeline"] = self.pipeline_stats()
+        out["pipeline"] = self._pipeline_stats()
         out.update(self._stats_extra())
         reg = metrics.get()
         if reg is not None and self._telemetry_prefix:
@@ -455,9 +465,56 @@ class ProcurementController(ControllerMixin):
             true_measures=counts["true_measures"],
             surrogate_queries=counts["surrogate_queries"],
         )
+        if provenance.get() is not None:
+            self._record_decision_provenance(d, step, m)
         self.decisions.append(d)
         note_round("ProcurementController", self)
         return d
+
+    def _record_decision_provenance(self, d: Decision, step: Step,
+                                    m: Measurement) -> None:
+        """One DecisionRecord per arriving job.  Armed-only; the dark
+        submit path pays one module-global load.
+
+        Exactness: an accepted step committed ``y_current == y_proposed``,
+        which was computed either as ``objective(m)`` (mirrored op for op
+        by :func:`provenance.objective_terms`) or, under
+        ``evaluate_blend``, as ``0.0 + w_0*objective(m_0) + ...`` in
+        blend order — the same left-to-right ladder
+        :func:`provenance.ladder_sum` replays, so both tiers sum
+        bit-for-bit.  A rejected step keeps the incumbent (trivial
+        one-term split) and files the proposal as the rejected
+        candidate with its counterfactual delta."""
+        prev_y = getattr(self, "_prov_prev_y", None)
+        y = float(step.y_current)
+        if step.accepted:
+            action = "accept"
+            if self.evaluate_blend and self._last_measures:
+                names, weights = self._blend_weights()
+                terms = tuple(
+                    ("blend/" + name, float(w) * self.objective(meas))
+                    for name, w, meas in zip(names, weights,
+                                             self._last_measures))
+            else:
+                terms = provenance.objective_terms(self.objective, m)
+            rejected, rejected_y = None, float("nan")
+        else:
+            action = "reject"
+            terms = (("incumbent_y", y),)
+            rejected, rejected_y = step.proposed, float(step.y_proposed)
+        dy = (float(step.y_proposed) - prev_y if prev_y is not None
+              else float("nan"))
+        p = (provenance.acceptance_probability(dy, float(step.tau))
+             if prev_y is not None else float("nan"))
+        provenance.record(provenance.DecisionRecord(
+            controller="procurement", round=int(step.n), tenant="",
+            action=action, state=step.state, y=y, terms=terms,
+            exact_split=terms, tau=float(step.tau), accept_prob=p,
+            rejected=rejected, rejected_y=rejected_y,
+            counterfactual=(rejected_y - y if rejected is not None
+                            else float("nan")),
+            reheated=d.reheated))
+        self._prov_prev_y = y
 
     def run(self, n_jobs: int) -> list[Decision]:
         return [self.submit() for _ in range(n_jobs)]

@@ -55,6 +55,7 @@ from .procurement import ControllerMixin, Decision
 from .schedules import AdaptiveReheat
 from .state import ClusterConfig, ConfigSpace, Dimension
 from .surrogate import ObjectiveSource
+from ..telemetry import provenance
 from ..telemetry import registry as metrics
 from ..telemetry import span
 from ..workloads.microservice import (
@@ -527,9 +528,67 @@ class SizingController(ControllerMixin):
             surrogate_queries=counts["surrogate_queries"],
         )
         self.decisions.append(d)
+        if provenance.get() is not None:
+            self._record_round_provenance(
+                r, d, res, results, cand_idx, k_best, prev, rates,
+                ys, accepts, y0, taus, flat)
         self._round += 1
         note_round("SizingController", self)
         return d
+
+    def _record_round_provenance(self, r, d, res, results, cand_idx,
+                                 k_best, prev, rates, ys, accepts, y0,
+                                 taus, flat) -> None:
+        """One DecisionRecord per sizing round.  Armed-only; every input
+        is something the round already computed.
+
+        Exactness: the committed ``y`` came from ``host_objective`` as
+        ``pen_lat + lambda_cost * cost``; ``exact_split`` replays those
+        two IEEE ops on the same raw values, so it sums bit-for-bit.
+        The named ladder splits ``pen_lat`` into its latency and SLO
+        hinge shares (float64 round-off, inside the float32 bar)."""
+        from .annealing import chain_accept_stats
+
+        spec = self.spec
+        pen_lat = res["penalized_latency"]
+        cost_term = spec.lambda_cost * res["cost"]
+        rates_arr = spec.dag.rates_array(rates)
+        total = rates_arr.sum()
+        shares = (rates_arr / total if total > 0
+                  else np.zeros_like(rates_arr))
+        lat_term = float((shares * np.asarray(res["latency"])).sum())
+        terms = (("latency", lat_term),
+                 ("slo_hinge", float(pen_lat) - lat_term),
+                 ("cost", float(cost_term)))
+        rejected, rejected_y = None, float("nan")
+        others = [(j, float(results[j]["y"]))
+                  for j in range(len(results)) if j != k_best]
+        if others:
+            j = min(others, key=lambda jv: jv[1])[0]
+            rejected, rejected_y = cand_idx[j], float(results[j]["y"])
+        # the chain that visited the committed state (chain 0 — the
+        # incumbent chain — when the winner came from the measured topk
+        # of another chain's trajectory)
+        flat2 = flat.reshape(self.n_chains, -1)
+        f0 = int(np.ravel_multi_index(tuple(np.asarray(self.incumbent)),
+                                      self._shape))
+        hasf = (flat2 == f0).any(axis=1)
+        c = int(np.argmax(hasf)) if hasf.any() else 0
+        tau_at, p_at = chain_accept_stats(
+            ys, accepts, y0,
+            np.broadcast_to(np.asarray(taus, np.float64),
+                            (self.n_chains, self.steps_per_round)))
+        provenance.record(provenance.DecisionRecord(
+            controller="sizing", round=r, tenant="",
+            action="accept" if d.accepted else "hold",
+            state=tuple(self.incumbent), y=d.y, terms=terms,
+            exact_split=(("penalized_latency", float(pen_lat)),
+                         ("cost", float(cost_term))),
+            tau=float(tau_at[c]), accept_prob=float(p_at[c]),
+            rejected=rejected, rejected_y=rejected_y,
+            counterfactual=(rejected_y - d.y if rejected is not None
+                            else float("nan")),
+            reheated=d.reheated))
 
     def run(self, n_rounds: int) -> list[SizingDecision]:
         return [self.round() for _ in range(n_rounds)]

@@ -60,6 +60,7 @@ import numpy as np
 from .instrumentation import note_round, race_access
 from .landscape import tabulate
 from .state import ConfigSpace, Dimension, EncodedSpace, random_valid_state
+from ..telemetry import provenance
 from ..telemetry import registry as metrics
 from ..telemetry import span
 
@@ -706,6 +707,7 @@ class SurrogateAnnealer:
         from .annealing import anneal_fleet, random_valid_states
 
         t = float(self._n)
+        prev_inc = self.incumbent
         measured: list[tuple[tuple[int, ...], float]] = []
         if len(self.store) == 0:
             # global bootstrap design: incumbent + uniform valid states
@@ -786,9 +788,51 @@ class SurrogateAnnealer:
             surrogate_queries=self.surrogate_queries,
             measured=tuple(measured))
         self.rounds.append(rec)
+        if provenance.get() is not None:
+            self._record_round_provenance(
+                rec, prev_inc, measured, out, inits, mean, unc, sub, offs)
         self._n += 1
         note_round("SurrogateAnnealer", self)
         return rec
+
+    def _record_round_provenance(self, rec, prev_inc, measured, out,
+                                 inits, mean, unc, sub, offs) -> None:
+        """One DecisionRecord per surrogate round.  Armed-only.
+
+        The committed value IS a single real measurement (the store's
+        best credible reading), so both decomposition tiers are the
+        trivial one-term ladder — trivially bit-exact.  The interesting
+        provenance is the rest: the runner-up *measured* candidate this
+        round (counterfactual), and the temperature / acceptance
+        probability at the incumbent chain's last accepted move on the
+        acquisition surface (mean - kappa*unc), recovered from the
+        compiled round's outputs."""
+        from .annealing import chain_accept_stats
+
+        ys = np.asarray(out["ys"])
+        accepts = np.asarray(out["accepts"])
+        flat0 = np.ravel_multi_index(tuple(np.asarray(inits).T), sub.shape)
+        y0 = mean[flat0] - self.kappa * unc[flat0]
+        tau_at, p_at = chain_accept_stats(
+            ys, accepts, y0,
+            np.full((self.n_chains, self.steps_per_round), self.tau))
+        rejected, rejected_y = None, float("nan")
+        others = [(st, y) for st, y in measured
+                  if tuple(st) != tuple(rec.incumbent)]
+        if others:
+            st, y = min(others, key=lambda sy: sy[1])
+            rejected, rejected_y = tuple(st), float(y)
+        terms = (("measured_y", rec.best_y),)
+        provenance.record(provenance.DecisionRecord(
+            controller="surrogate", round=int(rec.n), tenant="",
+            action=("accept" if tuple(rec.incumbent) != tuple(prev_inc)
+                    else "hold"),
+            state=tuple(rec.incumbent), y=float(rec.best_y), terms=terms,
+            exact_split=terms, tau=float(tau_at[0]),
+            accept_prob=float(p_at[0]),
+            rejected=rejected, rejected_y=rejected_y,
+            counterfactual=(rejected_y - float(rec.best_y)
+                            if rejected is not None else float("nan"))))
 
     def run(self, n_rounds: int) -> list[SurrogateRound]:
         return [self.round() for _ in range(n_rounds)]

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from typing import Any, Callable, Mapping
 
 from .costmodel import Evaluator
@@ -41,6 +42,7 @@ from .objective import Objective, PenalizedObjective
 from .pricing import ServiceCatalog
 from .state import ClusterConfig, ConfigSpace
 from .surrogate import ObjectiveSource
+from ..telemetry import provenance
 from ..telemetry import registry as metrics
 from ..telemetry import span
 from ..workloads.trace import SyntheticTrace, TraceEvent, replay_ticks
@@ -181,12 +183,20 @@ class TraceReplayController:
             self.rounds.append(rec)
             if metrics.get() is not None:
                 self._record_tick_metrics(rec)
+            if (provenance.get() is not None
+                    and rec["violation"] > 1e-9):
+                # round index = the wrapped fleet's just-finished round,
+                # so the event lines up with fleet DecisionRecords
+                provenance.note_event(
+                    "violation", self.fleet._round - 1, t=float(t),
+                    detail=f"aggregate overshoot "
+                           f"{rec['violation']:.4g}")
             # the replay's own round boundary: exactly one per tick, on
             # top of the wrapped FleetController's (attributed
             # separately, so the sanitizer and telemetry each count both
             # seams without double-counting either)
             note_round("TraceReplayController", self)
-        return self.summary()
+        return self._summary()
 
     def _record_tick_metrics(self, rec: dict[str, Any]) -> None:
         """Per-tick dashboard series, keyed by event time (seconds)."""
@@ -212,7 +222,7 @@ class TraceReplayController:
             "rounds": len(self.rounds),
             **self.fleet.evaluation_counts(),
             "pipeline": None,
-            "summary": self.summary(),
+            "summary": self._summary(),
             "fleet": self.fleet.stats(),
         }
         reg = metrics.get()
@@ -221,8 +231,17 @@ class TraceReplayController:
         return out
 
     def summary(self) -> dict[str, Any]:
-        """Whole-replay aggregates.  Prefer :meth:`stats`, which embeds
-        this under ``"summary"``."""
+        """Deprecated: read ``stats()["summary"]`` instead.  Routed
+        through :meth:`stats` so the unified contract is the single
+        source of truth; emits one :class:`DeprecationWarning`."""
+        warnings.warn(
+            "summary() is deprecated; read stats()['summary']",
+            DeprecationWarning, stacklevel=2)
+        return self.stats()["summary"]
+
+    def _summary(self) -> dict[str, Any]:
+        """Whole-replay aggregates — the ``stats()["summary"]`` payload
+        (and what :meth:`replay` returns)."""
         rs = self.rounds
         n_tenant_rounds = sum(r["n_tenants"] for r in rs)
         slo = [r["slo_attainment"] for r in rs

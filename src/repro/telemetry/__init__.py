@@ -8,7 +8,15 @@ Three pieces, one switch:
 * :mod:`repro.telemetry.spans` — nested wall-clock phase spans with
   Chrome/Perfetto ``trace_event`` export;
 * :mod:`repro.telemetry.report` — JSON snapshots plus the
-  ``python -m repro.telemetry.report`` terminal dashboard.
+  ``python -m repro.telemetry.report`` terminal dashboard;
+* :mod:`repro.telemetry.provenance` — flight recorder of per-round,
+  per-tenant decision records with exact objective-term decompositions
+  (the *why* behind each decision);
+* :mod:`repro.telemetry.alerts` — declarative rules of thumb
+  (threshold / trend / budget-burn) evaluated once per control round
+  via the ``note_round`` seam;
+* :mod:`repro.telemetry.postmortem` — violation-window timelines over
+  the snapshot (report CLI ``--section postmortem``).
 
 Everything in :mod:`repro.core` is instrumented through those guards, so
 the layer is *on by default* in the sense that the call sites are always
@@ -42,14 +50,19 @@ import os
 from contextlib import contextmanager
 from typing import Any, Iterator
 
+from . import provenance as _provenance_mod
 from . import registry as _registry_mod
 from . import spans as _spans_mod
+from .alerts import Alert, AlertEngine, Rule, default_rules
+from .provenance import DecisionRecord, FlightRecorder
 from .registry import MetricsRegistry
 from .report import build_snapshot, render, sparkline
 from .spans import SpanRecorder, span, traced
 
 __all__ = [
     "MetricsRegistry", "SpanRecorder", "Telemetry",
+    "FlightRecorder", "DecisionRecord",
+    "AlertEngine", "Alert", "Rule", "default_rules",
     "span", "traced", "sparkline",
     "enable", "disable", "get", "session",
 ]
@@ -63,30 +76,46 @@ def enabled_by_env() -> bool:
 
 @dataclasses.dataclass
 class Telemetry:
-    """Handle pairing the two sinks of one observation window."""
+    """Handle pairing the sinks of one observation window: metrics,
+    spans, the decision-provenance flight recorder, and the alert
+    engine."""
 
     metrics: MetricsRegistry
     spans: SpanRecorder
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    provenance: FlightRecorder | None = None
+    alerts: AlertEngine | None = None
 
     def snapshot(self) -> dict[str, Any]:
-        return build_snapshot(self.metrics, self.spans, self.meta)
+        return build_snapshot(self.metrics, self.spans, self.meta,
+                              provenance=self.provenance,
+                              alerts=self.alerts)
 
     def dashboard(self, width: int = 48) -> str:
         return render(self.snapshot(), width=width)
 
     def write_artifacts(self, stem: str, out_dir: str = ".",
                         ) -> dict[str, str]:
-        """Write ``<stem>.json`` (metrics snapshot) and
-        ``<stem>.perfetto.json`` (Chrome trace_event JSON) under
-        ``out_dir``; returns the two paths."""
+        """Write ``<stem>.json`` (metrics snapshot),
+        ``<stem>.perfetto.json`` (Chrome trace_event JSON) and — when an
+        alert engine is attached — the structured ``ALERTS_*.json``
+        artifact (``TELEMETRY_x`` maps to ``ALERTS_x``, any other stem
+        gets ``ALERTS_`` prefixed) under ``out_dir``; returns the
+        paths."""
         os.makedirs(out_dir, exist_ok=True)
         snap_path = os.path.join(out_dir, stem + ".json")
         trace_path = os.path.join(out_dir, stem + ".perfetto.json")
         with open(snap_path, "w") as f:
             json.dump(self.snapshot(), f, indent=2)
         self.spans.write(trace_path)
-        return {"snapshot": snap_path, "perfetto": trace_path}
+        paths = {"snapshot": snap_path, "perfetto": trace_path}
+        if self.alerts is not None:
+            alert_stem = (stem.replace("TELEMETRY_", "ALERTS_", 1)
+                          if stem.startswith("TELEMETRY_")
+                          else "ALERTS_" + stem)
+            paths["alerts"] = self.alerts.write(
+                os.path.join(out_dir, alert_stem + ".json"))
+        return paths
 
 
 _ACTIVE: Telemetry | None = None
@@ -97,6 +126,14 @@ def _round_hook(name: str, owner: Any) -> None:
     # Shares instrumentation.ROUND_HOOKS with the sanitizer; each
     # appends its own callable, so neither perturbs the other's counts.
     _registry_mod.inc("rounds/" + name)
+    handle = _ACTIVE
+    if handle is not None and handle.alerts is not None:
+        reg = _registry_mod.get()
+        if reg is not None:
+            # The engine pins its round axis to the first controller
+            # name it sees, so nested note_rounds (trace replay + its
+            # wrapped fleet) evaluate once per real round.
+            handle.alerts.evaluate(reg, name)
 
 
 def _sync_round_hook() -> None:
@@ -119,26 +156,36 @@ def enable(metrics: MetricsRegistry | None = None,
            spans: SpanRecorder | None = None,
            meta: dict[str, Any] | None = None,
            series_capacity: int = 4096,
-           span_capacity: int = 65536) -> Telemetry:
-    """Attach both sinks and return the :class:`Telemetry` handle."""
+           span_capacity: int = 65536,
+           provenance: FlightRecorder | None = None,
+           alerts: AlertEngine | None = None,
+           provenance_capacity: int = 8192) -> Telemetry:
+    """Attach all sinks (metrics, spans, provenance flight recorder,
+    alert engine with the default rules) and return the
+    :class:`Telemetry` handle."""
     global _ACTIVE
     handle = Telemetry(
         metrics=metrics or MetricsRegistry(series_capacity=series_capacity),
         spans=spans or SpanRecorder(capacity=span_capacity),
-        meta=dict(meta or {}))
+        meta=dict(meta or {}),
+        provenance=provenance or FlightRecorder(
+            capacity=provenance_capacity),
+        alerts=alerts or AlertEngine())
     _registry_mod.enable(handle.metrics)
     _spans_mod.enable(handle.spans)
-    _sync_round_hook()
+    _provenance_mod.enable(handle.provenance)
     _ACTIVE = handle
+    _sync_round_hook()
     return handle
 
 
 def disable() -> Telemetry | None:
-    """Detach both sinks; guarded call sites go dark again."""
+    """Detach all sinks; guarded call sites go dark again."""
     global _ACTIVE
     prev, _ACTIVE = _ACTIVE, None
     _registry_mod.disable()
     _spans_mod.disable()
+    _provenance_mod.disable()
     _sync_round_hook()
     return prev
 
@@ -150,7 +197,8 @@ def get() -> Telemetry | None:
 @contextmanager
 def session(meta: dict[str, Any] | None = None,
             series_capacity: int = 4096,
-            span_capacity: int = 65536) -> Iterator[Telemetry]:
+            span_capacity: int = 65536,
+            provenance_capacity: int = 8192) -> Iterator[Telemetry]:
     """Scoped telemetry window; restores whatever was armed before (so
     sessions nest — ``benchmarks/run.py`` wraps suites that may open
     their own)."""
@@ -158,8 +206,10 @@ def session(meta: dict[str, Any] | None = None,
     prev_active = _ACTIVE
     prev_metrics = _registry_mod.get()
     prev_spans = _spans_mod.get()
+    prev_provenance = _provenance_mod.get()
     handle = enable(meta=meta, series_capacity=series_capacity,
-                    span_capacity=span_capacity)
+                    span_capacity=span_capacity,
+                    provenance_capacity=provenance_capacity)
     try:
         yield handle
     finally:
@@ -171,6 +221,10 @@ def session(meta: dict[str, Any] | None = None,
             _spans_mod.enable(prev_spans)
         else:
             _spans_mod.disable()
+        if prev_provenance is not None:
+            _provenance_mod.enable(prev_provenance)
+        else:
+            _provenance_mod.disable()
         _ACTIVE = prev_active
         _sync_round_hook()
 

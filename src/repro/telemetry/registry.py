@@ -236,6 +236,15 @@ class MetricsRegistry:
             lambda: Histogram(name, capacity or self.histogram_capacity,
                               self._lock_factory))
 
+    def peek(self, kind: str, name: str):
+        """Read-only lookup: the named metric of ``kind`` (``counter`` /
+        ``gauge`` / ``series`` / ``histogram``) or ``None`` — unlike the
+        get-or-create accessors, never conjures a metric into being.
+        The alert engine's read path."""
+        table = {"counter": self._counters, "gauge": self._gauges,
+                 "series": self._series, "histogram": self._histograms}[kind]
+        return table.get(name)
+
     def snapshot(self, prefix: str | None = None) -> dict[str, Any]:
         """JSON-serializable dump of everything recorded.  ``prefix``
         keeps only metrics whose name is ``prefix`` or starts with

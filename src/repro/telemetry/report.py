@@ -13,6 +13,13 @@ CLI::
 
     python -m repro.telemetry.report TELEMETRY_trace.json
     python -m repro.telemetry.report TELEMETRY_trace.json --section series
+    python -m repro.telemetry.report TELEMETRY_trace.json --section alerts \
+        --fail-on-alerts              # CI gate: exit 1 if any rule fired
+    python -m repro.telemetry.report TELEMETRY_trace.json --section terms
+    python -m repro.telemetry.report TELEMETRY_trace.json --section postmortem
+
+``--fail-on-alerts`` also accepts a bare ``ALERTS_*.json`` artifact (the
+alert engine's own dump) in place of the full snapshot.
 
 The Perfetto trace is the companion artifact (``*.perfetto.json``) —
 open that in https://ui.perfetto.dev; this module is the "no browser at
@@ -56,8 +63,13 @@ def sparkline(values: Iterable[float], width: int = 48) -> str:
 
 def build_snapshot(metrics: MetricsRegistry | None = None,
                    spans: SpanRecorder | None = None,
-                   meta: dict[str, Any] | None = None) -> dict[str, Any]:
-    """One JSON-serializable dict for the whole run."""
+                   meta: dict[str, Any] | None = None,
+                   provenance: Any = None,
+                   alerts: Any = None) -> dict[str, Any]:
+    """One JSON-serializable dict for the whole run.  ``provenance`` is
+    a :class:`~repro.telemetry.provenance.FlightRecorder` and ``alerts``
+    an :class:`~repro.telemetry.alerts.AlertEngine` (both optional —
+    their sections stay empty when dark)."""
     return {
         "meta": dict(meta or {}),
         "metrics": metrics.snapshot() if metrics is not None else {
@@ -67,6 +79,10 @@ def build_snapshot(metrics: MetricsRegistry | None = None,
             "dropped": spans.dropped if spans is not None else 0,
             "count": len(spans.spans()) if spans is not None else 0,
         },
+        "provenance": (provenance.snapshot() if provenance is not None
+                       else {"records": [], "events": [], "summary": {}}),
+        "alerts": (alerts.snapshot() if alerts is not None
+                   else {"rules": [], "fired": [], "active": []}),
     }
 
 
@@ -80,9 +96,15 @@ def _fmt(v: float) -> str:
     return f"{v:.4g}"
 
 
+#: Sections rendered by default; "terms" and "postmortem" are opt-in
+#: (``--section``), "alerts" renders only when something fired.
+DEFAULT_SECTIONS = ("series", "counters", "gauges", "histograms", "spans",
+                    "alerts")
+ALL_SECTIONS = DEFAULT_SECTIONS + ("terms", "postmortem")
+
+
 def render(snap: dict[str, Any], width: int = 48,
-           sections: tuple[str, ...] = ("series", "counters", "gauges",
-                                        "histograms", "spans")) -> str:
+           sections: tuple[str, ...] = DEFAULT_SECTIONS) -> str:
     """Terminal dashboard for a :func:`build_snapshot` payload."""
     out: list[str] = []
     meta = snap.get("meta") or {}
@@ -148,6 +170,47 @@ def render(snap: dict[str, Any], width: int = 48,
             out.append(f"({snap['spans']['dropped']} older spans dropped "
                        "from ring)")
 
+    al = snap.get("alerts") or {}
+    fired = al.get("fired") or []
+    if "alerts" in sections and (fired or al.get("active")):
+        out.append("-- alerts (edge-triggered firings)")
+        for a in fired:
+            out.append(
+                f"{a.get('severity', 'warn').upper():<5} "
+                f"r{int(a.get('round', 0)):<5d} {a.get('rule')}: "
+                f"{a.get('message')} "
+                f"(value={_fmt(float(a.get('value', 0.0)))}, "
+                f"threshold={_fmt(float(a.get('threshold', 0.0)))})")
+        if al.get("active"):
+            out.append("still active: " + ", ".join(al["active"]))
+
+    prov = snap.get("provenance") or {}
+    summary = prov.get("summary") or {}
+    if "terms" in sections and summary:
+        out.append("-- objective terms (per committed decision)")
+        for ctl in sorted(summary):
+            c = summary[ctl]
+            out.append(f"{ctl}: {c.get('records', 0)} records, actions "
+                       + ", ".join(f"{k}={v}" for k, v in
+                                   sorted(c.get("actions", {}).items())))
+            terms = c.get("terms") or {}
+            if terms:
+                name_w = max(len(n) for n in terms)
+                for name in terms:           # ladder order preserved
+                    tv = terms[name]
+                    out.append(f"  {name:<{name_w}}  "
+                               f"last={_fmt(tv['last']):>10} "
+                               f"mean={_fmt(tv['mean']):>10}")
+            if c.get("last_why"):
+                out.append(f"  why: {c['last_why']}")
+        if prov.get("dropped"):
+            out.append(f"({prov['dropped']} older decision records "
+                       "dropped from ring)")
+
+    if "postmortem" in sections:
+        from . import postmortem as _postmortem
+        out.append(_postmortem.render_postmortem(snap, width=width))
+
     return "\n".join(out) if out else "(empty telemetry snapshot)"
 
 
@@ -161,19 +224,25 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--width", type=int, default=48,
                     help="sparkline width (chars)")
     ap.add_argument("--section", action="append", default=None,
-                    choices=["series", "counters", "gauges", "histograms",
-                             "spans"],
+                    choices=list(ALL_SECTIONS),
                     help="render only these sections (repeatable)")
+    ap.add_argument("--fail-on-alerts", action="store_true",
+                    help="exit 1 if any alert fired (CI gate)")
     args = ap.parse_args(argv)
     with open(args.path) as f:
         snap = json.load(f)
-    sections = tuple(args.section) if args.section else (
-        "series", "counters", "gauges", "histograms", "spans")
+    if "metrics" not in snap and "fired" in snap:
+        # a bare ALERTS_*.json artifact: wrap it as a snapshot
+        snap = {"meta": {}, "metrics": {}, "spans": {}, "alerts": snap,
+                "provenance": {}}
+    sections = tuple(args.section) if args.section else DEFAULT_SECTIONS
     try:
         print(render(snap, width=args.width, sections=sections))
     except BrokenPipeError:        # e.g. piped into `head`
         import os
         os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    if args.fail_on_alerts and (snap.get("alerts") or {}).get("fired"):
+        return 1
     return 0
 
 

@@ -1,0 +1,289 @@
+"""Alert engine + postmortem + report CLI (ISSUE 9): rule kinds,
+edge-triggered firing, driver pinning, the four shipped rules of thumb
+(including the spend-over-budget page under an injected budget cut),
+ALERTS artifact plumbing, violation-window postmortems, and the report
+CLI's ``--section alerts/terms/postmortem`` + ``--fail-on-alerts``."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.telemetry as telemetry
+from repro.core import EC2_CATALOG_ADJUSTED, FleetController, TenantSpec, \
+    make_ec2_space
+from repro.core.costmodel import SimulatedEvaluator
+from repro.telemetry import postmortem, report
+from repro.telemetry.alerts import Alert, AlertEngine, Rule, default_rules
+from repro.telemetry.registry import MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def _dark_telemetry():
+    prev = telemetry.get()
+    telemetry.disable()
+    yield
+    telemetry.disable()
+    if prev is not None:
+        telemetry.enable(metrics=prev.metrics, spans=prev.spans,
+                         meta=prev.meta)
+
+
+def _fleet(T=2, seed=0, **kw):
+    catalog = EC2_CATALOG_ADJUSTED.with_capacities(
+        {f: 12.0 * T for f in EC2_CATALOG_ADJUSTED.names()})
+    space = make_ec2_space(catalog, core_counts=tuple(range(4, 68, 8)))
+    evaluator = SimulatedEvaluator(catalog)
+    jobs = sorted(evaluator.jobs)
+    rng = np.random.default_rng(11)
+    tenants = [
+        TenantSpec(f"t{i}",
+                   dict(zip(jobs, rng.dirichlet(np.ones(len(jobs))))))
+        for i in range(T)]
+    kw.setdefault("steps_per_round", 8)
+    kw.setdefault("budget_usd_hr", 1.6 * T)
+    return FleetController(space, catalog, evaluator, tenants,
+                           seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# rule kinds + engine mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        Rule("r", "bogus", "m")
+    with pytest.raises(ValueError):
+        Rule("r", "threshold", "m", op="between")
+    with pytest.raises(ValueError):
+        Rule("r", "budget_burn", "m")            # missing budget_metric
+    with pytest.raises(ValueError):
+        Rule("r", "trend", "m", window=0)
+
+
+def test_threshold_rule_edge_triggered():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("dip", "threshold", "s", op="lt", value=0.5),))
+    for v in (0.9, 0.4, 0.3, 0.8, 0.2):          # breach, clear, breach
+        reg.series("s").append(v)
+        eng.evaluate(reg)
+    # sustained breach fired once; re-armed after the clear round
+    assert [a.round for a in eng.fired] == [2, 5]
+    assert reg.counter("alerts/fired/dip").value == 2
+    assert reg.counter("alerts/fired").value == 2
+
+
+def test_trend_rule_needs_full_window():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("storm", "trend", "c", op="gt", value=3.0,
+                            window=3),))
+    for inc in (1, 1, 1, 1, 5):                  # delta over 3 rounds
+        reg.counter("c").inc(inc)
+        eng.evaluate(reg)
+    assert len(eng.fired) == 1
+    assert eng.fired[0].value > 3.0              # the observed delta
+
+
+def test_budget_burn_rule_and_missing_budget():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("burn", "budget_burn", "spend",
+                            budget_metric="budget", value=1.0,
+                            severity="page"),))
+    reg.series("spend").append(5.0)
+    eng.evaluate(reg)                            # no budget gauge yet
+    assert eng.fired == []
+    reg.gauge("budget").set(4.0)
+    reg.series("spend").append(5.0)
+    eng.evaluate(reg)
+    assert len(eng.fired) == 1
+    assert eng.fired[0].value == pytest.approx(5.0 / 4.0)
+    assert eng.page_count() == 1
+
+
+def test_min_rounds_suppression():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("dip", "threshold", "s", op="lt", value=0.5,
+                            min_rounds=3),))
+    for _ in range(4):
+        reg.series("s").append(0.1)              # breaching from round 1
+        eng.evaluate(reg)
+    assert [a.round for a in eng.fired] == [3]
+
+
+def test_driver_pinning_ignores_second_controller():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("dip", "threshold", "s", op="lt", value=0.5),))
+    reg.series("s").append(0.1)
+    eng.evaluate(reg, name="fleet")              # pins the round axis
+    assert eng.evaluate(reg, name="trace") == [] # ignored, no round tick
+    assert eng.snapshot()["rounds"] == 1
+    assert eng.snapshot()["driver"] == "fleet"
+
+
+def test_missing_metric_never_creates_it():
+    reg = MetricsRegistry()
+    eng = AlertEngine((Rule("dip", "threshold", "ghost", op="gt"),))
+    eng.evaluate(reg)
+    snap = reg.snapshot()
+    assert "ghost" not in snap["series"]
+    assert "ghost" not in snap["gauges"]
+    assert "ghost" not in snap["counters"]
+
+
+# ---------------------------------------------------------------------------
+# shipped rules of thumb on a live fleet
+# ---------------------------------------------------------------------------
+
+
+def test_default_rules_shape():
+    names = {r.name for r in default_rules()}
+    assert names == {"slo_attainment_dip", "spend_over_budget",
+                     "reheat_storm", "stale_surrogate_incumbent"}
+    pages = {r.name for r in default_rules() if r.severity == "page"}
+    assert pages == {"slo_attainment_dip", "spend_over_budget"}
+
+
+def test_healthy_fleet_fires_no_defaults():
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=0).run(3)
+    assert tel.alerts.fired == []
+
+
+def test_spend_over_budget_fires_under_injected_cut():
+    """ISSUE 9 acceptance: cutting the fleet budget by ~98% must fire
+    the default spend_over_budget page alert within a few rounds."""
+    with telemetry.session() as tel:
+        ctl = _fleet(T=2, seed=0)
+        ctl.run(2)                               # healthy baseline
+        assert tel.alerts.fired == []
+        ctl.budget_usd_hr *= 0.02                # injected cut
+        ctl.run(3)
+        fired = {a.rule: a for a in tel.alerts.fired}
+    assert "spend_over_budget" in fired
+    assert fired["spend_over_budget"].severity == "page"
+    assert fired["spend_over_budget"].value > 1.0
+
+
+def test_alerts_ride_note_round_hook():
+    """The engine is driven by the same note_round seam as the round
+    metrics — no controller changes, no extra hooks."""
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=0).run(2)
+    assert tel.alerts.snapshot()["driver"] == "FleetController"
+    assert tel.alerts.snapshot()["rounds"] == 2
+
+
+# ---------------------------------------------------------------------------
+# artifacts + report CLI
+# ---------------------------------------------------------------------------
+
+
+def _breached_session(tmp_path):
+    with telemetry.session(meta={"bench": "t"}) as tel:
+        ctl = _fleet(T=2, seed=0)
+        ctl.run(1)
+        ctl.budget_usd_hr *= 0.02
+        ctl.run(3)
+        paths = tel.write_artifacts("TELEMETRY_t", out_dir=str(tmp_path))
+    return paths
+
+
+def test_write_artifacts_emits_alerts_json(tmp_path):
+    paths = _breached_session(tmp_path)
+    assert paths["alerts"].endswith("ALERTS_t.json")
+    with open(paths["alerts"]) as f:
+        dump = json.load(f)
+    assert any(a["rule"] == "spend_over_budget" for a in dump["fired"])
+    assert {r["name"] for r in dump["rules"]} \
+        == {r.name for r in default_rules()}
+
+
+def test_report_cli_fail_on_alerts(tmp_path, capsys):
+    paths = _breached_session(tmp_path)
+    # full snapshot: alerts section renders, gate exits nonzero
+    rc = report.main([paths["snapshot"], "--section", "alerts",
+                      "--fail-on-alerts"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "spend_over_budget" in out and "PAGE" in out
+    # bare ALERTS artifact accepted in place of the snapshot
+    rc = report.main([paths["alerts"], "--fail-on-alerts"])
+    assert rc == 1
+    # healthy snapshot passes the gate
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=1).run(1)
+        healthy = tel.write_artifacts("TELEMETRY_h",
+                                      out_dir=str(tmp_path))
+    assert report.main([healthy["snapshot"], "--fail-on-alerts"]) == 0
+
+
+def test_report_cli_terms_section(tmp_path, capsys):
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=0).run(2)
+        paths = tel.write_artifacts("TELEMETRY_t2", out_dir=str(tmp_path))
+    rc = report.main([paths["snapshot"], "--section", "terms"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "objective terms" in out
+    assert "fleet: 4 records" in out
+    assert "why:" in out
+
+
+# ---------------------------------------------------------------------------
+# postmortem
+# ---------------------------------------------------------------------------
+
+
+def _snap_with_violations(rounds, violations, records=(), events=(),
+                          fired=()):
+    return {
+        "meta": {},
+        "metrics": {"series": {"fleet/violation": {
+            "t": list(map(float, rounds)),
+            "v": list(map(float, violations))}}},
+        "spans": {},
+        "provenance": {"records": list(records), "events": list(events)},
+        "alerts": {"fired": list(fired)},
+    }
+
+
+def test_violation_windows_pad_and_merge():
+    snap = _snap_with_violations(range(10),
+                                 [0, 0, 1, 1, 0, 0, 2, 0, 0, 0])
+    # runs [2,3] and [6,6], padded by 1 -> [1,4] and [5,7] -> merged
+    assert postmortem.violation_windows(snap) == [(1, 7)]
+    snap2 = _snap_with_violations(range(10),
+                                  [0, 3, 0, 0, 0, 0, 0, 0, 1, 0])
+    assert postmortem.violation_windows(snap2) == [(0, 2), (7, 9)]
+
+
+def test_postmortem_timeline_interleaves_sources():
+    snap = _snap_with_violations(
+        range(6), [0, 0, 4, 0, 0, 0],
+        records=[{"round": 2, "action": "defer", "violation": 4.0,
+                  "why": "[fleet r2] t1 defer ... blocked by t0"}],
+        events=[{"round": 1, "kind": "reheat", "tenant": "t1",
+                 "detail": "tau_hot=0.5"}],
+        fired=[{"round": 2, "rule": "spend_over_budget",
+                "severity": "page", "message": "burning 1.5x"}])
+    out = postmortem.render_postmortem(snap)
+    assert "window rounds 1..3" in out
+    assert "reheat t1" in out
+    assert "ALERT[page] spend_over_budget" in out
+    assert "blocked by t0" in out
+
+
+def test_postmortem_feasible_run_says_so():
+    snap = _snap_with_violations(range(5), [0] * 5)
+    assert "stayed feasible" in postmortem.render_postmortem(snap)
+    empty = _snap_with_violations([], [])
+    assert "telemetry armed" in postmortem.render_postmortem(empty)
+
+
+def test_postmortem_via_report_cli(tmp_path, capsys):
+    paths = _breached_session(tmp_path)
+    rc = report.main([paths["snapshot"], "--section", "postmortem"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "== postmortem ==" in out

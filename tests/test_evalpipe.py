@@ -194,7 +194,7 @@ def test_procurement_k8_trace_parity_rng_rewind():
     wc = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
           for d in dc]
     assert wa == wc
-    stats = c.pipeline_stats()
+    stats = c.stats()["pipeline"]
     assert stats["resolved"] == 50
 
 
@@ -296,7 +296,7 @@ def test_speculative_measurements_counted_exactly_once():
     c = _controller(evaluator=ev, lookahead=8)
     c.run(40)
     c.close()     # lands every in-flight speculation
-    stats = c.pipeline_stats()
+    stats = c.stats()["pipeline"]
     assert stats["mispredictions"] > 0          # speculation really failed
     assert stats["recycled_landed"] > 0         # and was recycled, not lost
     counts = c.evaluation_counts()

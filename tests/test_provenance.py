@@ -1,0 +1,391 @@
+"""Decision provenance (ISSUE 9 tentpole): the flight recorder's ring
+semantics, the two-tier exactness contract (``exact_split`` bit-equal to
+the committed objective; the named ``terms`` ladder within float32
+exactness), per-controller term decompositions across fleet / sizing /
+surrogate / procurement, arbitration attribution, counterfactual deltas,
+and the dark-path guarantees (no-op writes, decision parity)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+import repro.telemetry as telemetry
+from repro.core import (
+    EC2_CATALOG_ADJUSTED,
+    ConfigSpace,
+    Dimension,
+    FleetController,
+    Objective,
+    ProcurementController,
+    SizingController,
+    SurrogateAnnealer,
+    TenantSpec,
+    make_ec2_space,
+)
+from repro.core.costmodel import SimulatedEvaluator
+from repro.core.sizing import SizingSpace
+from repro.telemetry import provenance
+from repro.telemetry.provenance import (
+    F32_EPS,
+    DecisionRecord,
+    FlightRecorder,
+    acceptance_probability,
+    ladder_sum,
+    objective_terms,
+)
+from repro.workloads.microservice import (
+    ContainerSize,
+    MicroserviceDAG,
+    RequestClass,
+    ServiceTier,
+)
+
+
+@pytest.fixture(autouse=True)
+def _dark_telemetry():
+    prev = telemetry.get()
+    telemetry.disable()
+    yield
+    telemetry.disable()
+    if prev is not None:
+        telemetry.enable(metrics=prev.metrics, spans=prev.spans,
+                         meta=prev.meta)
+
+
+def _fleet(T=2, seed=0, **kw):
+    catalog = EC2_CATALOG_ADJUSTED.with_capacities(
+        {f: 12.0 * T for f in EC2_CATALOG_ADJUSTED.names()})
+    space = make_ec2_space(catalog, core_counts=tuple(range(4, 68, 8)))
+    evaluator = SimulatedEvaluator(catalog)
+    jobs = sorted(evaluator.jobs)
+    rng = np.random.default_rng(11)
+    tenants = [
+        TenantSpec(f"t{i}",
+                   dict(zip(jobs, rng.dirichlet(np.ones(len(jobs))))))
+        for i in range(T)]
+    kw.setdefault("steps_per_round", 8)
+    kw.setdefault("budget_usd_hr", 1.6 * T)
+    return FleetController(space, catalog, evaluator, tenants,
+                           seed=seed, **kw)
+
+
+def _sizing(seed=0):
+    tiers = (ServiceTier("fe", base_rate=60.0),
+             ServiceTier("be", base_rate=50.0))
+    classes = (RequestClass("r", "fe", {"fe": 1, "be": 1}, slo_s=0.5),)
+    dag = MicroserviceDAG(tiers, (("fe", "be"),), classes)
+    spec = SizingSpace(dag,
+                       sizes=(ContainerSize("s", 1, 2.0),
+                              ContainerSize("l", 4, 8.0)),
+                       replica_counts=(1, 2), lambda_cost=0.5,
+                       slo_penalty=50.0)
+    return SizingController(spec, {"r": 20.0}, steps_per_round=8,
+                            n_chains=4, seed=seed, measure_topk=2)
+
+
+def _surrogate(seed=0):
+    space = ConfigSpace((
+        Dimension("fam", ("a", "b")),
+        Dimension("cores", tuple(range(4, 44, 2)))))
+
+    def fn(cfg):
+        f = {"a": 1.0, "b": 0.85}[cfg["fam"]]
+        return f * (30.0 + 400.0 / cfg["cores"] + cfg["cores"] ** 0.8)
+
+    return SurrogateAnnealer(space, fn, half_width=6, n_chains=4,
+                             steps_per_round=8, measures_per_round=3,
+                             n_bootstrap=4, seed=seed)
+
+
+def _procurement(seed=0, **kw):
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED,
+                           core_counts=tuple(range(4, 68, 8)))
+    evaluator = SimulatedEvaluator(EC2_CATALOG_ADJUSTED)
+    jobs = sorted(evaluator.jobs)
+    blend = {j: 1.0 / len(jobs) for j in jobs}
+    return ProcurementController(
+        space=space, catalog=EC2_CATALOG_ADJUSTED, evaluator=evaluator,
+        objective=Objective(lambda_cost=1.0), blend=blend,
+        schedule=1.0, seed=seed, **kw)
+
+
+def _records(tel, controller):
+    return [r for r in tel.provenance.records()
+            if r.controller == controller]
+
+
+def _assert_two_tier_exact(recs):
+    assert recs, "no decision records captured"
+    for r in recs:
+        # tier 1: the exact split replays the committed arithmetic
+        assert sum(v for _, v in r.exact_split) == r.y, (
+            r.controller, r.round, r.tenant, r.exact_split, r.y)
+        # tier 2: the named ladder is within the float32 bar
+        assert r.check(), (r.controller, r.round, r.residual())
+        assert abs(r.residual()) <= 4 * F32_EPS * max(abs(r.y), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# unit: ladder, acceptance probability, objective term mirror
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_sum_is_left_to_right():
+    # ladder_sum replays a 0.0-seeded left-to-right accumulation exactly
+    terms = (("a", 0.1), ("b", 0.2), ("c", 0.3))
+    acc = 0.0
+    for _, v in terms:
+        acc += v
+    assert ladder_sum(terms) == acc
+
+
+@given(dy=st.floats(-1e6, 1e6, allow_nan=False),
+       tau=st.floats(1e-6, 1e6))
+@settings(max_examples=50, deadline=None)
+def test_acceptance_probability_bounds(dy, tau):
+    p = acceptance_probability(dy, tau)
+    assert 0.0 <= p <= 1.0
+    if dy <= 0:
+        assert p == 1.0
+
+
+def test_acceptance_probability_greedy_at_zero_tau():
+    assert acceptance_probability(-1.0, 0.0) == 1.0
+    assert acceptance_probability(1.0, 0.0) == 0.0
+    assert acceptance_probability(1.0, -1.0) == 0.0
+
+
+def test_objective_terms_mirror_objective_call():
+    """sum(objective_terms) must replay Objective.__call__ bit-for-bit
+    on real measurements, with and without migration charges."""
+    ev = SimulatedEvaluator(EC2_CATALOG_ADJUSTED)
+    space = make_ec2_space(EC2_CATALOG_ADJUSTED,
+                           core_counts=tuple(range(4, 68, 8)))
+    job = sorted(ev.jobs)[0]
+    states = space.valid_states()[:6]
+    for lam, slo in ((1.0, math.inf), (200.0, 0.5), (50.0, 100.0)):
+        obj = Objective(lambda_cost=lam, slo_s=slo)
+        for idx in states:
+            m = ev.measure_decoded(space.decode(idx), job, 1)
+            terms = objective_terms(obj, m)
+            assert ladder_sum(terms) == obj(m), (lam, slo, idx, terms)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: ring semantics, snapshot truncation
+# ---------------------------------------------------------------------------
+
+
+def _rec(i, controller="fleet"):
+    return DecisionRecord(controller=controller, round=i, tenant=f"t{i}",
+                          action="admit", state=i, y=float(i),
+                          terms=(("y", float(i)),),
+                          exact_split=(("y", float(i)),))
+
+
+def test_flight_recorder_ring_wraparound_keeps_newest():
+    fr = FlightRecorder(capacity=4, event_capacity=2)
+    for i in range(10):
+        fr.record(_rec(i))
+        fr.note_event("reheat", i, f"t{i}")
+    recs = fr.records()
+    assert len(recs) == 4
+    assert fr.dropped == 6
+    assert [r.round for r in recs] == [6, 7, 8, 9]       # oldest first
+    evs = fr.events()
+    assert len(evs) == 2 and fr.events_dropped == 8
+    assert [e.round for e in evs] == [8, 9]
+
+
+def test_flight_recorder_window_and_round_queries():
+    fr = FlightRecorder(capacity=64)
+    for i in range(8):
+        fr.record(_rec(i))
+    assert [r.round for r in fr.for_round(3)] == [3]
+    recs, evs = fr.window(2, 4)
+    assert [r.round for r in recs] == [2, 3, 4] and evs == []
+
+
+def test_snapshot_truncates_but_counts():
+    fr = FlightRecorder(capacity=64)
+    for i in range(32):
+        fr.record(_rec(i))
+    snap = fr.snapshot(max_records=8)
+    assert len(snap["records"]) == 8
+    assert snap["records"][-1]["round"] == 31            # newest kept
+    assert snap["truncated"] == 24
+    json.dumps(snap)
+
+
+def test_record_why_and_to_dict_round_trip():
+    r = DecisionRecord(
+        controller="fleet", round=3, tenant="t1", action="defer",
+        state=np.int64(5), y=1.5,
+        terms=(("time", 1.0), ("cost", 0.5)),
+        exact_split=(("base", 1.0), ("coupling", 0.5)),
+        tau=0.3, accept_prob=0.7, rejected=np.int64(2), rejected_y=1.2,
+        counterfactual=-0.3, attribution="t0", violation=0.0)
+    line = r.why()
+    assert "defer" in line and "blocked by t0" in line
+    assert "rejected" in line
+    d = r.to_dict()
+    json.dumps(d)                        # numpy state coerced to JSON
+    assert d["state"] == 5 and d["rejected"] == 2
+    assert d["why"] == line
+
+
+def test_check_rejects_corrupted_terms():
+    r = DecisionRecord(controller="x", round=0, tenant="t", action="a",
+                       state=0, y=10.0, terms=(("t", 9.0),),
+                       exact_split=(("t", 10.0),))
+    assert not r.check()
+
+
+# ---------------------------------------------------------------------------
+# dark path: no-op writes, decision parity
+# ---------------------------------------------------------------------------
+
+
+def test_dark_provenance_writes_are_noops():
+    assert provenance.get() is None
+    provenance.record(_rec(0))
+    provenance.note_event("reheat", 0, "t0")
+    assert provenance.get() is None
+
+
+def test_provenance_is_observation_only_fleet():
+    """Arming the flight recorder must not perturb a single decision."""
+    def sig(ctl):
+        return [(d.round, d.tenant, d.action, d.config, round(d.y, 12))
+                for d in ctl.decisions]
+
+    dark = _fleet(T=3, seed=5)
+    dark.run(3)
+    with telemetry.session():
+        armed = _fleet(T=3, seed=5)
+        armed.run(3)
+    assert sig(dark) == sig(armed)
+
+
+# ---------------------------------------------------------------------------
+# property: sum(terms) == committed objective, per controller
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fleet_terms_sum_to_committed_objective(seed):
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=seed).run(3)
+        recs = _records(tel, "fleet")
+    assert len(recs) == 2 * 3            # one per tenant per round
+    _assert_two_tier_exact(recs)
+    # the named ladder carries the full decomposition
+    for r in recs:
+        names = [n for n, _ in r.terms]
+        assert "table_gap" in names and "coupling" in names
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sizing_terms_sum_to_committed_objective(seed):
+    with telemetry.session() as tel:
+        _sizing(seed=seed).run(3)
+        recs = _records(tel, "sizing")
+    assert len(recs) == 3
+    _assert_two_tier_exact(recs)
+    for r in recs:
+        names = [n for n, _ in r.terms]
+        assert names == ["latency", "slo_hinge", "cost"]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_surrogate_terms_sum_to_committed_objective(seed):
+    with telemetry.session() as tel:
+        _surrogate(seed=seed).run(3)
+        recs = _records(tel, "surrogate")
+    assert len(recs) == 3
+    _assert_two_tier_exact(recs)
+
+
+def test_procurement_terms_sum_both_modes():
+    with telemetry.session() as tel:
+        _procurement(seed=0).run(12)
+        _procurement(seed=1, evaluate_blend=True).run(8)
+        recs = _records(tel, "procurement")
+    assert len(recs) == 20
+    _assert_two_tier_exact(recs)
+    blend = [r for r in recs
+             if any(n.startswith("blend/") for n, _ in r.terms)]
+    assert blend, "blend-mode records carry per-job blend terms"
+
+
+# ---------------------------------------------------------------------------
+# attribution + counterfactuals
+# ---------------------------------------------------------------------------
+
+
+def test_arbitration_attribution_names_blocking_tenant():
+    """Under a tight budget some tenants defer/preempt; each such record
+    must name a DIFFERENT tenant whose marginal breach blocked it."""
+    with telemetry.session() as tel:
+        # budget low enough that arbitration has to push back
+        _fleet(T=3, seed=0, budget_usd_hr=0.9).run(4)
+        recs = _records(tel, "fleet")
+    blocked = [r for r in recs if r.action in ("defer", "preempt")]
+    assert blocked, "tight budget should force at least one defer/preempt"
+    for r in blocked:
+        assert r.attribution and r.attribution != r.tenant
+        assert "blocked by" in r.why()
+
+
+def test_counterfactual_is_rejected_minus_committed():
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=3).run(3)
+        recs = _records(tel, "fleet")
+    with_rej = [r for r in recs if r.rejected is not None]
+    assert with_rej, "runner-up candidates should be recorded"
+    for r in with_rej:
+        assert math.isfinite(r.rejected_y)
+        assert r.counterfactual == pytest.approx(r.rejected_y - r.y)
+
+
+def test_reheat_and_churn_events_recorded():
+    with telemetry.session() as tel:
+        ctl = _fleet(T=2, seed=0)
+        ctl.run(2)
+        jobs = sorted(ctl.evaluator.jobs)
+        ctl.add_tenant(TenantSpec("late", {jobs[0]: 1.0}))
+        ctl.run(1)
+        ctl.remove_tenant("late")
+        kinds = {e.kind for e in tel.provenance.events()}
+    assert "arrive" in kinds and "depart" in kinds
+
+
+# ---------------------------------------------------------------------------
+# live ring wraparound + summary/dashboard integration
+# ---------------------------------------------------------------------------
+
+
+def test_live_ring_wraparound_stays_exact():
+    with telemetry.session(provenance_capacity=4) as tel:
+        _fleet(T=2, seed=0).run(4)           # 8 records into a 4-ring
+        recs = _records(tel, "fleet")
+    assert len(recs) == 4
+    assert tel.provenance.dropped == 4
+    assert [r.round for r in recs] == [2, 2, 3, 3]       # newest kept
+    _assert_two_tier_exact(recs)
+
+
+def test_summary_feeds_terms_section():
+    with telemetry.session() as tel:
+        _fleet(T=2, seed=0).run(2)
+    summ = tel.provenance.summary()
+    assert "fleet" in summ
+    assert summ["fleet"]["records"] == 4
+    assert "time" in summ["fleet"]["terms"]
+    assert summ["fleet"]["last_why"]
+    snap = tel.snapshot()
+    out = telemetry.report.render(snap, sections=("terms",))
+    assert "objective terms" in out and "why:" in out

@@ -1,0 +1,161 @@
+"""Benchmark regression gate (ISSUE 9): metric semantics, smoke-flag
+matching, the committed ``benchmarks/baselines/`` seed, synthetic
+degradation detection, history appending, and ``--update`` re-seeding."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.regress import (
+    DEFAULT_BASELINES,
+    SPECS,
+    Metric,
+    compare,
+    main,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write(d, name, payload):
+    p = os.path.join(str(d), name)
+    with open(p, "w") as f:
+        json.dump(payload, f)
+    return p
+
+
+def _pipeline(speedup=4.0, hit_rate=0.85, parity=True, smoke=False):
+    return {"bench": "pipeline_overlap", "smoke": smoke,
+            "speedup": speedup, "parity_k1": parity,
+            "speculation": {"hit_rate": hit_rate}}
+
+
+# ---------------------------------------------------------------------------
+# metric semantics
+# ---------------------------------------------------------------------------
+
+
+def test_metric_directions_and_slack():
+    assert Metric("m", "higher", rel=0.1).check(95.0, 100.0)
+    assert not Metric("m", "higher", rel=0.1).check(85.0, 100.0)
+    assert Metric("m", "lower", rel=0.1).check(105.0, 100.0)
+    assert not Metric("m", "lower", rel=0.1).check(115.0, 100.0)
+    assert Metric("m", "lower", abs_tol=2.0).check(1.5, 0.0)
+    assert not Metric("m", "lower", abs_tol=2.0).check(2.5, 0.0)
+    assert Metric("m", "equal").check(True, True)
+    assert not Metric("m", "equal").check(True, False)
+
+
+def test_compare_flags_missing_paths_and_booleans():
+    fresh, base = _pipeline(), _pipeline()
+    del fresh["speculation"]
+    out = compare(fresh, base, SPECS["BENCH_pipeline.json"])
+    assert out["speedup"]["ok"]
+    assert not out["speculation.hit_rate"]["ok"]
+    assert out["speculation.hit_rate"]["note"] == "path missing"
+    out2 = compare(_pipeline(parity=False), base,
+                   SPECS["BENCH_pipeline.json"])
+    assert not out2["parity_k1"]["ok"]
+
+
+def test_every_spec_path_resolves_in_committed_baselines():
+    """The gate specs must stay in sync with the artifact schemas the
+    benches actually emit (the committed baselines are that contract)."""
+    for name, metrics in SPECS.items():
+        with open(os.path.join(DEFAULT_BASELINES, name)) as f:
+            payload = json.load(f)
+        out = compare(payload, payload, metrics)
+        assert all(r["ok"] for r in out.values()), (name, out)
+
+
+# ---------------------------------------------------------------------------
+# gate end to end (CLI main)
+# ---------------------------------------------------------------------------
+
+
+def test_gate_passes_on_equal_artifacts(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", _pipeline())
+    _write(fresh, "BENCH_pipeline.json", _pipeline(speedup=4.2))
+    hist = str(tmp_path / "hist.jsonl")
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", hist])
+    assert rc == 0
+    lines = [json.loads(ln) for ln in open(hist)]
+    assert len(lines) == 1
+    assert lines[0]["status"] == "pass"
+    assert lines[0]["metrics"]["speedup"]["ok"]
+
+
+def test_gate_fails_on_degraded_artifact(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", _pipeline())
+    _write(fresh, "BENCH_pipeline.json",
+           _pipeline(speedup=1.0, parity=False))
+    hist = str(tmp_path / "hist.jsonl")
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", hist])
+    assert rc == 1
+    entry = json.loads(open(hist).readline())
+    assert entry["status"] == "regressed"
+    assert not entry["metrics"]["speedup"]["ok"]
+    assert not entry["metrics"]["parity_k1"]["ok"]
+    assert entry["metrics"]["speculation.hit_rate"]["ok"]
+
+
+def test_gate_skips_smoke_mismatch(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", _pipeline(smoke=False))
+    # a smoke rerun that would "regress" badly must be skipped, not failed
+    _write(fresh, "BENCH_pipeline.json",
+           _pipeline(speedup=0.1, smoke=True))
+    hist = str(tmp_path / "hist.jsonl")
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", hist])
+    assert rc == 0
+    entry = json.loads(open(hist).readline())
+    assert entry["status"] == "skipped_smoke_mismatch"
+
+
+def test_gate_skips_missing_fresh_and_baseline(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", ""])
+    assert rc == 0                               # nothing to compare
+    _write(fresh, "BENCH_pipeline.json", _pipeline())
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", ""])
+    assert rc == 0                               # baseline missing: skip
+
+
+def test_update_reseeds_baselines(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    _write(fresh, "BENCH_pipeline.json", _pipeline(speedup=9.0))
+    rc = main(["BENCH_pipeline.json", "--baselines", str(base),
+               "--fresh-dir", str(fresh), "--history", "", "--update"])
+    assert rc == 0
+    with open(base / "BENCH_pipeline.json") as f:
+        assert json.load(f)["speedup"] == 9.0
+
+
+def test_unknown_artifact_is_an_error(tmp_path):
+    with pytest.raises(SystemExit):
+        main(["BENCH_bogus.json"])
+
+
+def test_committed_baselines_gate_repo_artifacts():
+    """The repo-root BENCH_*.json artifacts (the ones the baselines were
+    seeded from) must pass the gate whenever their smoke flags match."""
+    rc = main(["--history", ""])
+    assert rc == 0
