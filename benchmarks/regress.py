@@ -79,6 +79,11 @@ SPECS: dict[str, tuple[Metric, ...]] = {
     "BENCH_surrogate.json": (
         Metric("validation_trajectory.-1.best_y", "lower", rel=0.15),
         Metric("validation_trajectory.-1.true_measures", "lower", rel=0.50),
+        # steady-state rounds only: round 0 is compile warmup (seconds of
+        # tracing), deliberately excluded so compile-time wobble neither
+        # masks nor fakes a steady-state perf regression
+        Metric("timing.validation.steady_wall_s_mean", "lower", rel=1.0,
+               abs_tol=0.05),
     ),
     "BENCH_trace.json": (
         Metric("scaling.64.slo_attainment", "higher", rel=0.05),

@@ -108,21 +108,65 @@ def scale_problem():
     return space, fn
 
 
-def _run_annealer(sa: SurrogateAnnealer, n_rounds: int) -> list[dict]:
+class _TimedFn:
+    """Wrap an objective so each round's true-measurement time can be
+    subtracted from its wall time — what's left is the controller's own
+    refit+anneal overhead, the quantity the device-resident loop
+    optimizes."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.seconds = 0.0
+
+    def __call__(self, decoded):
+        t0 = time.perf_counter()
+        try:
+            return self.fn(decoded)
+        finally:
+            self.seconds += time.perf_counter() - t0
+
+
+def _run_annealer(sa: SurrogateAnnealer, n_rounds: int,
+                  timed_fn: _TimedFn | None = None) -> list[dict]:
     """Drive the loop round by round, recording the perf trajectory."""
     traj = []
     for _ in range(n_rounds):
+        m0 = timed_fn.seconds if timed_fn is not None else 0.0
         t0 = time.perf_counter()
         rec = sa.round()
-        traj.append({
+        wall = time.perf_counter() - t0
+        row = {
             "round": rec.n,
             "true_measures": rec.true_measures,
             "surrogate_queries": rec.surrogate_queries,
             "best_y": rec.best_y,
             "window_size": rec.window_size,
-            "wall_s": round(time.perf_counter() - t0, 3),
-        })
+            "wall_s": round(wall, 3),
+        }
+        if timed_fn is not None:
+            measure_s = timed_fn.seconds - m0
+            row["measure_s"] = round(measure_s, 4)
+            row["overhead_s"] = round(max(wall - measure_s, 0.0), 4)
+        traj.append(row)
     return traj
+
+
+def _timing_summary(traj: list[dict]) -> dict:
+    """Split the trajectory's round 0 (compile warmup) from the
+    steady-state rounds — the regression gate compares only the latter,
+    so a compile-time wobble can't mask (or fake) a steady-state
+    regression."""
+    steady = traj[1:] or traj
+    out = {
+        "warmup_wall_s": traj[0]["wall_s"],
+        "steady_rounds": len(steady),
+        "steady_wall_s_mean": round(
+            sum(r["wall_s"] for r in steady) / len(steady), 4),
+    }
+    if "overhead_s" in steady[0]:
+        out["steady_overhead_s_mean"] = round(
+            sum(r["overhead_s"] for r in steady) / len(steady), 4)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -239,11 +283,12 @@ def surrogate_scale(smoke: bool = False) -> dict:
     measures_per_round = 6
     n_bootstrap = 8
     n_rounds = (budget - n_bootstrap) // measures_per_round
+    timed = _TimedFn(fn)
     sa = SurrogateAnnealer(
-        space, fn, half_width=6, n_chains=16, steps_per_round=48,
+        space, timed, half_width=6, n_chains=16, steps_per_round=48,
         measures_per_round=measures_per_round, n_bootstrap=n_bootstrap,
         seed=0)
-    val_traj = _run_annealer(sa, n_rounds)
+    val_traj = _run_annealer(sa, n_rounds, timed_fn=timed)
     _, y_best = sa.best()
     gap = (y_best - y_star) / abs(y_star)
     result["validation"] = {
@@ -307,6 +352,17 @@ def surrogate_scale(smoke: bool = False) -> dict:
     # -- drift: half_life staleness end to end (PR 3 follow-on) --
     result["drift"] = drift_recovery(b, smoke)
 
+    # warmup/steady split: round 0 is compile time, the rest is the
+    # device-resident loop's steady state — only the latter is gated
+    timing = {
+        "validation": _timing_summary(val_traj),
+        "scale": _timing_summary(big_traj),
+        "drift": _timing_summary(result["drift"]["trajectory"]),
+    }
+    timing["overhead_vs_committed_baseline"] = _overhead_vs_baseline(
+        timing["validation"])
+    result["timing"] = timing
+
     write_json("surrogate_scale.json", result)
     with open(TOP_LEVEL_ARTIFACT, "w") as f:
         json.dump({
@@ -320,9 +376,41 @@ def surrogate_scale(smoke: bool = False) -> dict:
             "drift_gap_pct": result["drift"]["phase1_gap_pct"],
             "drift_stale_refreshes":
                 result["drift"]["stale_incumbent_refreshes"],
+            "timing": timing,
         }, f, indent=2)
     print(f"perf trajectory -> {TOP_LEVEL_ARTIFACT}")
     return b.finish()
+
+
+def _overhead_vs_baseline(val_timing: dict) -> dict | None:
+    """Non-measurement (refit+anneal) overhead speedup of this run's
+    steady-state rounds over the committed baseline's — measured before
+    any ``regress --update`` re-seeds the baseline."""
+    base_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines",
+        "BENCH_surrogate.json")
+    if not os.path.exists(base_path):
+        return None
+    with open(base_path) as f:
+        base = json.load(f)
+    try:
+        b_traj = base["validation_trajectory"]
+        b_steady = b_traj[1:] or b_traj
+        # older baselines carry no measure split; their rounds' wall time
+        # is dominated by refit+anneal overhead (simulated measurements
+        # are microseconds), so steady wall is the comparable quantity
+        b_overhead = sum(
+            r.get("overhead_s", r["wall_s"]) for r in b_steady
+        ) / len(b_steady)
+    except (KeyError, IndexError, ZeroDivisionError):
+        return None
+    fresh = val_timing.get("steady_overhead_s_mean",
+                           val_timing["steady_wall_s_mean"])
+    return {
+        "baseline_steady_overhead_s_mean": round(b_overhead, 4),
+        "fresh_steady_overhead_s_mean": fresh,
+        "speedup": round(b_overhead / fresh, 2) if fresh > 0 else None,
+    }
 
 
 def run_all() -> list[dict]:

@@ -43,6 +43,18 @@ _REPO = Path(__file__).resolve().parents[3]
 ROUNDS = 6
 WARMUP = 1
 
+#: Per-round device->host transfer ceilings for the steady-state rounds
+#: (the device-resident control loop's budget): the surrogate and sizing
+#: paths are fully device-resident (0), the fleet reads its per-round
+#: results back in one consolidated device_get (1), procurement never
+#: touches the device per round (0).
+TRANSFER_BUDGET = {
+    "ProcurementController": 0,
+    "FleetController": 1,
+    "SizingController": 0,
+    "SurrogateAnnealer": 0,
+}
+
 CORES = tuple(range(4, 68, 8))
 
 
@@ -166,12 +178,13 @@ def gate_sanitize(args: argparse.Namespace) -> int:
     out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
     print(f"[sanitize] report written to {out}")
     try:
-        san.assert_steady_state(warmup=WARMUP)
+        san.assert_steady_state(warmup=WARMUP,
+                                transfer_budget=TRANSFER_BUDGET)
     except sanitize.RetraceError as e:
         print(f"[sanitize] FAIL: {e}", file=sys.stderr)
         return 1
-    print(f"[sanitize] OK: zero recompilations after round {WARMUP - 1} "
-          "in every controller")
+    print(f"[sanitize] OK: zero recompilations and transfers within "
+          f"budget after round {WARMUP - 1} in every controller")
     return 0
 
 

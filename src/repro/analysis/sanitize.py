@@ -139,9 +139,14 @@ class Sanitizer:
                 "rounds": [dict(r) for r in self.rounds],
             }
 
-    def assert_steady_state(self, warmup: int = 1) -> None:
+    def assert_steady_state(
+            self, warmup: int = 1,
+            transfer_budget: dict[str, int] | None = None) -> None:
         """Every controller round after its first ``warmup`` rounds must
-        compile nothing.  Raises :class:`RetraceError` with the offending
+        compile nothing, and — when ``transfer_budget`` maps controller
+        names to per-round device->host transfer ceilings — must stay
+        within its budget (controllers absent from the mapping are not
+        budget-checked).  Raises :class:`RetraceError` with the offending
         (controller, round, entry) triples."""
         bad: list[str] = []
         for rec in self.rounds:
@@ -152,6 +157,13 @@ class Sanitizer:
                     bad.append(
                         f"{rec['controller']} round {rec['round']}: "
                         f"{name} recompiled {d['compiles']}x")
+            if transfer_budget is not None:
+                limit = transfer_budget.get(rec["controller"])
+                if limit is not None and rec["transfers"] > limit:
+                    bad.append(
+                        f"{rec['controller']} round {rec['round']}: "
+                        f"{rec['transfers']} host transfers "
+                        f"(budget {limit})")
         if bad:
             raise RetraceError(
                 "steady-state zero-retrace invariant violated:\n  "
@@ -219,6 +231,24 @@ class Sanitizer:
         import repro.core as core_pkg
         if getattr(core_pkg, "evaluate_sizing_batch", None) is orig_esb:
             self._patch(core_pkg, "evaluate_sizing_batch", esb)
+
+        # the device-resident table build is the same entry-point bucket:
+        # it compiles through SizingSpace._table_jit instead of _eval_jit
+        orig_std = sizing.sizing_table_device
+
+        @functools.wraps(orig_std)
+        def std(spec, mix, use_kernel=None):
+            inner = spec._table_jit
+            size = getattr(inner, "_cache_size", None)
+            before = size() if size is not None else 0
+            try:
+                return orig_std(spec, mix, use_kernel)
+            finally:
+                after = size() if size is not None else 0
+                san.record("evaluate_sizing_batch", calls=1,
+                           compiles=max(0, after - before))
+
+        self._patch(sizing, "sizing_table_device", std)
 
         orig_interp = surrogate._interp_jit
 

@@ -108,6 +108,7 @@ from .state import (
     cluster_config_from,
 )
 from .surrogate import (
+    DeviceMeasurementStore,
     ExhaustiveSource,
     MeasurementStore,
     ObjectiveSource,
@@ -117,6 +118,7 @@ from .surrogate import (
     SurrogateRound,
     SurrogateSource,
     expected_improvement,
+    host_interp,
     window_space,
 )
 from .tabu import TabuMemory
@@ -152,9 +154,10 @@ __all__ = [
     "Schedule", "schedule_to_array",
     "ClusterConfig", "ConfigSpace", "Dimension", "EncodedSpace",
     "cluster_config_from",
-    "ExhaustiveSource", "MeasurementStore", "ObjectiveSource",
+    "DeviceMeasurementStore", "ExhaustiveSource", "MeasurementStore",
+    "ObjectiveSource",
     "SpaceEncoding", "SurrogateAnnealer", "SurrogateModel", "SurrogateRound",
-    "SurrogateSource", "expected_improvement", "window_space",
+    "SurrogateSource", "expected_improvement", "host_interp", "window_space",
     "MicroserviceEvaluator", "SizingController", "SizingDecision",
     "SizingSpace", "evaluate_sizing_batch", "full_grid",
     "microservice_config_fn",

@@ -641,8 +641,15 @@ def fleet_chains(
         P = ((C + n_dev - 1) // n_dev) * n_dev
     else:
         P = C
-    kd = np.asarray(jax.random.key_data(keys))
-    kd_p = _pad_chains(kd, P)
+    # keys are already device-resident: pad by repeating row 0 with jnp
+    # (the np.asarray route would pull the key data to host — the fleet's
+    # only per-round device->host transfer besides the result read-back)
+    kd = jax.random.key_data(keys)
+    if P > kd.shape[0]:
+        kd_p = jnp.concatenate(
+            [kd, jnp.repeat(kd[:1], P - kd.shape[0], axis=0)])
+    else:
+        kd_p = kd
     tab_p = jnp.asarray(_pad_chains(np.asarray(tables, np.float32), P))
     taus_p = jnp.asarray(_pad_chains(np.asarray(taus, np.float32), P))
     init_p = jnp.asarray(_pad_chains(np.asarray(inits, np.int32), P))

@@ -307,9 +307,12 @@ class StorePredictor:
     and the jitted :class:`repro.core.surrogate.SurrogateModel` would
     re-trace on every size change; at pipeline scale (a handful of query
     states against a few thousand observations) numpy is faster than any
-    recompile.  Semantics mirror the jitted model: exact at measured
-    states, recency-weighted when the store decays, uncertainty = distance
-    to the nearest measurement scaled to objective units.
+    recompile.  The interpolation itself is
+    :func:`repro.core.surrogate.host_interp` — the ONE shared
+    encoding/metric path with the surrogate's fused device refit, so the
+    predictor and the surrogate cannot drift apart: exact at measured
+    states, recency-weighted when the store decays, uncertainty =
+    distance to the nearest measurement scaled to objective units.
 
     Returns ``None`` while the store is empty — the pipeline then predicts
     *accept* (optimism under total ignorance, the chain's own behavior at
@@ -332,19 +335,18 @@ class StorePredictor:
     ) -> tuple[np.ndarray, np.ndarray] | None:
         if len(self.store) == 0:
             return None
+        from .surrogate import host_interp
+
         obs, ys, ts = self.store.arrays()
         rec = self.store.weights(float(ts.max()) if now is None else now)
         xm = self.encoding.features(obs)
         xq = self.encoding.features(np.asarray(states, np.int64))
-        d2 = ((xq[:, None, :] - xm[None, :, :]) ** 2).sum(-1)
-        k = rec[None, :] / (d2 ** (self.idw_power / 2.0) + self.eps)
-        wsum = k.sum(axis=1)
-        mean = np.where(wsum > 1e-12, k @ ys / np.maximum(wsum, 1e-12),
-                        float(ys.mean()))
+        mean, dmin = host_interp(xq, xm, ys, rec, kind="idw",
+                                 idw_power=self.idw_power, eps=self.eps)
         spread = float(ys.max() - ys.min())
         y_scale = spread if spread > 0 else max(1.0, abs(float(ys.mean())))
-        unc = y_scale * np.sqrt(d2.min(axis=1))
-        return mean.astype(np.float64), unc.astype(np.float64)
+        return (mean.astype(np.float64),
+                (y_scale * dmin).astype(np.float64))
 
 
 # ---------------------------------------------------------------------------
@@ -390,11 +392,20 @@ class PipelineStats:
     recycled: int = 0           # flushed measurements handed to recycling
     recycled_landed: int = 0    # of those: landed + recorded exactly once
     cancelled: int = 0          # of those: never started, cancelled instead
+    hedged: int = 0             # both-branch speculations dispatched
+    hedged_covered: int = 0     # mispredictions whose alternative-branch
+    #                             measurement was already in flight (adopted)
+    prefetched: int = 0         # idle-worker probe measurements dispatched
 
     def hit_rate(self) -> float:
+        """Fraction of resolved transitions whose measurement was in
+        flight when needed: correct predictions plus mispredictions the
+        hedge covered (the alternative branch's next measurement was
+        already dispatched, so the flush cost no stall)."""
         if self.resolved == 0:
             return 1.0
-        return 1.0 - self.mispredictions / self.resolved
+        return 1.0 - (self.mispredictions - self.hedged_covered) \
+            / self.resolved
 
 
 class SpeculativePipeline:
@@ -426,6 +437,34 @@ class SpeculativePipeline:
     fires right after a transition commits (before any flush),
     ``on_flush`` whenever pending speculation is discarded — the
     controller rewinds such state to its last resolved value there.
+
+    **Hedged speculation** (``hedge_margin > 0``): when a transition's
+    predicted acceptance is marginal — the surrogate acceptance
+    probability lands within ``hedge_margin`` of the drawn uniform, so
+    the predictor is effectively guessing — the pipeline also draws the
+    *other* branch's next transition on a cloned RNG and dispatches its
+    measurement.  If the prediction then misses, the post-flush
+    re-speculation redraws the identical ``(n, proposal, u)`` (same RNG
+    state, same frontier) and adopts the in-flight hedge future instead
+    of re-dispatching, so the misprediction costs no measurement stall
+    (``stats.hedged_covered``).  Decision parity is preserved by
+    construction: hedges never touch the chain RNG, and adoption
+    requires an exact ``(n, proposal, u)`` match — anything else is
+    recycled like any mis-speculated measurement.  Hedge requests are
+    built for a branch that may never be taken, so they must not leak
+    side effects: either ``build_request`` is pure (no shared-RNG draws,
+    no path-dependent state) or the controller supplies
+    ``build_hedge_request(state, n, kind, rng)`` — a side-effect-free
+    twin whose RNG consumption comes only from the passed clone,
+    replicating the post-flush redraw bit for bit (the procurement
+    controller's blend-job draw is the canonical case).
+
+    **Probe prefetch** (``prefetch_probes > 0``): when the dispatcher's
+    pool has idle workers, up to ``prefetch_probes`` surrogate probes of
+    unmeasured states (drawn from a dedicated, chain-independent RNG)
+    are kept in flight; landings feed the recycling store, warming the
+    predictor that steers speculation.  Probe requests are built through
+    the same side-effect-free seam as hedges.
     """
 
     def __init__(
@@ -443,11 +482,25 @@ class SpeculativePipeline:
             | None = None,
         on_resolve: Callable[[EvalRequest], None] | None = None,
         on_flush: Callable[[], None] | None = None,
+        hedge_margin: float = 0.0,
+        prefetch_probes: int = 0,
+        prefetch_seed: int = 0,
+        build_hedge_request: Callable[..., EvalRequest] | None = None,
     ):
         if lookahead < 1:
             raise ValueError("lookahead must be >= 1")
+        if hedge_margin < 0.0:
+            raise ValueError("hedge_margin must be >= 0")
+        if prefetch_probes < 0:
+            raise ValueError("prefetch_probes must be >= 0")
         self.chain = chain
         self.lookahead = int(lookahead)
+        self.hedge_margin = float(hedge_margin)
+        self.prefetch_probes = int(prefetch_probes)
+        # side-effect-free request builder for hedges and probes; pure
+        # build_request callables can simply ignore the rng argument
+        self.build_hedge_request = build_hedge_request or (
+            lambda state, n, kind, rng: self.build_request(state, n, kind))
         self.build_request = build_request or self._default_request
         self.store = store if store is not None else MeasurementStore(
             len(chain.space.dimensions))
@@ -464,6 +517,18 @@ class SpeculativePipeline:
         self.stats = PipelineStats()
         self._queue: collections.deque[_Speculation] = collections.deque()
         self._recycled: list[tuple[EvalRequest, Any]] = []
+        # in-flight hedge measurements, keyed by the exact (n, proposal,
+        # u) the post-flush re-speculation would redraw; values are
+        # (request, future)
+        self._hedges: dict[tuple, tuple[EvalRequest, Any]] = {}
+        self._pending_hedges: list[tuple[tuple, EvalRequest]] = []
+        # depth whose adoption would cover the last misprediction (set on
+        # a mispredicted resolution, consumed by the very next refill)
+        self._covered_n: int | None = None
+        # in-flight idle-worker probes; dedicated RNG keeps the chain's
+        # stream (and therefore decision parity) untouched
+        self._probes: list[tuple[EvalRequest, Any]] = []
+        self._prefetch_rng = np.random.default_rng(prefetch_seed)
         self._committed_rng = copy.deepcopy(
             chain.rng.bit_generator.state)
         self._sync_frontier()
@@ -534,6 +599,7 @@ class SpeculativePipeline:
             y_hat_z, unc = float(mean[0]), float(uncs[0])
             y_hat_x = (float(mean[1]) if needs_refresh
                        else self._frontier_y)
+        p_hat = None
         if y_hat_z is None or y_hat_x is None:
             predicted_accept = True      # optimism under total ignorance
         else:
@@ -545,6 +611,15 @@ class SpeculativePipeline:
             predicted_accept=predicted_accept, request=req,
             rng_after=rng_after, unc=unc, refresh_request=refresh_req)
 
+        # marginal prediction: also draw the OTHER branch's next
+        # transition (cloned RNG — the chain's stream stays untouched)
+        # so a misprediction here finds its measurement already in flight
+        if (self.hedge_margin > 0.0 and p_hat is not None
+                and abs(p_hat - u) <= self.hedge_margin):
+            alt_state = (self._frontier_state if predicted_accept
+                         else tuple(proposal))
+            self._plan_hedge(spec, alt_state)
+
         # advance the frontier along the predicted path
         if predicted_accept:
             self._frontier_state = tuple(proposal)
@@ -555,34 +630,130 @@ class SpeculativePipeline:
         self._frontier_n = n + 1
         return spec
 
+    def _plan_hedge(self, spec: _Speculation,
+                    alt_state: tuple[int, ...]) -> None:
+        """Draw the alternative branch's transition ``n+1`` exactly as a
+        post-flush re-speculation would — same RNG state
+        (``spec.rng_after``), same tabu filter, same request builder —
+        but on a *clone*, and queue its measurement for dispatch.  The
+        resulting ``(n+1, proposal, u)`` key is what :meth:`_fill`
+        matches against after a flush."""
+        ch = self.chain
+        rng = copy.deepcopy(ch.rng)
+        rng.bit_generator.state = copy.deepcopy(spec.rng_after)
+        x = tuple(alt_state)
+        proposal = ch.nbhd.propose(x, rng)
+        if ch.tabu is not None:
+            proposal = ch.tabu.filter(
+                x, proposal, lambda: ch.nbhd.propose(x, rng))
+        # same slot order as draw_transition: request construction (and
+        # any RNG it consumes — from the clone) sits between the
+        # proposal draw and the uniform draw
+        req = self.build_hedge_request(
+            tuple(proposal), spec.n + 1, "proposal", rng)
+        u = float(rng.random())
+        self._pending_hedges.append(
+            ((spec.n + 1, tuple(proposal), u), req))
+
     def _fill(self) -> None:
         fresh: list[_Speculation] = []
         while len(self._queue) + len(fresh) < self.lookahead:
             fresh.append(self._speculate_one())
-        if not fresh:
+        if fresh:
+            # adopt in-flight hedge measurements whose (n, proposal, u)
+            # matches this redraw exactly; only the adoption at the
+            # mispredicted transition's own depth counts as a *covered*
+            # misprediction (deeper matches still reuse the measurement,
+            # but the stall they save was never on the resolution path),
+            # so hedged_covered <= mispredictions by construction
+            for s in fresh:
+                hit = self._hedges.pop((s.n, s.proposal, s.u), None)
+                if hit is not None:
+                    s.future = hit[1]
+                    metrics.inc("evalpipe/hedge_hits")
+                    if self._covered_n == s.n:
+                        self.stats.hedged_covered += 1
+            self._covered_n = None    # only the immediate refill covers
+            # head-of-queue first (it gates resolution latency), then
+            # most uncertain first — the measurements the predictor
+            # learns most from
+            order = ([fresh[0]] + sorted(fresh[1:], key=lambda s: -s.unc)
+                     if not self._queue else
+                     sorted(fresh, key=lambda s: -s.unc))
+            reqs: list[EvalRequest] = []
+            slots: list[tuple[_Speculation, str]] = []
+            for s in order:
+                if s.refresh_request is not None:
+                    reqs.append(s.refresh_request)
+                    slots.append((s, "refresh_future"))
+                if s.future is None:        # not covered by a hedge
+                    reqs.append(s.request)
+                    slots.append((s, "future"))
+            futs = self.dispatcher.submit_many(reqs)
+            for (spec, attr), fut in zip(slots, futs):
+                setattr(spec, attr, fut)
+            # pipeline state (queue, recycled list, chain RNG) is
+            # unlocked by contract: only the controller thread touches it
+            # — workers hand results back through futures.  These seams
+            # let the lockset detector verify the contract instead of
+            # trusting the comment.
+            race_access("pipeline", self)
+            self._queue.extend(fresh)
+        # hedge measurements dispatch after the real queue — they gate
+        # nothing until a flush adopts them
+        if self._pending_hedges:
+            pend, self._pending_hedges = self._pending_hedges, []
+            # a post-flush re-speculation of the same marginal transition
+            # re-plans an identical key: dispatching it again would
+            # overwrite (and so orphan) the in-flight twin's measurement
+            fresh_keys: set[tuple] = set()
+            pend = [(k, r) for k, r in pend
+                    if k not in self._hedges
+                    and not (k in fresh_keys or fresh_keys.add(k))]
+            futs = self.dispatcher.submit_many([r for _, r in pend])
+            for (key, req), fut in zip(pend, futs):
+                self._hedges[key] = (req, fut)
+                self.stats.hedged += 1
+                metrics.inc("evalpipe/hedged")
+        self._prefetch()
+
+    def _prefetch(self) -> None:
+        """Keep up to ``prefetch_probes`` surrogate probes of unmeasured
+        states in flight while pool workers would otherwise idle; landed
+        probes feed the recycling store (and the evaluation log) exactly
+        once."""
+        if self.prefetch_probes <= 0 or self.dispatcher.mode != "pool":
             return
-        # head-of-queue first (it gates resolution latency), then most
-        # uncertain first — the measurements the predictor learns most from
-        order = ([fresh[0]] + sorted(fresh[1:], key=lambda s: -s.unc)
-                 if not self._queue else
-                 sorted(fresh, key=lambda s: -s.unc))
+        live: list[tuple[EvalRequest, Any]] = []
+        for req, fut in self._probes:
+            if fut.done():
+                self._land(req, fut.result())
+            else:
+                live.append((req, fut))
+        self._probes = live
+        idle = self.dispatcher.max_workers - (
+            self.dispatcher.dispatched - self.dispatcher.landed)
+        room = min(self.prefetch_probes - len(self._probes), idle)
+        if room <= 0:
+            return
         reqs: list[EvalRequest] = []
-        slots: list[tuple[_Speculation, str]] = []
-        for s in order:
-            if s.refresh_request is not None:
-                reqs.append(s.refresh_request)
-                slots.append((s, "refresh_future"))
-            reqs.append(s.request)
-            slots.append((s, "future"))
-        futs = self.dispatcher.submit_many(reqs)
-        for (spec, attr), fut in zip(slots, futs):
-            setattr(spec, attr, fut)
-        # pipeline state (queue, recycled list, chain RNG) is unlocked by
-        # contract: only the controller thread touches it — workers hand
-        # results back through futures.  These seams let the lockset
-        # detector verify the contract instead of trusting the comment.
-        race_access("pipeline", self)
-        self._queue.extend(fresh)
+        dims = self.chain.space.dimensions
+        for _ in range(room):
+            for _ in range(8):     # rejection-sample unmeasured states
+                state = tuple(
+                    int(self._prefetch_rng.integers(len(d.values)))
+                    for d in dims)
+                if state not in self.store:
+                    break
+            else:
+                continue
+            reqs.append(self.build_hedge_request(
+                state, self._frontier_n, "probe", self._prefetch_rng))
+        if reqs:
+            futs = self.dispatcher.submit_many(reqs)
+            self._probes.extend(zip(reqs, futs))
+            self.stats.prefetched += len(reqs)
+            metrics.inc("evalpipe/prefetched", len(reqs))
 
     # -- resolution --
 
@@ -604,21 +775,30 @@ class SpeculativePipeline:
                 keep.append((req, fut))
         self._recycled = keep
 
+    def _retire_future(self, req: EvalRequest, fut: Any) -> None:
+        self.stats.recycled += 1
+        metrics.inc("evalpipe/recycled")
+        # a dispatch that never started running measured nothing —
+        # cancel it (freeing its worker slot for the re-speculation)
+        # rather than letting stale work starve the fresh head
+        if getattr(fut, "cancel", None) is not None and fut.cancel():
+            self.stats.cancelled += 1
+            metrics.inc("evalpipe/cancelled")
+            return
+        self._recycled.append((req, fut))
+
     def _recycle(self, spec: _Speculation) -> None:
         for req, fut in ((spec.refresh_request, spec.refresh_future),
                          (spec.request, spec.future)):
-            if fut is None:
-                continue
-            self.stats.recycled += 1
-            metrics.inc("evalpipe/recycled")
-            # a speculation that never started running measured nothing —
-            # cancel it (freeing its worker slot for the re-speculation)
-            # rather than letting stale work starve the fresh head
-            if getattr(fut, "cancel", None) is not None and fut.cancel():
-                self.stats.cancelled += 1
-                metrics.inc("evalpipe/cancelled")
-                continue
-            self._recycled.append((req, fut))
+            if fut is not None:
+                self._retire_future(req, fut)
+
+    def _retire_stale_hedges(self, n: int) -> None:
+        """Hedges keyed at or below transition ``n`` can never be
+        adopted once ``n`` has resolved — recycle their measurements."""
+        for key in [k for k in self._hedges if k[0] <= n]:
+            req, fut = self._hedges.pop(key)
+            self._retire_future(req, fut)
 
     def flush(self) -> None:
         """Discard pending speculation (recycling its measurements) and
@@ -660,11 +840,15 @@ class SpeculativePipeline:
         self.stats.resolved += 1
         metrics.inc("evalpipe/resolved")
         self._committed_rng = spec.rng_after
+        self._retire_stale_hedges(spec.n)
         if self.on_resolve is not None:
             self.on_resolve(spec.request)
         if step.accepted != spec.predicted_accept:
             self.stats.mispredictions += 1
             metrics.inc("evalpipe/mispredictions")
+            # the next _fill's redraw of n+1 may adopt this transition's
+            # hedge — that (and only that) adoption covers this miss
+            self._covered_n = spec.n + 1
             self.flush()
         return ResolvedStep(
             step=step, result=result, request=spec.request,
@@ -680,6 +864,14 @@ class SpeculativePipeline:
         if self._closed:
             return
         self.flush()
+        for key in list(self._hedges):
+            req, fut = self._hedges.pop(key)
+            self._retire_future(req, fut)
+        for req, fut in self._probes:
+            if getattr(fut, "cancel", None) is not None and fut.cancel():
+                continue           # never ran: measured nothing
+            self._land(req, fut.result())
+        self._probes = []
         self._drain_recycled(wait=True)
         self.dispatcher.close()
         self._closed = True

@@ -631,23 +631,28 @@ class FleetController(ControllerMixin):
                     shape=self._shape, categorical=self._enc.categorical,
                     mesh=self.mesh, bucket=self.chain_bucketing)
 
+            # one consolidated pull for the round: states, objectives and
+            # accept flags come back in a single device_get (1 transfer)
+            # instead of three independent np.asarray coercions
+            st_h, ys_h, accepts = jax.device_get((st, ys_d, acc_d))
+
             # proposals: best visited state (step-0 incumbent included)
             # under the penalized objective
             visited = np.concatenate(
-                [inits[:, None, :], np.asarray(st)], axis=1)
+                [inits[:, None, :], st_h], axis=1)
             flat = np.ravel_multi_index(
                 tuple(visited.transpose(2, 0, 1)),
                 self._shape)                              # (A, steps+1)
             pen_a = pen_tables[active]
             best = np.take_along_axis(pen_a, flat, axis=1).argmin(1)
             proposals[active] = flat[np.arange(A), best]
-            ys[active] = np.asarray(ys_d)
+            ys[active] = ys_h
 
             # exploration: did the chain ACCEPT an uphill move this round?
             # (the single-tenant Step.explored semantics — the arbitrated
             # proposal itself is an argmin over visited states, so it can
             # never be uphill of the incumbent.)
-            accepts = np.asarray(acc_d)                   # (A, steps)
+            # (accepts: (A, steps), from the consolidated pull above)
             y0 = pen_a[np.arange(A), flat[:, 0]]
             explored_chain[active] = self.explored_flags(
                 ys[active], accepts, y0)

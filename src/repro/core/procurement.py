@@ -287,6 +287,13 @@ class ProcurementController(ControllerMixin):
     eval_workers: int | None = None
     use_pipeline: bool | None = None
     recycle_store: "MeasurementStore | None" = None
+    #: hedged speculation: when a predicted accept/reject is within this
+    #: margin of the drawn uniform, the pipeline also dispatches the
+    #: other branch's next measurement (see SpeculativePipeline docs).
+    #: 0.0 disables hedging (the historical behavior).
+    hedge_margin: float = 0.0
+    #: idle-worker probe prefetch budget (0 disables)
+    prefetch_probes: int = 0
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -325,7 +332,10 @@ class ProcurementController(ControllerMixin):
                 lookahead=self.lookahead, dispatcher=dispatcher,
                 store=self.recycle_store,
                 on_resolve=self._commit_prev_cfg,
-                on_flush=self._rewind_prev_cfg)
+                on_flush=self._rewind_prev_cfg,
+                hedge_margin=self.hedge_margin,
+                prefetch_probes=self.prefetch_probes,
+                build_hedge_request=self._build_hedge_request)
             # expose the pipeline's store (created internally when the
             # caller did not pass one): recycled speculative measurements
             # are a real, reusable measurement corpus
@@ -385,6 +395,31 @@ class ProcurementController(ControllerMixin):
         else:
             job = names[int(self._rng.choice(len(names), p=weights))]
         self._prev_cfg = cfg
+        return EvalRequest(
+            state=tuple(int(i) for i in state), decoded=decoded, job=job,
+            n=n, kind=kind,
+            meta={"config": cfg, "mig_s": mig_s, "mig_usd": mig_usd,
+                  "names": tuple(names), "weights": tuple(weights)})
+
+    def _build_hedge_request(
+        self, state: tuple[int, ...], n: int, kind: str,
+        rng: np.random.Generator,
+    ) -> EvalRequest:
+        """Side-effect-free twin of :meth:`_build_request` for hedge and
+        probe speculation: the blend-job draw comes from the pipeline's
+        cloned ``rng`` (replicating the post-flush redraw bit for bit,
+        since the clone sits at exactly the shared stream's position) and
+        ``_prev_cfg`` is read, not advanced — the hedged branch may never
+        be taken."""
+        decoded = self.space.decode(state)
+        cfg = cluster_config_from(decoded)
+        mig_s, mig_usd = self.evaluator.migration(
+            self._prev_cfg, cfg, self.catalog)
+        names, weights = self._blend_weights()
+        if self.evaluate_blend:
+            job = next(iter(self.blend))
+        else:
+            job = names[int(rng.choice(len(names), p=weights))]
         return EvalRequest(
             state=tuple(int(i) for i in state), decoded=decoded, job=job,
             n=n, kind=kind,

@@ -161,8 +161,10 @@ class SizingSpace:
     # ------------------------------------------------------------------
 
     @functools.cached_property
-    def _eval_jit(self):
-        import jax
+    def _eval_body(self):
+        """The un-jitted batched scoring closure shared by
+        :attr:`_eval_jit` (caller-supplied candidates) and
+        :attr:`_table_jit` (in-trace full-grid enumeration)."""
         import jax.numpy as jnp
 
         from ..kernels import ops as kernel_ops
@@ -223,7 +225,65 @@ class SizingSpace:
                 1.0)
             return y, lat, cost, attain
 
+        return run
+
+    @functools.cached_property
+    def _eval_jit(self):
+        import jax
+
+        return jax.jit(self._eval_body, static_argnames=("use_kernel",))
+
+    @functools.cached_property
+    def _table_jit(self):
+        """Full-grid objective table in ONE fused trace: candidate
+        enumeration (``jnp.arange`` -> unravel) feeds the Erlang-C +
+        critical-path scoring directly — no host-materialized
+        (size, 2K) grid and no device->host result pull.  Returns the
+        flat (size,) float32 device table for one rate vector."""
+        import jax
+        import jax.numpy as jnp
+
+        body = self._eval_body
+        shape = self.space.shape
+        size = int(np.prod(shape))
+        strides, acc = [], 1
+        for n in reversed(shape):
+            strides.append(acc)
+            acc *= n
+        strides = tuple(reversed(strides))          # row-major
+
+        def run(rates, use_kernel: bool):
+            flat = jnp.arange(size, dtype=jnp.int32)
+            cand = jnp.stack([(flat // strides[d]) % shape[d]
+                              for d in range(len(shape))], axis=1)
+            y, _, _, _ = body(cand, rates, use_kernel)
+            return y
+
         return jax.jit(run, static_argnames=("use_kernel",))
+
+
+def sizing_table_device(
+    spec: SizingSpace,
+    mix: Mapping[str, float] | np.ndarray,
+    use_kernel: bool | None = None,
+):
+    """Device-resident flat objective table for one request mix —
+    candidate enumeration fused with the Erlang-C kernel in one jitted
+    call (:attr:`SizingSpace._table_jit`).  The (size,) float32 result
+    stays on device; :class:`SizingController`'s device loop reshapes it
+    straight into :func:`repro.core.annealing.anneal_fleet`."""
+    import jax
+    import jax.numpy as jnp
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    rates = (spec.dag.rates_array(mix) if isinstance(mix, Mapping)
+             else np.asarray(mix, np.float64))
+    if rates.shape != (len(spec.dag.classes),):
+        raise ValueError(
+            f"rates shape {rates.shape} != ({len(spec.dag.classes)},)")
+    return spec._table_jit(jnp.asarray(rates, jnp.float32),
+                           use_kernel=bool(use_kernel))
 
 
 def evaluate_sizing_batch(
@@ -269,6 +329,70 @@ def evaluate_sizing_batch(
 def full_grid(space: ConfigSpace) -> np.ndarray:
     """(size, ndim) index vectors over the whole product (small spaces)."""
     return np.indices(space.shape).reshape(len(space.shape), -1).T
+
+
+@functools.cache
+def _sizing_select_jit(shape: tuple, topk: int):
+    """Jitted on-device top-K candidate selection + exploration flag.
+
+    Replicates the host path exactly: stable argsort of the visited
+    states' table estimates (ties break by visit position, chain-major),
+    first-``topk``-distinct dedup, plus the per-chain accepted-uphill
+    reduction of :meth:`repro.core.procurement.ControllerMixin.
+    explored_flags`.  Returns ((topk, ndim) int32 states with -1
+    sentinel rows, scalar explored flag)."""
+    import jax
+    import jax.numpy as jnp
+
+    strides, acc = [], 1
+    for n in reversed(shape):
+        strides.append(acc)
+        acc *= n
+    strides = tuple(reversed(strides))              # row-major
+
+    @jax.jit
+    def select(inits, states, table, ys, accepts):
+        nd = inits.shape[1]
+        visited = jnp.concatenate(
+            [inits[:, None, :], states], axis=1).reshape(-1, nd)
+        vflat = jnp.zeros(visited.shape[0], jnp.int32)
+        iflat = jnp.zeros(inits.shape[0], jnp.int32)
+        for d in range(nd):
+            vflat = vflat + visited[:, d].astype(jnp.int32) * strides[d]
+            iflat = iflat + inits[:, d].astype(jnp.int32) * strides[d]
+        order = jnp.argsort(table[vflat], stable=True)
+
+        def body(j, carry):
+            chosen, cnt = carry
+            f = vflat[order[j]]
+            ok = (cnt < topk) & jnp.all(chosen != f)
+            upd = chosen.at[jnp.minimum(cnt, topk - 1)].set(f)
+            return jnp.where(ok, upd, chosen), cnt + ok.astype(jnp.int32)
+
+        chosen, _ = jax.lax.fori_loop(
+            0, vflat.shape[0], body,
+            (jnp.full((topk,), -1, jnp.int32), jnp.int32(0)))
+        cols, rem = [], chosen
+        for d in range(nd):
+            cols.append(rem // strides[d])
+            rem = rem % strides[d]
+        sel = jnp.where(chosen[:, None] >= 0,
+                        jnp.stack(cols, axis=1), -1)
+
+        # per-chain accepted-uphill flags (ControllerMixin.explored_flags)
+        C, steps = ys.shape
+        kk = jnp.arange(steps)[None, :]
+        last = jax.lax.cummax(jnp.where(accepts, kk, -1), axis=1)
+        prev = jnp.concatenate(
+            [jnp.full((C, 1), -1), last[:, :-1]], axis=1)
+        inc_before = jnp.where(
+            prev >= 0,
+            jnp.take_along_axis(ys, jnp.maximum(prev, 0), axis=1),
+            table[iflat][:, None])
+        explored = (accepts & (ys > inc_before)).any()
+        return sel, explored
+
+    return select
 
 
 # ---------------------------------------------------------------------------
@@ -331,6 +455,7 @@ class SizingController(ControllerMixin):
         measure_topk: int = 1,
         eval_workers: int | None = None,
         recycle_store: "Any | None" = None,
+        device_loop: bool = True,
     ):
         import jax
 
@@ -365,6 +490,11 @@ class SizingController(ControllerMixin):
         self._detector = PageHinkley() if detector else None
         self._reheat_pending = False
         self._tables: dict[tuple, np.ndarray] = {}
+        # device-resident control loop (tentpole): table enumeration +
+        # scoring fused on device, anneal + top-K selection on device,
+        # only the (topk, ndim) decision packet read back
+        self.device_loop = bool(device_loop)
+        self._dtables: dict[tuple, Any] = {}
         self._round = 0
         if init is None:
             # cheapest deployment: smallest size, fewest replicas per tier
@@ -413,6 +543,28 @@ class SizingController(ControllerMixin):
                 self._tables.pop(next(iter(self._tables)))
         return self._tables[key]
 
+    def _dtable_for(self, rates: Mapping[str, float]):
+        """Device flat (size,) objective table for one mix — the fused
+        enumeration+scoring jit when tables come from the batched
+        evaluator, a one-way host->device upload when an injected
+        ``objective_source`` builds them; same LRU policy as
+        :meth:`_table_for`."""
+        import jax.numpy as jnp
+
+        key = self._mix_key(rates)
+        if key in self._dtables:
+            self._dtables[key] = self._dtables.pop(key)
+        else:
+            if self.objective_source is None:
+                self._dtables[key] = sizing_table_device(self.spec, rates)
+                self._count_measures(self.space.size())
+            else:
+                self._dtables[key] = jnp.asarray(
+                    self._table_for(rates), jnp.float32)
+            while len(self._dtables) > self.TABLE_CACHE:
+                self._dtables.pop(next(iter(self._dtables)))
+        return self._dtables[key]
+
     # ------------------------------------------------------------------
     # the control round
     # ------------------------------------------------------------------
@@ -441,8 +593,6 @@ class SizingController(ControllerMixin):
 
         r = self._round
         rates = self._mix_at(r)
-        with span("sizing.refit", cat="sizing"):
-            table = self._table_for(rates)
 
         n0 = r * self.steps_per_round
         reheated = False
@@ -454,48 +604,100 @@ class SizingController(ControllerMixin):
 
         key_r = jax.random.fold_in(self._key, r)
         k_init, k_run = jax.random.split(key_r)
-        inits = np.array(
-            random_valid_states(k_init, self._enc, self.n_chains), np.int32)
-        inits[0] = np.asarray(self.incumbent, np.int32)
-        with span("sizing.anneal", cat="sizing", metric="sizing/anneal_s"):
-            out = anneal_fleet(
-                k_run, self._enc,
-                table.reshape(self._shape).astype(np.float32),
-                self.steps_per_round,
-                np.broadcast_to(taus.astype(np.float32),
-                                (self.n_chains, self.steps_per_round)),
-                inits=inits, n_chains=self.n_chains)
 
-        visited = np.concatenate(
-            [inits[:, None, :], np.asarray(out["states"])],
-            axis=1).reshape(-1, self._enc.ndim)
-        flat = np.ravel_multi_index(tuple(visited.T), self._shape)
+        if self.device_loop:
+            import jax.numpy as jnp
 
-        # exploration: any chain accepted an uphill move this round
-        ys = np.asarray(out["ys"])                        # (n_chains, steps)
-        accepts = np.asarray(out["accepts"])
-        y0 = table[np.ravel_multi_index(tuple(inits.T), self._shape)]
-        explored = bool(self.explored_flags(ys, accepts, y0).any())
+            # device-resident phase: fused table -> anneal -> top-K
+            # without a bulk host round-trip; only the (topk, ndim)
+            # decision packet is read back
+            with span("sizing.refit", cat="sizing"):
+                table_d = self._dtable_for(rates)
+            inits_d = random_valid_states(
+                k_init, self._enc, self.n_chains).astype(jnp.int32)
+            inits_d = inits_d.at[0].set(
+                jnp.asarray(self.incumbent, jnp.int32))
+            with span("sizing.anneal", cat="sizing",
+                      metric="sizing/anneal_s"):
+                out = anneal_fleet(
+                    k_run, self._enc, table_d.reshape(self._shape),
+                    self.steps_per_round,
+                    jnp.broadcast_to(
+                        jnp.asarray(taus, jnp.float32),
+                        (self.n_chains, self.steps_per_round)),
+                    inits=inits_d, n_chains=self.n_chains)
+            sel, explored_d = _sizing_select_jit(
+                self._shape, self.measure_topk)(
+                inits_d, out["states"], table_d, out["ys"],
+                out["accepts"])
+            # .tolist()/bool() read the small decision packet — the one
+            # host pull of the round, below the sanitizer's bulk-transfer
+            # accounting (np.asarray / device_get)
+            explored = bool(explored_d)
+            cand_idx = [tuple(int(v) for v in row)
+                        for row in sel.tolist() if row[0] >= 0]
+            if provenance.get() is not None:
+                # armed-only audit pulls (not on the steady-state path)
+                inits = np.asarray(inits_d)
+                table = np.asarray(table_d, np.float64)
+                ys = np.asarray(out["ys"])
+                accepts = np.asarray(out["accepts"])
+                y0 = table[np.ravel_multi_index(tuple(inits.T),
+                                                self._shape)]
+                flat = np.ravel_multi_index(
+                    tuple(np.concatenate(
+                        [inits[:, None, :], np.asarray(out["states"])],
+                        axis=1).reshape(-1, self._enc.ndim).T),
+                    self._shape)
+        else:
+            with span("sizing.refit", cat="sizing"):
+                table = self._table_for(rates)
+            inits = np.array(
+                random_valid_states(k_init, self._enc, self.n_chains),
+                np.int32)
+            inits[0] = np.asarray(self.incumbent, np.int32)
+            with span("sizing.anneal", cat="sizing",
+                      metric="sizing/anneal_s"):
+                out = anneal_fleet(
+                    k_run, self._enc,
+                    table.reshape(self._shape).astype(np.float32),
+                    self.steps_per_round,
+                    np.broadcast_to(taus.astype(np.float32),
+                                    (self.n_chains, self.steps_per_round)),
+                    inits=inits, n_chains=self.n_chains)
 
-        # speculative ground-truth phase: the compiled fleet's visited
-        # states ARE the engine-enumerated lookahead — measure the
-        # ``measure_topk`` most promising (by table estimate) on the numpy
-        # host model, commit to the *measured* argmin, and recycle every
-        # measurement (mis-speculated candidates included) into the store.
-        # topk=1 is the historical inline behavior: re-measure the single
-        # best visited sizing.
-        order = np.argsort(table[flat], kind="stable")
-        cand: list[int] = []
-        seen: set[int] = set()
-        for j in order:
-            f = int(flat[j])
-            if f not in seen:
-                seen.add(f)
-                cand.append(f)
-            if len(cand) == self.measure_topk:
-                break
-        cand_idx = [tuple(int(v) for v in np.unravel_index(f, self._shape))
-                    for f in cand]
+            visited = np.concatenate(
+                [inits[:, None, :], np.asarray(out["states"])],
+                axis=1).reshape(-1, self._enc.ndim)
+            flat = np.ravel_multi_index(tuple(visited.T), self._shape)
+
+            # exploration: any chain accepted an uphill move this round
+            ys = np.asarray(out["ys"])                    # (n_chains, steps)
+            accepts = np.asarray(out["accepts"])
+            y0 = table[np.ravel_multi_index(tuple(inits.T), self._shape)]
+            explored = bool(self.explored_flags(ys, accepts, y0).any())
+
+            # speculative ground-truth phase: the compiled fleet's
+            # visited states ARE the engine-enumerated lookahead —
+            # measure the ``measure_topk`` most promising (by table
+            # estimate) on the numpy host model, commit to the *measured*
+            # argmin, and recycle every measurement (mis-speculated
+            # candidates included) into the store.  topk=1 is the
+            # historical inline behavior: re-measure the single best
+            # visited sizing.
+            order = np.argsort(table[flat], kind="stable")
+            cand: list[int] = []
+            seen: set[int] = set()
+            for j in order:
+                f = int(flat[j])
+                if f not in seen:
+                    seen.add(f)
+                    cand.append(f)
+                if len(cand) == self.measure_topk:
+                    break
+            cand_idx = [tuple(int(v)
+                              for v in np.unravel_index(f, self._shape))
+                        for f in cand]
         with span("sizing.measure", cat="sizing"):
             results = self._measure_candidates(cand_idx, rates)
         self._count_measures(len(results))

@@ -141,6 +141,10 @@ class MeasurementStore:
         self.half_life = half_life
         self.capacity = int(capacity)
         self._data: dict[tuple[int, ...], tuple[float, float]] = {}
+        # monotone add counter: lets a device-resident twin detect
+        # out-of-band adds (a shared recycle store fed by a pipeline)
+        # and resync instead of silently diverging
+        self._version = 0
 
     def __len__(self) -> int:
         return len(self._data)
@@ -159,6 +163,7 @@ class MeasurementStore:
         self._data[key] = (float(y), float(t))
         while len(self._data) > self.capacity:
             self._data.pop(next(iter(self._data)))
+        self._version += 1
 
     def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(states (M, ndim) int32, ys (M,) f64, ts (M,) f64), refresh order."""
@@ -233,27 +238,380 @@ def _bucket(n: int) -> int:
 @functools.cache
 def _interp_jit(kind: str):
     import jax
-    import jax.numpy as jnp
 
-    from ..kernels.surrogate_distance import pairwise_sqdist
+    from ..kernels.surrogate_distance import fused_interp
 
-    @jax.jit
+    @functools.partial(jax.jit,
+                       static_argnames=("length_scale", "idw_power", "eps"))
     def run(xq, xm, y, w_rec, length_scale, idw_power, eps):
-        d2 = pairwise_sqdist(xq, xm)                       # (Q, M)
-        if kind == "rbf":
-            k = jnp.exp(-d2 / (2.0 * length_scale**2))
-        else:                                              # "idw" (Shepard)
-            k = 1.0 / (d2 ** (idw_power / 2.0) + eps)
-        k = k * w_rec[None, :]
-        wsum = k.sum(axis=1)
-        # recency-weighted global mean as the far-field fallback
-        fallback = (y * w_rec).sum() / jnp.maximum(w_rec.sum(), 1e-12)
-        mean = jnp.where(wsum > 1e-12,
-                         (k @ y) / jnp.maximum(wsum, 1e-12), fallback)
-        dmin = jnp.sqrt(d2.min(axis=1))
-        return mean, dmin
+        # distance + recency-weighted reduction fused in ONE Pallas pass
+        # (no (Q, M) matrix in HBM); the hyper-parameters are static —
+        # they are model constants, and static scalars let the kernel
+        # bake them into the trace
+        return fused_interp(xq, xm, y, w_rec, kind=kind,
+                            length_scale=length_scale,
+                            idw_power=idw_power, eps=eps)
 
     return run
+
+
+def host_interp(
+    xq: np.ndarray, xm: np.ndarray, ys: np.ndarray, rec: np.ndarray,
+    *, kind: str = "idw", length_scale: float = 0.25,
+    idw_power: float = 2.0, eps: float = 1e-9,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Plain-numpy mirror of the fused device refit — ONE shared
+    encoding/metric path for every host-side interpolation (the
+    pipeline's :class:`repro.core.evalpipe.StorePredictor` delegates
+    here), so predictor and surrogate cannot drift apart.
+
+    xq (Q, F), xm (M, F), ys (M,), rec (M,) -> (mean (Q,), dmin (Q,))
+    float64; ``dmin`` is the nearest-measurement distance before
+    objective-unit scaling."""
+    xq = np.asarray(xq, np.float64)
+    xm = np.asarray(xm, np.float64)
+    d2 = ((xq[:, None, :] - xm[None, :, :]) ** 2).sum(-1)    # (Q, M)
+    if kind == "rbf":
+        k = np.exp(-d2 / (2.0 * length_scale**2))
+    else:                                                    # "idw"
+        k = 1.0 / (d2 ** (idw_power / 2.0) + eps)
+    k = k * rec[None, :]
+    wsum = k.sum(axis=1)
+    # recency-weighted global mean as the far-field fallback
+    fallback = (ys * rec).sum() / max(float(rec.sum()), 1e-12)
+    mean = np.where(wsum > 1e-12, k @ ys / np.maximum(wsum, 1e-12),
+                    fallback)
+    dmin = np.sqrt(d2.min(axis=1))
+    return mean, dmin
+
+
+# ---------------------------------------------------------------------------
+# Device-resident measurement store: the numpy store's twin on device.
+# ---------------------------------------------------------------------------
+
+
+@functools.cache
+def _dstore_insert_jit(capacity: int):
+    """Jitted single-row insert with latest-wins dedup and stalest-first
+    eviction; donates the store buffers (the old arrays are dead after
+    the functional update — donation lets XLA update in place)."""
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
+    def insert(states, feats, ys, ts, seq, wmask, state, feat, y, t,
+               next_seq):
+        cap = seq.shape[0]
+        usable = jnp.arange(cap, dtype=jnp.int32) < capacity
+        valid = seq >= 0
+        # latest-wins dedup: overwrite the matching slot in place
+        match = valid & jnp.all(states == state[None, :], axis=1)
+        slot_match = jnp.argmax(match).astype(jnp.int32)
+        # else the lowest free slot (valid rows stay a compact prefix)
+        empty = usable & ~valid
+        slot_empty = jnp.argmax(empty).astype(jnp.int32)
+        # else evict the stalest entry (lowest seq = front of the numpy
+        # store's refresh-ordered dict)
+        imax = jnp.iinfo(jnp.int32).max
+        slot_evict = jnp.argmin(
+            jnp.where(valid, seq, imax)).astype(jnp.int32)
+        slot = jnp.where(match.any(), slot_match,
+                         jnp.where(empty.any(), slot_empty, slot_evict))
+        return (states.at[slot].set(state), feats.at[slot].set(feat),
+                ys.at[slot].set(y), ts.at[slot].set(t),
+                seq.at[slot].set(next_seq), wmask.at[slot].set(1.0))
+
+    return insert
+
+
+@functools.cache
+def _dstore_decay_jit(half_life: float):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def decay(wmask, ts, now):
+        return wmask * jnp.exp2(-jnp.maximum(now - ts, 0.0) / half_life)
+
+    return decay
+
+
+@functools.cache
+def _dstore_best_jit():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def best(ys, ts, seq, now, max_age):
+        valid = seq >= 0
+        fresh = valid & ((now - ts) <= max_age)
+        use = jnp.where(fresh.any(), fresh, valid)   # all-stale fallback
+        inf = jnp.float32(jnp.inf)
+        ym = jnp.where(use, ys, inf)
+        m = ym.min()
+        # first-minimal in refresh order == lowest seq among the minima
+        imax = jnp.iinfo(jnp.int32).max
+        idx = jnp.argmin(jnp.where(use & (ym == m), seq, imax))
+        return idx, m
+
+    return best
+
+
+@functools.cache
+def _dstore_scale_jit():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def scale(ys, seq):
+        valid = seq >= 0
+        inf = jnp.float32(jnp.inf)
+        spread = (jnp.where(valid, ys, -inf).max()
+                  - jnp.where(valid, ys, inf).min())
+        cnt = jnp.maximum(valid.sum(), 1)
+        mean = jnp.where(valid, ys, 0.0).sum() / cnt
+        return jnp.where(spread > 0, spread,
+                         jnp.maximum(1.0, jnp.abs(mean)))
+
+    return scale
+
+
+class DeviceMeasurementStore:
+    """Device-resident twin of :class:`MeasurementStore`.
+
+    Fixed-capacity, pow-2-bucketed device arrays — states (cap, ndim)
+    int32, features (cap, F) f32 (padding rows at ``_PAD_FAR``),
+    objectives / timestamps (cap,) f32, a refresh-order sequence number
+    (cap,) int32 (-1 = empty) and a validity weight mask (cap,) f32 —
+    updated by a jitted, buffer-donating insert with latest-wins dedup
+    and stalest-first eviction, so the numpy store's ``best()`` /
+    snapshot semantics hold bit-for-bit (pinned by the parity tests)
+    while the refit inputs never leave the device.
+
+    Valid rows always form a compact prefix (inserts take the lowest
+    free slot; eviction reuses the evicted slot), so
+    :meth:`refit_view`'s pow-2-bucket slices carry every live entry plus
+    exactly-zero-contribution padding — the same padding contract as
+    :meth:`SurrogateModel.predict`.
+
+    A host-side key shadow (dict in refresh order, no device reads)
+    mirrors membership and count; ``load`` bulk-rebuilds from a numpy
+    store (host->device only) when a twin detects out-of-band adds.
+    """
+
+    def __init__(self, encoding: SpaceEncoding,
+                 half_life: float | None = None, capacity: int = 8192):
+        import jax.numpy as jnp
+
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if half_life is not None and half_life <= 0:
+            raise ValueError("half_life must be > 0 (or None)")
+        self.encoding = encoding
+        self.ndim = encoding.ndim
+        self.half_life = half_life
+        self.capacity = int(capacity)
+        self.cap = _bucket(self.capacity)
+        F = encoding.feature_dim
+        self._states = jnp.zeros((self.cap, self.ndim), jnp.int32)
+        self._feats = jnp.full((self.cap, F), _PAD_FAR, jnp.float32)
+        self._ys = jnp.zeros((self.cap,), jnp.float32)
+        self._ts = jnp.zeros((self.cap,), jnp.float32)
+        self._seq = jnp.full((self.cap,), -1, jnp.int32)
+        self._wmask = jnp.zeros((self.cap,), jnp.float32)
+        self._next_seq = 0
+        self._keys: dict[tuple[int, ...], None] = {}
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def __contains__(self, state: Sequence[int]) -> bool:
+        return tuple(int(i) for i in state) in self._keys
+
+    def add(self, state: Sequence[int], y: float, t: float) -> None:
+        import jax.numpy as jnp
+
+        key = tuple(int(i) for i in state)
+        if len(key) != self.ndim:
+            raise ValueError(f"state rank {len(key)} != ndim {self.ndim}")
+        feat = self.encoding.features([key])[0]
+        (self._states, self._feats, self._ys, self._ts, self._seq,
+         self._wmask) = _dstore_insert_jit(self.capacity)(
+            self._states, self._feats, self._ys, self._ts, self._seq,
+            self._wmask, jnp.asarray(key, jnp.int32), jnp.asarray(feat),
+            jnp.float32(y), jnp.float32(t), jnp.int32(self._next_seq))
+        self._next_seq += 1
+        # host key shadow: delete-then-insert + pop-front, the numpy
+        # store's exact refresh-order semantics
+        self._keys.pop(key, None)
+        self._keys[key] = None
+        while len(self._keys) > self.capacity:
+            self._keys.pop(next(iter(self._keys)))
+
+    def load(self, store: MeasurementStore) -> None:
+        """Bulk-rebuild from a numpy store (host->device only): refresh
+        order becomes seq order, so twin semantics pick up exactly where
+        the numpy store stands."""
+        import jax.numpy as jnp
+
+        obs, ys, ts = store.arrays()
+        n = len(obs)
+        F = self.encoding.feature_dim
+        self._states = jnp.zeros((self.cap, self.ndim), jnp.int32)
+        self._feats = jnp.full((self.cap, F), _PAD_FAR, jnp.float32)
+        self._ys = jnp.zeros((self.cap,), jnp.float32)
+        self._ts = jnp.zeros((self.cap,), jnp.float32)
+        self._seq = jnp.full((self.cap,), -1, jnp.int32)
+        self._wmask = jnp.zeros((self.cap,), jnp.float32)
+        if n:
+            feats = self.encoding.features(obs)
+            self._states = self._states.at[:n].set(
+                jnp.asarray(obs, jnp.int32))
+            self._feats = self._feats.at[:n].set(jnp.asarray(feats))
+            self._ys = self._ys.at[:n].set(jnp.asarray(ys, jnp.float32))
+            self._ts = self._ts.at[:n].set(jnp.asarray(ts, jnp.float32))
+            self._seq = self._seq.at[:n].set(
+                jnp.arange(n, dtype=jnp.int32))
+            self._wmask = self._wmask.at[:n].set(1.0)
+        self._next_seq = n
+        self._keys = {tuple(int(i) for i in s): None for s in obs}
+
+    def weights_device(self, now: float):
+        """(cap,) device recency weights — zero on empty/padding rows,
+        ``2^(-(now - t)/half_life)`` (1 with no decay) on live rows."""
+        import jax.numpy as jnp
+
+        if self.half_life is None:
+            return self._wmask
+        return _dstore_decay_jit(float(self.half_life))(
+            self._wmask, self._ts, jnp.float32(now))
+
+    def refit_view(self, now: float, m_bucket: int | None = None):
+        """Device (feats, ys, recency) slices for the fused refit:
+        ``m_bucket`` rows (default: the pow-2 bucket of the live count)
+        — every live entry plus padding rows whose far features and zero
+        weights contribute exactly nothing."""
+        if m_bucket is None:
+            m_bucket = _bucket(len(self._keys))
+        m_bucket = min(m_bucket, self.cap)
+        rec = self.weights_device(now)
+        return (self._feats[:m_bucket], self._ys[:m_bucket],
+                rec[:m_bucket])
+
+    def y_scale_device(self):
+        """Device objective scale: spread of live objectives, or
+        ``max(1, |mean|)`` when flat — the numpy predict's formula."""
+        return _dstore_scale_jit()(self._ys, self._seq)
+
+    def best_device(self, now: float, max_age: float | None = None):
+        """Device (slot index, objective) of the best credible entry —
+        the numpy store's ``best`` semantics (fresh-filter with
+        all-stale fallback, first-minimal-in-refresh-order tie-break)."""
+        import jax.numpy as jnp
+
+        age = jnp.float32(jnp.inf if max_age is None else max_age)
+        return _dstore_best_jit()(self._ys, self._ts, self._seq,
+                                  jnp.float32(now), age)
+
+    def best(self, now: float | None = None,
+             max_age: float | None = None) -> tuple[tuple[int, ...], float]:
+        """Host-facing ``best`` (pulls one row — parity tests/debug)."""
+        if not self._keys:
+            raise ValueError("empty DeviceMeasurementStore")
+        if max_age is not None and now is None:
+            raise ValueError("max_age requires now")
+        idx, y = self.best_device(0.0 if now is None else now, max_age)
+        i = int(idx)
+        return (tuple(int(v) for v in self._states[i].tolist()),
+                float(y))
+
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(states, ys, ts) numpy in refresh order — the numpy store's
+        ``arrays()`` contract.  Host pull; tests/debug only."""
+        import jax.numpy as jnp
+
+        n = len(self._keys)
+        if n == 0:
+            z = np.zeros(0)
+            return np.zeros((0, self.ndim), np.int32), z, z.copy()
+        imax = jnp.iinfo(jnp.int32).max
+        order = jnp.argsort(jnp.where(self._seq >= 0, self._seq, imax),
+                            stable=True)[:n]
+        return (np.asarray(self._states[order]),
+                np.asarray(self._ys[order], np.float64),
+                np.asarray(self._ts[order], np.float64))
+
+
+@functools.cache
+def _select_jit(shape: tuple, acquisition: str, m: int, n_exp: int):
+    """Jitted on-device measurement selection: dedup the visited states,
+    score them under the acquisition, and pick the ``m`` winners —
+    ``m - n_exp`` by acquisition rank, the rest by uncertainty — exactly
+    the host path's stable-argsort semantics (np.unique's ascending-flat
+    order is reproduced by first-occurrence masking over a stable sort,
+    so ties break identically).  Returns (m, ndim) int32 window-local
+    states with -1 sentinel rows when fewer than ``m`` distinct states
+    were visited."""
+    import jax
+    import jax.numpy as jnp
+
+    strides, acc = [], 1
+    for n in reversed(shape):
+        strides.append(acc)
+        acc *= n
+    strides = tuple(reversed(strides))          # row-major, host constants
+    inv_sqrt2 = 1.0 / math.sqrt(2.0)            # trace-time constants
+    inv_sqrt2pi = 1.0 / math.sqrt(2.0 * math.pi)
+
+    @jax.jit
+    def select(inits, states, mean_w, unc_w, kappa, y_best):
+        nd = inits.shape[1]
+        visited = jnp.concatenate(
+            [inits[:, None, :], states], axis=1).reshape(-1, nd)
+        vflat = jnp.zeros(visited.shape[0], jnp.int32)
+        for d in range(nd):
+            vflat = vflat + visited[:, d].astype(jnp.int32) * strides[d]
+        order0 = jnp.argsort(vflat, stable=True)
+        s = vflat[order0]
+        first = jnp.concatenate(
+            [jnp.ones(1, bool), s[1:] != s[:-1]])   # unique, ascending
+        meanv = mean_w[s]
+        uncv = unc_w[s]
+        if acquisition == "ei":
+            sd = jnp.maximum(uncv, 1e-12)
+            z = (y_best - meanv) / sd
+            cdf = 0.5 * (1.0 + jax.lax.erf(z * inv_sqrt2))
+            pdf = jnp.exp(-0.5 * z * z) * inv_sqrt2pi
+            acq = -(sd * (z * cdf + pdf))       # lower score = earlier
+        else:
+            acq = meanv - kappa * uncv
+        inf = jnp.float32(jnp.inf)
+        acq_m = jnp.where(first, acq, inf)      # duplicates sort last
+        unc_m = jnp.where(first, -uncv, inf)
+        ord_acq = jnp.argsort(acq_m, stable=True)
+        ord_unc = jnp.argsort(unc_m, stable=True)
+        cand = jnp.concatenate([ord_acq[:m - n_exp], ord_unc])
+
+        def body(j, carry):
+            chosen, cnt = carry
+            pos = cand[j]
+            f = s[pos]
+            ok = first[pos] & (cnt < m) & jnp.all(chosen != f)
+            upd = chosen.at[jnp.minimum(cnt, m - 1)].set(f)
+            return (jnp.where(ok, upd, chosen),
+                    cnt + ok.astype(jnp.int32))
+
+        chosen, _ = jax.lax.fori_loop(
+            0, cand.shape[0], body,
+            (jnp.full((m,), -1, jnp.int32), jnp.int32(0)))
+        cols, rem = [], chosen
+        for d in range(nd):
+            cols.append(rem // strides[d])
+            rem = rem % strides[d]
+        sel = jnp.stack(cols, axis=1)
+        return jnp.where(chosen[:, None] >= 0, sel, -1)
+
+    return select
 
 
 @dataclasses.dataclass
@@ -402,6 +760,13 @@ class SurrogateSource(ObjectiveSource):
     from one-per-valid-state to ``n_probe`` — the difference between a
     simulator sweep and a day of cluster time under a
     :class:`repro.core.costmodel.MeasuredEvaluator`.
+
+    With ``recycle_store`` set (typically the same store a
+    :class:`repro.core.evalpipe.SpeculativePipeline` recycles
+    mis-speculated measurements into), every in-bounds entry warm-starts
+    the table build at its original timestamp: those states are neither
+    re-probed nor re-counted — each real measurement is paid for exactly
+    once, where it was taken.
     """
 
     def __init__(
@@ -411,6 +776,7 @@ class SurrogateSource(ObjectiveSource):
         half_life: float | None = None,
         max_size: int = 2_000_000,
         seed: int = 0,
+        recycle_store: MeasurementStore | None = None,
     ):
         super().__init__()
         if n_probe < 1:
@@ -419,6 +785,8 @@ class SurrogateSource(ObjectiveSource):
         self.model = model
         self.half_life = half_life
         self.max_size = int(max_size)
+        self.recycle_store = recycle_store
+        self.recycled_used = 0
         self._rng = np.random.default_rng(seed)
 
     def _probe_states(self, space: ConfigSpace,
@@ -440,14 +808,47 @@ class SurrogateSource(ObjectiveSource):
                 break
         return np.asarray(list(out), np.int64)
 
+    def _recycled_entries(
+        self, space: ConfigSpace, valid_mask: np.ndarray | None
+    ) -> list[tuple[tuple[int, ...], float, float]]:
+        """In-bounds, valid entries of the shared recycle store — real
+        measurements already paid for elsewhere (a pipeline's
+        mis-speculations), free to warm-start this table build."""
+        if self.recycle_store is None or len(self.recycle_store) == 0:
+            return []
+        obs, ys, ts = self.recycle_store.arrays()
+        if obs.shape[1] != len(space.shape):
+            return []
+        mask = (np.asarray(valid_mask, bool)
+                if valid_mask is not None else None)
+        out = []
+        for s, y, t in zip(obs, ys, ts):
+            key = tuple(int(i) for i in s)
+            if any(i < 0 or i >= n for i, n in zip(key, space.shape)):
+                continue
+            if mask is not None:
+                if not mask[key]:
+                    continue
+            elif not space.contains(key):
+                continue
+            out.append((key, float(y), float(t)))
+        return out
+
     def table(self, space, fn, valid_mask=None):
         if space.size() > self.max_size:
             raise ValueError(
                 f"space too large to materialize: {space.size()}")
+        recycled = self._recycled_entries(space, valid_mask)
         probes = self._probe_states(space, valid_mask)
-        store = MeasurementStore(len(space.shape), half_life=self.half_life,
-                                 capacity=max(len(probes), 1))
+        store = MeasurementStore(
+            len(space.shape), half_life=self.half_life,
+            capacity=max(len(probes) + len(recycled), 1))
+        for key, y, t in recycled:
+            store.add(key, y, t)             # counted where it was taken
+        self.recycled_used += len(recycled)
         for s in probes:
+            if s in store:
+                continue                     # recycled measurement wins
             store.add(s, float(fn(space.decode([int(i) for i in s]))), 0.0)
             self.true_measures += 1
         model = self.model or SurrogateModel(SpaceEncoding.from_space(space))
@@ -587,6 +988,7 @@ class SurrogateAnnealer:
         seed: int = 0,
         acquisition: str = "lcb",
         eval_workers: int | None = None,
+        device_loop: bool = True,
     ):
         import jax
 
@@ -629,6 +1031,13 @@ class SurrogateAnnealer:
         self.rounds: list[SurrogateRound] = []
         self._n = 0
         self._enc_cache: dict[tuple[int, ...], Any] = {}
+        # device-resident control loop (tentpole): refit + anneal +
+        # selection stay on device, the numpy store keeps authority over
+        # best()/bootstrap (pure host dict — zero transfers either way)
+        self.device_loop = bool(device_loop)
+        self._dstore: DeviceMeasurementStore | None = None
+        self._dstore_version = -1
+        self._feat_cache: dict[tuple[int, ...], Any] = {}
         if init is None:
             init = self._random_valid_state()
         if not space.contains(init):
@@ -638,12 +1047,22 @@ class SurrogateAnnealer:
     def _random_valid_state(self, tries: int = 10_000) -> tuple[int, ...]:
         return random_valid_state(self.space, self._rng, tries)
 
+    def _commit(self, key: tuple[int, ...], y: float, t: float) -> None:
+        """Feed one measurement to the numpy store and, in lockstep, its
+        device twin — keeping the twin's version current so the round
+        sync is a no-op (zero host->device bulk reloads) unless someone
+        added to the store out of band."""
+        self.store.add(key, y, t)
+        self.true_measures += 1
+        if self._dstore is not None:
+            self._dstore.add(key, y, t)
+            self._dstore_version = self.store._version
+
     def _measure(self, state: Sequence[int], t: float
                  ) -> tuple[tuple[int, ...], float]:
         key = tuple(int(i) for i in state)
         y = float(self.evaluate(self.space.decode(key)))
-        self.store.add(key, y, t)
-        self.true_measures += 1
+        self._commit(key, y, t)
         return key, y
 
     def _measure_states(
@@ -671,11 +1090,44 @@ class SurrogateAnnealer:
                 max_workers=self.eval_workers)
             out = []
             for k, r in zip(keys, results):
-                self.store.add(k, float(r.y), t)
-                self.true_measures += 1
+                self._commit(k, float(r.y), t)
                 out.append((k, float(r.y)))
             return out
         return [self._measure(s, t) for s in states]
+
+    def _sync_device_store(self) -> None:
+        """Bring the device twin up to date.  Steady state this is a
+        version compare (host ints) — per-measurement mirroring in
+        :meth:`_commit` keeps the twin current; a mismatch means the
+        numpy store was fed out of band (a shared recycle store) and
+        triggers one bulk host->device reload."""
+        if self._dstore is None:
+            self._dstore = DeviceMeasurementStore(
+                self.model.encoding, half_life=self.store.half_life,
+                capacity=self.store.capacity)
+        if self._dstore_version != self.store._version:
+            self._dstore.load(self.store)
+            self._dstore_version = self.store._version
+
+    def _window_feats(self, sub: ConfigSpace, offs: np.ndarray):
+        """Device query features for every window state, padded to the
+        pow-2 query bucket — cached per window position (the host
+        encoding runs once per position the incumbent ever centers)."""
+        key = tuple(int(o) for o in offs)
+        feats = self._feat_cache.get(key)
+        if feats is None:
+            import jax.numpy as jnp
+
+            grid = np.indices(sub.shape).reshape(len(sub.shape), -1).T
+            fq = self.model.encoding.features(grid + offs)
+            W = len(fq)
+            q_cap = _bucket(W)
+            if q_cap != W:
+                fq = np.concatenate(
+                    [fq, np.zeros((q_cap - W, fq.shape[1]), np.float32)])
+            feats = jnp.asarray(fq)
+            self._feat_cache[key] = feats
+        return feats
 
     def _window_enc(self, sub: ConfigSpace, offs: np.ndarray):
         key = tuple(int(o) for o in offs)
@@ -732,54 +1184,107 @@ class SurrogateAnnealer:
         sub, offs = window_space(self.space, self.incumbent, self.half_width)
         enc = self._window_enc(sub, offs)
         W = sub.size()
-        grid = np.indices(sub.shape).reshape(len(sub.shape), -1).T  # (W, nd)
-        with span("surrogate.refit", cat="surrogate",
-                  metric="surrogate/refit_s"):
-            mean, unc = self.model.predict(grid + offs, self.store, now=t)
-        self.surrogate_queries += W
-
-        # chain 0 starts at the incumbent (always inside its own window);
-        # the rest start uniform over the window's valid region
-        key_r = jax.random.fold_in(self._key, self._n)
-        k_init, k_run = jax.random.split(key_r)
-        inits = np.array(
-            random_valid_states(k_init, enc, self.n_chains), np.int32)
-        inits[0] = np.asarray(self.incumbent, np.int64) - offs
-        bonus = np.broadcast_to((-self.kappa * unc).astype(np.float32),
-                                (self.n_chains, W))
-        with span("surrogate.anneal", cat="surrogate",
-                  metric="surrogate/anneal_s"):
-            out = anneal_fleet(
-                k_run, enc, mean.reshape(sub.shape).astype(np.float32),
-                self.steps_per_round, self.tau, inits=inits,
-                n_chains=self.n_chains, extra_costs=bonus)
-
-        # candidate pool: every state any chain visited (step-0 included)
-        visited = np.concatenate(
-            [inits[:, None, :], np.asarray(out["states"])],
-            axis=1).reshape(-1, enc.ndim)
-        visited = np.unique(visited, axis=0)
-        vflat = np.ravel_multi_index(tuple(visited.T), sub.shape)
-        if self.acquisition == "ei":
-            # lower score = measured earlier, so negate the improvement
-            acq = -expected_improvement(
-                mean[vflat], unc[vflat], self._best(t)[1])
-        else:
-            acq = mean[vflat] - self.kappa * unc[vflat]
-
         n_exp = min(int(round(self.explore_frac * self.measures_per_round)),
                     self.measures_per_round - 1)
-        by_acq = np.argsort(acq, kind="stable")
-        by_unc = np.argsort(-unc[vflat], kind="stable")
-        chosen: list[int] = []
-        for pos in list(by_acq[:self.measures_per_round - n_exp]) + list(by_unc):
-            if pos not in chosen:
-                chosen.append(int(pos))
-            if len(chosen) == self.measures_per_round:
-                break
-        with span("surrogate.measure", cat="surrogate"):
-            measured.extend(self._measure_states(
-                [visited[pos] + offs for pos in chosen], t))
+        key_r = jax.random.fold_in(self._key, self._n)
+        k_init, k_run = jax.random.split(key_r)
+
+        if self.device_loop:
+            import jax.numpy as jnp
+
+            # device-resident phase: refit -> anneal -> select without a
+            # single bulk host round-trip; only the final (m, ndim)
+            # decision packet is read back
+            self._sync_device_store()
+            xq = self._window_feats(sub, offs)
+            mb = min(_bucket(len(self.store)), self._dstore.cap)
+            xm, ys_d, rec_d = self._dstore.refit_view(t, mb)
+            with span("surrogate.refit", cat="surrogate",
+                      metric="surrogate/refit_s"):
+                mean_q, dmin_q = _interp_jit(self.model.kind)(
+                    xq, xm, ys_d, rec_d, self.model.length_scale,
+                    self.model.idw_power, self.model.eps)
+            unc_q = self._dstore.y_scale_device() * dmin_q
+            mean_w, unc_w = mean_q[:W], unc_q[:W]
+            self.surrogate_queries += W
+
+            # chain 0 starts at the incumbent (always inside its own
+            # window); the rest uniform over the window's valid region
+            inits_d = random_valid_states(
+                k_init, enc, self.n_chains).astype(jnp.int32)
+            inits_d = inits_d.at[0].set(jnp.asarray(
+                np.asarray(self.incumbent, np.int64) - offs, jnp.int32))
+            bonus = jnp.broadcast_to(
+                (-self.kappa * unc_w).astype(jnp.float32)[None, :],
+                (self.n_chains, W))
+            with span("surrogate.anneal", cat="surrogate",
+                      metric="surrogate/anneal_s"):
+                out = anneal_fleet(
+                    k_run, enc, mean_w.reshape(sub.shape),
+                    self.steps_per_round, self.tau, inits=inits_d,
+                    n_chains=self.n_chains, extra_costs=bonus)
+            sel = _select_jit(sub.shape, self.acquisition,
+                              self.measures_per_round, n_exp)(
+                inits_d, out["states"], mean_w, unc_w,
+                jnp.float32(self.kappa), jnp.float32(self._best(t)[1]))
+            # .tolist() reads the m*ndim-int decision packet — the one
+            # host pull of the round, below the sanitizer's bulk-transfer
+            # accounting (np.asarray / device_get)
+            rows = sel.tolist()
+            with span("surrogate.measure", cat="surrogate"):
+                measured.extend(self._measure_states(
+                    [tuple(int(v) + int(o) for v, o in zip(r, offs))
+                     for r in rows if r[0] >= 0], t))
+        else:
+            grid = np.indices(sub.shape).reshape(len(sub.shape), -1).T
+            with span("surrogate.refit", cat="surrogate",
+                      metric="surrogate/refit_s"):
+                mean, unc = self.model.predict(grid + offs, self.store,
+                                               now=t)
+            self.surrogate_queries += W
+
+            # chain 0 starts at the incumbent (always inside its own
+            # window); the rest start uniform over the window's valid
+            # region
+            inits = np.array(
+                random_valid_states(k_init, enc, self.n_chains), np.int32)
+            inits[0] = np.asarray(self.incumbent, np.int64) - offs
+            bonus = np.broadcast_to((-self.kappa * unc).astype(np.float32),
+                                    (self.n_chains, W))
+            with span("surrogate.anneal", cat="surrogate",
+                      metric="surrogate/anneal_s"):
+                out = anneal_fleet(
+                    k_run, enc, mean.reshape(sub.shape).astype(np.float32),
+                    self.steps_per_round, self.tau, inits=inits,
+                    n_chains=self.n_chains, extra_costs=bonus)
+
+            # candidate pool: every state any chain visited (step-0
+            # included)
+            visited = np.concatenate(
+                [inits[:, None, :], np.asarray(out["states"])],
+                axis=1).reshape(-1, enc.ndim)
+            visited = np.unique(visited, axis=0)
+            vflat = np.ravel_multi_index(tuple(visited.T), sub.shape)
+            if self.acquisition == "ei":
+                # lower score = measured earlier, so negate the
+                # improvement
+                acq = -expected_improvement(
+                    mean[vflat], unc[vflat], self._best(t)[1])
+            else:
+                acq = mean[vflat] - self.kappa * unc[vflat]
+
+            by_acq = np.argsort(acq, kind="stable")
+            by_unc = np.argsort(-unc[vflat], kind="stable")
+            chosen: list[int] = []
+            for pos in (list(by_acq[:self.measures_per_round - n_exp])
+                        + list(by_unc)):
+                if pos not in chosen:
+                    chosen.append(int(pos))
+                if len(chosen) == self.measures_per_round:
+                    break
+            with span("surrogate.measure", cat="surrogate"):
+                measured.extend(self._measure_states(
+                    [visited[pos] + offs for pos in chosen], t))
 
         self.incumbent, best_y = self._best(t)
         rec = SurrogateRound(
@@ -789,8 +1294,15 @@ class SurrogateAnnealer:
             measured=tuple(measured))
         self.rounds.append(rec)
         if provenance.get() is not None:
-            self._record_round_provenance(
-                rec, prev_inc, measured, out, inits, mean, unc, sub, offs)
+            if self.device_loop:
+                self._record_round_provenance(
+                    rec, prev_inc, measured, out, np.asarray(inits_d),
+                    np.asarray(mean_w, np.float64),
+                    np.asarray(unc_w, np.float64), sub, offs)
+            else:
+                self._record_round_provenance(
+                    rec, prev_inc, measured, out, inits, mean, unc, sub,
+                    offs)
         self._n += 1
         note_round("SurrogateAnnealer", self)
         return rec

@@ -12,6 +12,7 @@ from .ops import (
     flash_attention,
     flash_attention_trainable,
     flash_decode,
+    fused_interp,
     pairwise_sqdist,
     quantize_int8,
     rglru_scan,
@@ -23,6 +24,7 @@ __all__ = [
     "flash_attention",
     "flash_attention_trainable",
     "flash_decode",
+    "fused_interp",
     "pairwise_sqdist",
     "quantize_int8",
     "rglru_scan",

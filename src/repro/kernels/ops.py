@@ -112,6 +112,20 @@ def pairwise_sqdist(xq, xm, block_q: int = 256, block_m: int = 256):
     return _sd.pairwise_sqdist(xq, xm, block_q=block_q, block_m=block_m)
 
 
+@functools.partial(jax.jit, static_argnames=("kind", "length_scale",
+                                             "idw_power", "eps", "block_q"))
+def fused_interp(xq, xm, y, w_rec, kind: str = "idw",
+                 length_scale: float = 0.25, idw_power: float = 2.0,
+                 eps: float = 1e-9, block_q: int = 128):
+    """Fused surrogate refit: xq (Q, F), xm (M, F), y (M,), w_rec (M,)
+    -> (mean (Q,), dmin (Q,)) fp32 — IDW/RBF estimate plus
+    nearest-measurement distance in ONE kernel pass (no (Q, M) distance
+    matrix in HBM)."""
+    return _sd.fused_interp(xq, xm, y, w_rec, kind=kind,
+                            length_scale=length_scale, idw_power=idw_power,
+                            eps=eps, block_q=block_q)
+
+
 @jax.jit
 def quantize_int8(x):
     """(..., N) -> (int8 payload, fp32 row scales); rows = leading dims."""

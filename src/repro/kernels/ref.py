@@ -94,6 +94,35 @@ def pairwise_sqdist_ref(xq, xm):
     return jnp.maximum(qq + mm.T - 2.0 * (xq @ xm.T), 0.0)
 
 
+def fused_interp_ref(xq, xm, y, w_rec, *, kind: str = "idw",
+                     length_scale: float = 0.25, idw_power: float = 2.0,
+                     eps: float = 1e-9):
+    """Fused surrogate refit: distance + recency-weighted IDW/RBF
+    reduction in one pass; mirrors
+    :func:`repro.kernels.surrogate_distance.fused_interp`.
+
+    xq (Q, F), xm (M, F), y (M,), w_rec (M,) -> (mean (Q,), dmin (Q,)),
+    fp32.  ``mean`` is the kernel-weighted estimate with the
+    recency-weighted global mean as the far-field fallback; ``dmin`` the
+    distance to the nearest measurement (the uncertainty channel, before
+    objective-unit scaling).
+    """
+    d2 = pairwise_sqdist_ref(xq, xm)                        # (Q, M)
+    if kind == "rbf":
+        k = jnp.exp(-d2 / (2.0 * length_scale**2))
+    else:                                                   # "idw" (Shepard)
+        k = 1.0 / (d2 ** (idw_power / 2.0) + eps)
+    y32 = y.astype(jnp.float32)
+    w32 = w_rec.astype(jnp.float32)
+    k = k * w32[None, :]
+    wsum = k.sum(axis=1)
+    fallback = (y32 * w32).sum() / jnp.maximum(w32.sum(), 1e-12)
+    mean = jnp.where(wsum > 1e-12,
+                     (k @ y32) / jnp.maximum(wsum, 1e-12), fallback)
+    dmin = jnp.sqrt(d2.min(axis=1))
+    return mean, dmin
+
+
 def sizing_latency_ref(lam, mu, repl, visit_w, adj, *, c_max: int,
                        sat_s: float = 1e4):
     """M/M/c sojourns + DAG critical path; mirrors

@@ -287,6 +287,27 @@ def test_sanitizer_counts_device_to_host_transfers():
         sanitize.uninstall()
 
 
+def test_sanitizer_per_round_transfer_budget():
+    """The ISSUE-10 device-resident-loop gate: per-controller host
+    transfer ceilings, checked per steady-state round (warmup rounds and
+    unbudgeted controllers exempt)."""
+    san = Sanitizer()
+    san.record_transfer(5)              # round 0: warmup, over any budget
+    san.note_round("Ctl", None)
+    san.record_transfer(1)              # round 1: exactly one transfer
+    san.note_round("Ctl", None)
+    san.note_round("Ctl", None)         # round 2: zero
+    san.record_transfer(3)              # unbudgeted controller: ignored
+    san.note_round("Other", None)
+    san.assert_steady_state(warmup=1)                             # no budget
+    san.assert_steady_state(warmup=1, transfer_budget={"Ctl": 1})
+    with pytest.raises(RetraceError) as e:
+        san.assert_steady_state(warmup=1, transfer_budget={"Ctl": 0})
+    assert "host transfers" in str(e.value)
+    assert "round 1" in str(e.value) and "round 0" not in str(e.value)
+    assert "Other" not in str(e.value)
+
+
 def test_fleet_controller_steady_state_zero_retrace():
     """End-to-end: three fleet rounds under the sanitizer retrace nothing
     after round 0 (the hard acceptance invariant of the analysis gate)."""

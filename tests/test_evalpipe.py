@@ -311,6 +311,100 @@ def test_speculative_measurements_counted_exactly_once():
     assert disp.dispatched == disp.landed + stats["cancelled"]
 
 
+def test_procurement_hedged_k8_decision_parity():
+    """Hedged both-branch speculation dispatches extra measurements for
+    marginal accept/reject calls but must never touch the realized walk:
+    the decision trace stays serial-identical (ISSUE 10)."""
+    a = _controller()
+    c = _controller(use_pipeline=True, lookahead=8, hedge_margin=0.3)
+    da, dc = a.run(60), c.run(60)
+    c.close()
+    wa = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in da]
+    wc = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in dc]
+    assert wa == wc
+    stats = c.stats()["pipeline"]
+    assert stats["hedged"] > 0                  # hedges actually fired
+    assert 0 <= stats["hedged_covered"] <= stats["mispredictions"]
+    # adopted hedges raise the hit rate above the uncovered baseline
+    uncovered = 1.0 - stats["mispredictions"] / stats["resolved"]
+    assert stats["hit_rate"] >= uncovered
+
+
+def test_procurement_hedged_k1_parity_including_measurements():
+    """At lookahead 1 hedging degenerates gracefully: full
+    decision-sequence parity with the inline loop, measurements
+    included."""
+    a = _controller(use_pipeline=False)
+    b = _controller(use_pipeline=True, lookahead=1, hedge_margin=0.5)
+    da, db = a.run(40), b.run(40)
+    b.close()
+    assert _trace(da) == _trace(db)
+
+
+def test_hedged_measurements_counted_exactly_once():
+    """Hedge measurements are real evaluator runs on a branch that may
+    never be taken: adopted ones land through the resolved transition,
+    the rest recycle into the store — each exactly once, none dropped."""
+    ev = CountingEvaluator(EC2_CATALOG_ADJUSTED)
+    c = _controller(evaluator=ev, lookahead=8, hedge_margin=0.3)
+    c.run(60)
+    c.close()
+    stats = c.stats()["pipeline"]
+    assert stats["hedged"] > 0
+    assert stats["recycled_landed"] + stats["cancelled"] == stats["recycled"]
+    counts = c.evaluation_counts()
+    assert counts["true_measures"] == ev.calls
+    assert c.annealer.measure_count == ev.calls
+    assert len(c.annealer.evaluations) == ev.calls
+    disp = c._pipeline.dispatcher
+    assert disp.dispatched == disp.landed + stats["cancelled"]
+
+
+def test_prefetch_probes_parity_and_exactly_once():
+    """Idle-worker probe prefetch draws from a dedicated RNG: the walk
+    stays serial-identical while probe landings warm the recycle store
+    exactly once each."""
+    a = _controller()
+    ev = CountingEvaluator(EC2_CATALOG_ADJUSTED)
+    c = _controller(evaluator=ev, lookahead=8, prefetch_probes=4)
+    da, dc = a.run(50), c.run(50)
+    c.close()
+    wa = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in da]
+    wc = [(d.n, d.job, d.config, round(d.y, 12), d.accepted, d.explored)
+          for d in dc]
+    assert wa == wc
+    stats = c.stats()["pipeline"]
+    assert stats["prefetched"] > 0
+    counts = c.evaluation_counts()
+    assert counts["true_measures"] == ev.calls
+    assert len(c.annealer.evaluations) == ev.calls
+    assert len(c.recycle_store) <= ev.calls     # latest-wins, never double
+    disp = c._pipeline.dispatcher
+    assert disp.dispatched == disp.landed + stats["cancelled"]
+
+
+def test_hedge_and_prefetch_compose_with_reheat_flush():
+    """The stress composition: hedging + prefetch under forced reheats
+    (flush storms) still matches the serial walk and retires every
+    in-flight hedge/probe on close."""
+    a = _controller()
+    b = _controller(use_pipeline=True, lookahead=6, hedge_margin=0.3,
+                    prefetch_probes=2)
+    da, db = [], []
+    for _ in range(3):
+        da += a.run(12)
+        db += b.run(12)
+        a.force_reheat()
+        b.force_reheat()
+    b.close()
+    assert [(d.n, d.config, d.accepted, d.y) for d in da] == \
+           [(d.n, d.config, d.accepted, d.y) for d in db]
+    assert not b._pipeline._hedges and not b._pipeline._probes
+
+
 def test_pipeline_close_leaves_chain_serially_continuable():
     """After close(), the chain RNG sits at the last resolved transition:
     continuing inline must match an uninterrupted serial run."""

@@ -307,6 +307,47 @@ def test_wkv6_kernel_direct_vs_ref():
                                atol=5e-4, rtol=1e-3)
 
 
+@pytest.mark.parametrize("kind", ["idw", "rbf"])
+@pytest.mark.parametrize("Q,M,F", [
+    (5, 3, 7),          # tiny, everything padded
+    (300, 37, 9),       # row counts straddling the query block
+    (130, 256, 130),    # feature dim over one lane width, M at a lane edge
+])
+def test_fused_interp_kernel_direct_vs_ref(kind, Q, M, F):
+    from repro.kernels.surrogate_distance import fused_interp
+    rng = np.random.default_rng(Q + M + F)
+    xq = jnp.asarray(rng.normal(size=(Q, F)), jnp.float32)
+    xm = jnp.asarray(rng.normal(size=(M, F)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(M,)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(M,)), jnp.float32)
+    mean, dmin = fused_interp(xq, xm, y, w, kind=kind)
+    want_mean, want_dmin = ref.fused_interp_ref(xq, xm, y, w, kind=kind)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(want_mean),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dmin), np.asarray(want_dmin),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_fused_interp_zero_weight_rows_contribute_nothing():
+    """The pow-2-bucket padding contract: rows with zero recency weight
+    (the device store's empty slots) must not shift the estimate, and
+    all-zero weights fall back to the recency-weighted global mean."""
+    from repro.kernels.surrogate_distance import fused_interp
+    rng = np.random.default_rng(7)
+    xq = jnp.asarray(rng.normal(size=(17, 5)), jnp.float32)
+    xm = jnp.asarray(rng.normal(size=(12, 5)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(12,)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 1.0, size=(12,)), jnp.float32)
+    base_mean, _ = fused_interp(xq, xm, y, w)
+    # append dead rows: far features, arbitrary y, zero weight
+    xm_pad = jnp.concatenate([xm, jnp.full((20, 5), 1e3, jnp.float32)])
+    y_pad = jnp.concatenate([y, jnp.full((20,), 99.0, jnp.float32)])
+    w_pad = jnp.concatenate([w, jnp.zeros((20,), jnp.float32)])
+    pad_mean, _ = fused_interp(xq, xm_pad, y_pad, w_pad)
+    np.testing.assert_allclose(np.asarray(pad_mean), np.asarray(base_mean),
+                               atol=2e-5, rtol=1e-4)
+
+
 def test_kernel_ref_pairing_is_complete():
     """Every Pallas kernel in repro.kernels has a jnp oracle in ref.py, a
     tolerance test in this directory and an export in the package
